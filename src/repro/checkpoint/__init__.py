@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+                                         restore_pytree, save_pytree)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_pytree",
+           "save_pytree"]

@@ -1,0 +1,115 @@
+"""Config registry: assigned architectures (+ the paper's stencil apps).
+
+``get_config(name)``   — exact published config (dry-run / production).
+``smoke_config(name)`` — same family, reduced dims (CPU smoke tests).
+``SHAPES``             — the assigned input-shape set (per-arch cells).
+``input_specs(...)``   — ShapeDtypeStruct stand-ins for every model input.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+ARCH_IDS = [
+    "granite-3-8b",
+    "phi4-mini-3.8b",
+    "glm4-9b",
+    "qwen3-1.7b",
+    "seamless-m4t-large-v2",
+    "mamba2-1.3b",
+    "qwen3-moe-235b-a22b",
+    "qwen3-moe-30b-a3b",
+    "zamba2-7b",
+    "internvl2-76b",
+]
+
+STENCIL_IDS = ["diffusion2d", "diffusion3d", "hotspot2d", "hotspot3d"]
+
+# assigned input-shape set (LM-family): seq_len x global_batch
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _module(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if runnable; otherwise the skip reason (recorded in DESIGN.md)."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: O(L^2) attention at 524k decode "
+                "is infeasible by design; no sub-quadratic variant specified "
+                "(DESIGN.md §Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, mesh=None, rules=None,
+                microbatches: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+
+    Weak-type-correct, shardable, no device allocation (the dry-run path).
+    With ``mesh``+``rules``: structs carry NamedShardings.
+    """
+    from jax.sharding import NamedSharding
+    info = SHAPES[shape]
+    S, B = info["seq"], info["batch"]
+
+    def spec(shape_, dtype, *axes):
+        sh = None
+        if mesh is not None and rules is not None:
+            sh = NamedSharding(mesh, rules.spec(axes))
+        return jax.ShapeDtypeStruct(shape_, dtype, sharding=sh)
+
+    if info["kind"] == "train":
+        out = {"tokens": spec((B, S), jnp.int32, "batch", None),
+               "labels": spec((B, S), jnp.int32, "batch", None),
+               "loss_mask": spec((B, S), jnp.float32, "batch", None)}
+        if cfg.input_mode == "embeds_prefix":
+            out["tokens"] = spec((B, S - cfg.prefix_len), jnp.int32,
+                                 "batch", None)
+            out["labels"] = spec((B, S - cfg.prefix_len), jnp.int32,
+                                 "batch", None)
+            out["loss_mask"] = spec((B, S - cfg.prefix_len), jnp.float32,
+                                    "batch", None)
+            out["embeds"] = spec((B, cfg.prefix_len, cfg.d_model),
+                                 jnp.float32, "batch", None, None)
+        elif cfg.input_mode == "frames":
+            out["frames"] = spec((B, S, cfg.d_model), jnp.float32,
+                                 "batch", None, None)
+        return out
+    if info["kind"] == "prefill":
+        out = {"tokens": spec((B, S), jnp.int32, "batch", None)}
+        if cfg.input_mode == "embeds_prefix":
+            out["tokens"] = spec((B, S - cfg.prefix_len), jnp.int32,
+                                 "batch", None)
+            out["embeds"] = spec((B, cfg.prefix_len, cfg.d_model),
+                                 jnp.float32, "batch", None, None)
+        elif cfg.input_mode == "frames":
+            out["frames"] = spec((B, S, cfg.d_model), jnp.float32,
+                                 "batch", None, None)
+        return out
+    # decode: one new token against a cache of S
+    out = {"tokens": spec((B, 1), jnp.int32, "batch", None)}
+    if cfg.input_mode == "frames":
+        # cross-attention memory: fixed 4096-frame utterance
+        out["memory"] = spec((B, 4096, cfg.d_model), jnp.float32,
+                             "batch", None, None)
+    return out

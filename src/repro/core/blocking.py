@@ -1,0 +1,160 @@
+"""Block/halo geometry — paper Eqs. (1)-(7), adapted to TPU lane alignment.
+
+The paper blocks the *fastest* dimension(s) and streams the remaining one:
+  * 2D stencils: 1-D spatial blocking in x, streaming in y        (paper §3.1)
+  * 3D stencils: 2-D spatial blocking in (x, y), streaming in z   (paper §3.1)
+
+Array layout convention in this repo: the streaming dimension is axis 0
+(y for 2D grids ``(ny, nx)``, z for 3D grids ``(nz, ny, nx)``); blocked
+dimensions are the trailing axes.
+
+Temporal blocking widens each halo to ``size_halo = rad * par_time``
+(paper Eq. 2).  Overlapped blocks (Fig. 4) of extent ``bsize`` advance by the
+compute-block stride ``csize = bsize - 2*size_halo`` (Eq. 4); the number of
+blocks per dimension is ``ceil(dim / csize)`` (Eq. 5), and out-of-bound
+compute in the last block is discarded at write time.
+
+TPU alignment note (paper §3.3.3 analogue): the paper pads device buffers so
+external accesses stay 512-bit aligned.  On TPU the analogous constraint is
+lane alignment — we require ``csize % lane == 0`` (lane = 128 for f32) for the
+innermost blocked dimension, which makes every block's start offset and every
+compute-block write lane-aligned.  512 bits = 16 f32 on the FPGA; 128 lanes =
+512 bytes on TPU — the same trick, one power of two up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+LANE = 128      # f32 lanes per VREG row on TPU
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGeometry:
+    """Static description of one combined spatial/temporal blocking plan."""
+    ndim: int                      # grid rank (2 or 3)
+    dims: Tuple[int, ...]          # grid extents, streaming axis first
+    rad: int
+    par_time: int                  # fused time-steps per HBM round-trip
+    bsize: Tuple[int, ...]         # block extent per *blocked* dim (trailing axes)
+
+    def __post_init__(self):
+        assert self.ndim == len(self.dims)
+        assert len(self.bsize) == self.ndim - 1, "streaming axis is not blocked"
+        if any(b <= 2 * self.size_halo for b in self.bsize):
+            raise ValueError(
+                f"bsize {self.bsize} too small for halo {self.size_halo} "
+                f"(need bsize > 2*rad*par_time = {2 * self.size_halo})")
+
+    # --- paper Eq. (2): halo width per side, in the last PE -----------------
+    @property
+    def size_halo(self) -> int:
+        return self.rad * self.par_time
+
+    # --- paper Eq. (4): compute-block extent --------------------------------
+    @property
+    def csize(self) -> Tuple[int, ...]:
+        return tuple(b - 2 * self.size_halo for b in self.bsize)
+
+    # --- paper Eq. (5): blocks per blocked dimension -------------------------
+    @property
+    def bnum(self) -> Tuple[int, ...]:
+        return tuple(math.ceil(d / c)
+                     for d, c in zip(self.blocked_dims, self.csize))
+
+    @property
+    def stream_dim(self) -> int:
+        return self.dims[0]
+
+    @property
+    def blocked_dims(self) -> Tuple[int, ...]:
+        return self.dims[1:]
+
+    # --- padded extents: bnum*csize + 2*halo (what the engine/kernels see) --
+    @property
+    def padded_dims(self) -> Tuple[int, ...]:
+        return tuple(n * c + 2 * self.size_halo
+                     for n, c in zip(self.bnum, self.csize))
+
+    @property
+    def num_blocks(self) -> int:
+        return math.prod(self.bnum)
+
+    # --- paper Eq. (7): traversed cells per blocked dimension ---------------
+    @property
+    def trav(self) -> Tuple[int, ...]:
+        return tuple(n * c + 2 * self.size_halo
+                     for n, c in zip(self.bnum, self.csize))
+
+    # --- paper Eq. (6): cells read from external memory per input buffer ----
+    @property
+    def cells_read(self) -> int:
+        r = self.stream_dim
+        for n, b in zip(self.bnum, self.bsize):
+            r *= n * b
+        return r
+
+    @property
+    def cells_written(self) -> int:
+        # writes masked to in-bounds compute cells only (paper §3.2/§4)
+        return math.prod(self.dims)
+
+    @property
+    def redundancy(self) -> float:
+        """Read amplification from overlapped halos + out-of-bound cells."""
+        return self.cells_read / math.prod(self.dims)
+
+    # --- VMEM working set of the streaming kernels (bytes) ------------------
+    def vmem_bytes(self, cell_bytes: int = 4, has_aux: bool = False,
+                   double_buffer: bool = True) -> int:
+        """Rolling-window footprint of the Pallas kernel for this geometry.
+
+        Per temporal stage: a window of (2*rad+1) rows (2D) / planes (3D) of
+        the block extent; plus the input stream buffer (double-buffered DMA)
+        and, for Hotspot, an aux (power) window deep enough to feed the last
+        stage (rad*par_time + 1 rows/planes).
+        """
+        row = math.prod(self.bsize) * cell_bytes  # one row/plane of the block
+        win = self.par_time * (2 * self.rad + 1) * row
+        stream = (2 if double_buffer else 1) * row  # input DMA landing buffers
+        out = (2 if double_buffer else 1) * row
+        aux = (self.size_halo + 1) * row if has_aux else 0
+        return win + stream + out + aux
+
+
+def choose_bsize_candidates(ndim: int, dims: Sequence[int]) -> list:
+    """Power-of-two block extents, lane-aligned (paper §5.3 restrictions)."""
+    out = []
+    if ndim == 2:
+        b = LANE * 2
+        while b <= max(2 * LANE, min(dims[1], 1 << 14)):
+            out.append((b,))
+            b *= 2
+    else:
+        b = 32
+        while b <= max(32, min(dims[1], dims[2], 512)):
+            out.append((b, b))   # square blocks for 3D (paper §5.3)
+            b *= 2
+    return out
+
+
+def superstep_traffic_bytes(geom: BlockGeometry, num_read: int, num_write: int,
+                            cell_bytes: int = 4) -> int:
+    """External-memory bytes moved per super-step (paper Eq. 7/8 numerator).
+
+    Reads skip fully out-of-bound columns (paper: "we avoid out-of-bound
+    memory reads"): per blocked dim the traversed extent is ``trav`` but reads
+    are clipped to the grid, so the read footprint per input buffer is
+    ``stream_dim * prod(min(trav_d, ...)...)`` — we keep the paper's 2D form
+    generalized: cells_read minus the out-of-bound band(s).
+    """
+    # Out-of-bound clip, generalizing paper Eq. (7) to any rank:
+    read_cells = geom.stream_dim
+    for n, b, c, d in zip(geom.bnum, geom.bsize, geom.csize, geom.blocked_dims):
+        # last block extends past the grid by (n*c + 2*halo - d) cells; those
+        # reads are clipped (DMA clamp), so the per-dim read extent is:
+        per_dim = n * b - max(0, (n * c + 2 * geom.size_halo) - d)
+        read_cells *= per_dim
+    return (read_cells * num_read + geom.cells_written * num_write) * cell_bytes

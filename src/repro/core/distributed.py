@@ -1,0 +1,211 @@
+"""Multi-device spatial distribution of the blocked stencil engine.
+
+This implements the paper's stated future work (§8: "spatial distribution of
+large stencils on multiple FPGAs") on a TPU mesh: the grid is domain-
+decomposed over mesh axes via ``shard_map``; each device runs the *same*
+combined spatial+temporal blocking locally; halos of width
+``rad * par_time`` are exchanged with ``lax.ppermute`` **once per
+super-step** — temporal blocking divides the number of exchanges (and thus
+ICI latency events) by ``par_time``. That communication aggregation is the
+distributed-optimization payoff of the paper's technique.
+
+Key correctness points:
+  * Received halos make a shard's local run exact up to ``rad*par_time``
+    cells from its extended edge — exactly the overlapped-blocking argument
+    one level up; the polluted rim is discarded at write-back.
+  * Shards at true grid boundaries pass clamp ``bounds`` to the engine so the
+    clamp BC is re-imposed at the *global* edge (not the shard edge) every
+    fused sub-step (DESIGN.md §2.1). Edge shards receive zero-filled halos
+    from ``ppermute`` (non-wrapping) — harmless, as bounds-clamping makes
+    those positions unread.
+  * Elasticity: the decomposition is a pure function of (mesh, grid shape);
+    restarting on a different mesh re-shards automatically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import BlockGeometry
+from repro.core.engine import blocked_superstep
+from repro.core.stencils import Stencil
+
+
+def _linear_index(axis_names: Tuple[str, ...]) -> jnp.ndarray:
+    """Linearized shard index over (possibly several) mesh axes."""
+    idx = jax.lax.axis_index(axis_names[0])
+    for name in axis_names[1:]:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def _axis_total(axis_names: Tuple[str, ...]) -> int:
+    n = 1
+    for name in axis_names:
+        n *= jax.lax.axis_size(name)
+    return n
+
+
+def _exchange_halo(x: jnp.ndarray, grid_axis: int,
+                   axis_names: Tuple[str, ...], h: int) -> jnp.ndarray:
+    """Extend ``x`` with h-wide neighbor strips along ``grid_axis``.
+
+    Neighbor ``i-1``'s trailing strip becomes our leading halo and vice
+    versa; the outermost shards receive zeros (cleaned up by bounds-clamp).
+    """
+    n = _axis_total(axis_names)
+    lead = jax.lax.slice_in_dim(x, 0, h, axis=grid_axis)
+    trail = jax.lax.slice_in_dim(x, x.shape[grid_axis] - h,
+                                 x.shape[grid_axis], axis=grid_axis)
+    halo_lo = jax.lax.ppermute(trail, axis_names,
+                               [(j, j + 1) for j in range(n - 1)])
+    halo_hi = jax.lax.ppermute(lead, axis_names,
+                               [(j, j - 1) for j in range(1, n)])
+    return jnp.concatenate([halo_lo, x, halo_hi], axis=grid_axis)
+
+
+def partition_spec(axis_map) -> P:
+    return P(*[names if names else None for names in axis_map])
+
+
+def shard_extents(dims, axis_map, mesh: Mesh):
+    """Per-shard local extents; raises unless evenly divisible (the launcher
+    pads the grid to make it so)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for d, names in zip(dims, axis_map):
+        n = math.prod(sizes[a] for a in names) if names else 1
+        if d % n:
+            raise ValueError(f"grid dim {d} not divisible by {n} shards")
+        out.append(d // n)
+    return tuple(out)
+
+
+def _superstep_stub(stencil: Stencil, geom: BlockGeometry, ext, coeffs,
+                    steps, aux_ext, bounds):
+    """Custom-call stand-in for the Pallas streaming kernel (dry-run billing).
+
+    Per-shard (already inside shard_map, so GSPMD sees sharded operands):
+    lowers to one opaque custom-call whose operands+result are the kernel's
+    HBM DMA footprint — grid in, aux in, grid out. The kernel's true DMA
+    schedule adds halo re-reads (+3-8%, `kernels.ops.dma_traffic_bytes`;
+    Table 4's traffic-accuracy column quantifies the gap). Executable on
+    host via the pure-JAX engine, so tests can run this path end-to-end.
+    """
+    import numpy as np
+    nb = len(bounds)
+    ext_arr, keep = ext                  # (extended grid, interior slices)
+
+    def host(ext_h, aux_h, steps_h, bounds_h, *coeff_vals):
+        cf = {k: jnp.asarray(v) for k, v in zip(stencil.coeff_names,
+                                                coeff_vals)}
+        bd = tuple((jnp.asarray(bounds_h[i, 0]), jnp.asarray(bounds_h[i, 1]))
+                   for i in range(nb))
+        out = blocked_superstep(stencil, geom, jnp.asarray(ext_h), cf,
+                                jnp.asarray(steps_h),
+                                jnp.asarray(aux_h) if stencil.has_aux
+                                else None, bounds=bd)
+        return np.asarray(out[keep])
+
+    bounds_arr = jnp.stack([jnp.stack([jnp.asarray(lo, jnp.int32),
+                                       jnp.asarray(hi, jnp.int32)])
+                            for lo, hi in bounds])
+    coeff_vals = [coeffs[k] for k in stencil.coeff_names]
+    aux_in = aux_ext if aux_ext is not None else jnp.zeros((), jnp.float32)
+    out_shape = tuple(len(range(*k.indices(s)))
+                      for k, s in zip(keep, ext_arr.shape))
+    return jax.pure_callback(
+        host, jax.ShapeDtypeStruct(out_shape, ext_arr.dtype), ext_arr,
+        aux_in, steps, bounds_arr, *coeff_vals, vmap_method="sequential")
+
+
+def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
+                         bsize, mesh: Mesh,
+                         axis_map: Sequence[Optional[Tuple[str, ...]]],
+                         kernel_stub: bool = False):
+    """Build the jitted multi-device runner ``fn(grid, aux, coeffs) -> grid``.
+
+    Used both for real execution (tests/examples) and for the dry-run
+    (``fn.lower(ShapeDtypeStruct...)``).  ``axis_map[d]``: mesh axis names
+    sharding grid axis ``d`` (or None). 2D on a (pod, data, model) mesh:
+    ``axis_map = (("pod", "data"), ("model",))``. ``kernel_stub=True``
+    routes each shard's super-step through the Pallas-kernel stand-in
+    (billing/dry-run; see ``_superstep_stub``).
+    """
+    if isinstance(bsize, int):
+        bsize = (bsize,) * (len(dims) - 1)
+    axis_map = tuple(tuple(a) if a else None for a in axis_map)
+    h = stencil.radius * par_time
+    local_dims = shard_extents(dims, axis_map, mesh)
+    ext_dims = tuple(ld + (2 * h if names else 0)
+                     for ld, names in zip(local_dims, axis_map))
+    geom = BlockGeometry(len(dims), ext_dims, stencil.radius, par_time,
+                         tuple(bsize))
+    spec = partition_spec(axis_map)
+    n_super = math.ceil(iters / par_time)
+    has_aux = stencil.has_aux
+
+    def local_run(g, aux_l, coeffs_l):
+        bounds = []
+        for names, ld in zip(axis_map, local_dims):
+            if names is None:
+                bounds.append((0, ld - 1))
+                continue
+            i = _linear_index(names)
+            n = _axis_total(names)
+            lo = jnp.where(i == 0, h, 0)
+            hi = jnp.where(i == n - 1, h + ld - 1, ld + 2 * h - 1)
+            bounds.append((lo, hi))
+        bounds = tuple(bounds)
+
+        keep = tuple(slice(h, h + ld) if names else slice(None)
+                     for names, ld in zip(axis_map, local_dims))
+        # aux (power) grid is read-only: exchange its halo once, not per
+        # super-step (hoisted out of the fori_loop)
+        aux_ext = aux_l
+        if has_aux:
+            for ax, names in enumerate(axis_map):
+                if names:
+                    aux_ext = _exchange_halo(aux_ext, ax, names, h)
+
+        def superstep(s, gl):
+            steps = jnp.minimum(par_time, iters - s * par_time)
+            ext = gl
+            for ax, names in enumerate(axis_map):
+                if names:
+                    ext = _exchange_halo(ext, ax, names, h)
+            if kernel_stub:
+                out = _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
+                                      steps, aux_ext if has_aux else None,
+                                      bounds)
+            else:
+                out = blocked_superstep(stencil, geom, ext, coeffs_l, steps,
+                                        aux_ext if has_aux else None, bounds)
+                out = out[keep]
+            return out
+
+        return jax.lax.fori_loop(0, n_super, superstep, g)
+
+    aux_spec = spec if has_aux else P()
+    shmapped = jax.shard_map(local_run, mesh=mesh,
+                             in_specs=(spec, aux_spec, P()),
+                             out_specs=spec, check_vma=False)
+    return jax.jit(shmapped,
+                   in_shardings=(NamedSharding(mesh, spec),
+                                 NamedSharding(mesh, aux_spec),
+                                 None),
+                   out_shardings=NamedSharding(mesh, spec))
+
+
+def distributed_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
+                    iters: int, par_time: int, bsize, mesh: Mesh,
+                    axis_map, aux: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Run ``iters`` steps of ``stencil`` on a grid sharded over ``mesh``."""
+    fn = build_distributed_fn(stencil, grid.shape, iters, par_time, bsize,
+                              mesh, axis_map)
+    aux_in = aux if aux is not None else jnp.zeros((), jnp.float32)
+    return fn(grid, aux_in, coeffs)

@@ -1,0 +1,158 @@
+"""Combined spatial + temporal blocking executor — pure JAX (the algorithm).
+
+This is the paper's accelerator expressed as data-parallel JAX: overlapped
+spatial blocks are materialized as a batch and updated ``par_time`` fused
+time-steps by a vmapped per-block pipeline, then the compute blocks are
+stitched back (out-of-bound compute is sliced off — the paper's "control only
+the flow of writes").  The Pallas kernels in ``repro.kernels`` implement the
+same math with explicit VMEM streaming; this module is their semantic spec
+and the multi-device distribution's local worker.
+
+Boundary-condition handling across fused steps: see DESIGN.md §2.1 — the
+clamp is re-imposed on out-of-grid positions before every sub-step
+(``_reclamp``), and the streaming axis uses edge-mode padding re-derived per
+sub-step (exact, because it is re-computed from current values).
+
+PE forwarding (paper §3.2): when ``iters % par_time != 0`` the trailing
+sub-steps forward data unchanged — implemented as a ``where(t < steps)``
+select, exactly like unused PEs passing data down the chain.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockGeometry
+from repro.core.stencils import Stencil
+
+
+def _pad_blocked_dims(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    """Edge-pad trailing (blocked) dims: halo on the left, halo + out-of-bound
+    overhang on the right, so every block slice is in-bounds."""
+    h = geom.size_halo
+    pads = [(0, 0)]
+    for d, p in zip(geom.blocked_dims, geom.padded_dims):
+        pads.append((h, p - d - h))
+    return jnp.pad(grid, pads, mode="edge")
+
+
+def _block_index(geom: BlockGeometry, dim_i: int) -> jnp.ndarray:
+    """(bnum, bsize) gather indices into the padded grid for blocked dim i."""
+    c, b, n = geom.csize[dim_i], geom.bsize[dim_i], geom.bnum[dim_i]
+    return (jnp.arange(n)[:, None] * c + jnp.arange(b)[None, :])
+
+
+def extract_blocks(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    """-> (num_blocks..., stream_dim, *bsize) overlapped blocks."""
+    gp = _pad_blocked_dims(grid, geom)
+    if geom.ndim == 2:
+        blk = jnp.take(gp, _block_index(geom, 0), axis=1)   # (ny, bnx, bsx)
+        return jnp.moveaxis(blk, 1, 0)                      # (bnx, ny, bsx)
+    blk = jnp.take(gp, _block_index(geom, 0), axis=1)       # (nz, bny, bsy, nxp)
+    blk = jnp.take(blk, _block_index(geom, 1), axis=3)      # (nz, bny, bsy, bnx, bsx)
+    return jnp.transpose(blk, (1, 3, 0, 2, 4))              # (bny, bnx, nz, bsy, bsx)
+
+
+def stitch_blocks(blocks: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    """Write-back: keep each block's compute region, discard halos and
+    out-of-bound columns (paper's masked writes)."""
+    h = geom.size_halo
+    if geom.ndim == 2:
+        comp = blocks[:, :, h:h + geom.csize[0]]             # (bnx, ny, csx)
+        out = jnp.moveaxis(comp, 0, 1).reshape(blocks.shape[1], -1)
+        return out[:, :geom.blocked_dims[0]]
+    csy, csx = geom.csize
+    comp = blocks[:, :, :, h:h + csy, h:h + csx]             # (bny,bnx,nz,csy,csx)
+    bny, bnx, nz = comp.shape[:3]
+    out = jnp.transpose(comp, (2, 0, 3, 1, 4)).reshape(nz, bny * csy, bnx * csx)
+    return out[:, :geom.blocked_dims[0], :geom.blocked_dims[1]]
+
+
+def _reclamp(block: jnp.ndarray, bidx, geom: BlockGeometry,
+             bounds=None) -> jnp.ndarray:
+    """Re-impose the clamp BC: overwrite out-of-grid positions with the value
+    at the clamped global coordinate. No-op for interior blocks.
+
+    ``bounds``: optional (ndim, 2) clamp range per grid axis, in grid
+    coordinates — used by the multi-device runtime, where a shard's local
+    edge may be an *internal* boundary (no clamp: bounds cover the whole
+    halo-extended shard) or a *true* grid boundary (clamp at the halo
+    offset). Entries may be traced. None = clamp at the grid edges.
+    """
+    h = geom.size_halo
+    if bounds is not None:
+        # streaming axis (axis 0 of the block)
+        idx = jnp.clip(jnp.arange(block.shape[0]), bounds[0][0], bounds[0][1])
+        block = jnp.take(block, idx, axis=0)
+    for i, (dim, b, c) in enumerate(zip(geom.blocked_dims, geom.bsize,
+                                        geom.csize)):
+        axis = block.ndim - (geom.ndim - 1) + i
+        lo, hi = (0, dim - 1) if bounds is None else bounds[i + 1]
+        gx = bidx[i] * c + jnp.arange(b) - h
+        jc = jnp.clip(gx, lo, hi) + h - bidx[i] * c
+        block = jnp.take(block, jnp.clip(jc, 0, b - 1), axis=axis)
+    return block
+
+
+def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
+                   aux_block) -> jnp.ndarray:
+    """One plain stencil step on a block: exact edge-pad BC on the streaming
+    axis, garbage-tolerant edge-pad on blocked axes (halo shrinkage covers
+    it)."""
+    r = stencil.radius
+    p = jnp.pad(block, r, mode="edge")
+
+    def get(off):
+        idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, block.shape))
+        return p[idx]
+
+    return stencil.apply(get, coeffs, aux_block)
+
+
+@partial(jax.jit, static_argnames=("stencil", "geom"))
+def blocked_superstep(stencil: Stencil, geom: BlockGeometry,
+                      grid: jnp.ndarray, coeffs: dict, steps,
+                      aux: jnp.ndarray | None = None,
+                      bounds=None) -> jnp.ndarray:
+    """Apply ``steps`` (<= par_time) fused time-steps via one HBM round-trip
+    worth of overlapped blocks. ``steps`` may be a traced scalar; ``bounds``
+    is the optional per-axis clamp range (see ``_reclamp``)."""
+    blocks = extract_blocks(grid, geom)
+    aux_blocks = extract_blocks(aux, geom) if stencil.has_aux else None
+
+    def one_block(block, aux_block, *bidx):
+        def substep(t, blk):
+            blk = _reclamp(blk, bidx, geom, bounds)
+            new = _block_substep(stencil, blk, coeffs, aux_block)
+            return jnp.where(t < steps, new, blk)   # PE forwarding
+        return jax.lax.fori_loop(0, geom.par_time, substep, block)
+
+    aux_ax = 0 if aux_blocks is not None else None
+    if geom.ndim == 2:
+        upd = jax.vmap(one_block, in_axes=(0, aux_ax, 0))(
+            blocks, aux_blocks, jnp.arange(geom.bnum[0]))
+    else:
+        inner = jax.vmap(one_block, in_axes=(0, aux_ax, None, 0))
+        upd = jax.vmap(inner, in_axes=(0, aux_ax, 0, None))(
+            blocks, aux_blocks, jnp.arange(geom.bnum[0]),
+            jnp.arange(geom.bnum[1]))
+    return stitch_blocks(upd, geom)
+
+
+def run_blocked(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
+                par_time: int, bsize, aux: jnp.ndarray | None = None
+                ) -> jnp.ndarray:
+    """Full run: ceil(iters/par_time) super-steps (paper Eq. 8 numerator)."""
+    if isinstance(bsize, int):
+        bsize = (bsize,) * (grid.ndim - 1)
+    geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time, bsize)
+    n_super = math.ceil(iters / par_time)
+
+    def body(s, g):
+        steps = jnp.minimum(par_time, iters - s * par_time)
+        return blocked_superstep(stencil, geom, g, coeffs, steps, aux)
+
+    return jax.lax.fori_loop(0, n_super, body, grid)

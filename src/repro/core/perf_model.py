@@ -1,0 +1,151 @@
+"""Performance model — paper §4 (Eqs. 3-9) with TPU hardware constants.
+
+The paper's model assumes the computation is memory-bound and predicts run
+time from external-memory traffic alone (Eq. 8).  On TPU the byte/FLOP
+balance moves ~10x toward compute (819 GB/s HBM vs. 25-34 GB/s DDR), so we
+keep the paper's traffic accounting *exactly* (Eqs. 4-7, via
+``core.blocking``) but take ``time = max(t_mem, t_compute, t_halo)`` — the
+deep-pipeline overlap assumption carries over (DMA prefetch overlaps VPU
+compute; halo exchange overlaps the interior sweep).
+
+Two roles, mirroring the paper:
+  1. Predict throughput for a given (bsize, par_time) — §4.
+  2. Prune the design space: pick the best (bsize, par_time) subject to the
+     VMEM budget — §5.3's BRAM/DSP pruning, with VMEM as the scarce resource
+     (par_vec is fixed at the 128-lane VPU width on TPU; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.blocking import (BlockGeometry, LANE, choose_bsize_candidates,
+                                 superstep_traffic_bytes)
+from repro.core.stencils import Stencil
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """Per-chip hardware constants. Defaults: TPU v5e-class (see DESIGN.md §7)."""
+    name: str = "tpu_v5e"
+    mem_bw: float = 819e9            # HBM bytes/s
+    vpu_flops: float = 12.3e12       # f32 vector FLOP/s (assumed MXU_bf16/16)
+    mxu_flops_bf16: float = 197e12   # MXU peak (LM roofline uses this)
+    vmem_budget: int = 32 * 2 ** 20  # usable VMEM for kernel working set
+    ici_bw: float = 50e9             # bytes/s per ICI link
+    hbm_bytes: int = 16 * 2 ** 30
+
+    def scaled(self, **kw) -> "Device":
+        return dataclasses.replace(self, **kw)
+
+
+# Projection targets (paper §6.3 analogue: model-driven next-gen estimates).
+TPU_V5E = Device()
+TPU_V5P = Device(name="tpu_v5p", mem_bw=2765e9, vpu_flops=28.7e12,
+                 mxu_flops_bf16=459e12, vmem_budget=64 * 2 ** 20,
+                 ici_bw=100e9, hbm_bytes=95 * 2 ** 30)
+TPU_V6E = Device(name="tpu_v6e", mem_bw=1640e9, vpu_flops=57.4e12,
+                 mxu_flops_bf16=918e12, vmem_budget=64 * 2 ** 20,
+                 ici_bw=90e9, hbm_bytes=32 * 2 ** 30)
+
+DEVICES = {d.name: d for d in (TPU_V5E, TPU_V5P, TPU_V6E)}
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    geom: BlockGeometry
+    t_mem: float                 # s per super-step (memory term)
+    t_compute: float             # s per super-step (compute term)
+    t_halo: float                # s per super-step (collective term; 0 if single chip)
+    n_super: int
+    run_time: float
+    gbytes_s: float              # paper Eq. 9 "throughput"
+    gcells_s: float
+    gflops: float
+    vmem_bytes: int
+    bound: str                   # "memory" | "compute" | "collective"
+
+    def describe(self) -> str:
+        return (f"bsize={self.geom.bsize} par_time={self.geom.par_time} "
+                f"-> {self.gflops / 1e9:.1f} GFLOP/s ({self.bound}-bound, "
+                f"{self.gcells_s / 1e9:.2f} GCell/s, red={self.geom.redundancy:.2f})")
+
+
+def predict(stencil: Stencil, dims: Sequence[int], iters: int,
+            bsize, par_time: int, device: Device = TPU_V5E,
+            cell_bytes: int = 4, n_chips: int = 1,
+            chip_grid: Sequence[int] | None = None) -> Prediction:
+    """Paper Eqs. (3)-(9) + compute/collective terms.
+
+    ``n_chips``: spatial distribution (core/distributed.py) — the grid is
+    split over chips along the streaming axis (+x for 2D), each chip runs
+    the same blocking locally and exchanges a halo of width rad*par_time
+    per super-step over ICI.
+    """
+    if isinstance(bsize, int):
+        bsize = (bsize,) * (len(dims) - 1)
+    local_dims = tuple(dims)
+    if n_chips > 1:
+        cg = tuple(chip_grid) if chip_grid else (n_chips,) + (1,) * (len(dims) - 1)
+        local_dims = tuple(math.ceil(d / c) for d, c in zip(dims, cg))
+    geom = BlockGeometry(len(dims), local_dims, stencil.radius, par_time, bsize)
+
+    # --- memory term (paper Eq. 3: th_mem saturates at th_max = HBM bw) ----
+    step_bytes = superstep_traffic_bytes(geom, stencil.num_read,
+                                         stencil.num_write, cell_bytes)
+    t_mem = step_bytes / device.mem_bw
+
+    # --- compute term: every traversed cell is updated par_time times ------
+    cells_per_super = geom.stream_dim * math.prod(
+        n * b for n, b in zip(geom.bnum, geom.bsize))
+    flops_per_super = cells_per_super * par_time * stencil.flop_pcu
+    t_compute = flops_per_super / device.vpu_flops
+
+    # --- collective term: halo exchange once per super-step ----------------
+    t_halo = 0.0
+    if n_chips > 1:
+        halo_cells = geom.size_halo * math.prod(local_dims) // local_dims[0]
+        halo_bytes = 2 * halo_cells * cell_bytes * max(stencil.num_read, 1)
+        t_halo = halo_bytes / device.ici_bw
+
+    n_super = math.ceil(iters / par_time)
+    t_step = max(t_mem, t_compute, t_halo)
+    run_time = n_super * t_step
+    total_cells = math.prod(dims) * iters   # whole-problem cells (all chips)
+    bound = ("memory" if t_mem >= max(t_compute, t_halo)
+             else "compute" if t_compute >= t_halo else "collective")
+    return Prediction(
+        geom=geom, t_mem=t_mem, t_compute=t_compute, t_halo=t_halo,
+        n_super=n_super, run_time=run_time,
+        gbytes_s=n_super * step_bytes / run_time,
+        gcells_s=total_cells / run_time,
+        gflops=total_cells * stencil.flop_pcu / run_time,
+        vmem_bytes=geom.vmem_bytes(cell_bytes, stencil.has_aux),
+        bound=bound)
+
+
+def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
+             device: Device = TPU_V5E, cell_bytes: int = 4,
+             par_time_max: int = 64, n_chips: int = 1,
+             chip_grid: Sequence[int] | None = None) -> list:
+    """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
+    par_time, drop configs whose working set exceeds the VMEM budget, rank by
+    predicted run time. Returns predictions sorted best-first."""
+    cands = []
+    for bsize in choose_bsize_candidates(len(dims), dims):
+        pt = 1
+        while pt <= par_time_max:
+            if min(bsize) > 2 * stencil.radius * pt:
+                p = predict(stencil, dims, iters, bsize, pt, device,
+                            cell_bytes, n_chips, chip_grid)
+                if p.vmem_bytes <= device.vmem_budget:
+                    cands.append(p)
+            pt *= 2
+    cands.sort(key=lambda p: p.run_time)
+    return cands
+
+
+def model_accuracy(measured_s: float, predicted: Prediction) -> float:
+    """Paper §6.2: measured/estimated performance ratio."""
+    return predicted.run_time / measured_s

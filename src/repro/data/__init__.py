@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 make_stencil_inputs, prefetch)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_stencil_inputs",
+           "prefetch"]

@@ -1,0 +1,114 @@
+"""jit'd dispatch wrappers around the stencil implementations.
+
+``stencil_run(..., backend=...)`` is the one public entry point:
+
+  backend="reference"         unblocked oracle (kernels/ref.py)
+  backend="engine"            pure-JAX blocked engine (core/engine.py)
+  backend="pallas_interpret"  Pallas kernels, interpret mode (CPU-correctness)
+  backend="pallas"            Pallas kernels, compiled for TPU
+
+The Pallas path mirrors run_blocked's super-step loop: edge-pad the blocked
+dims, launch one kernel per super-step (``ceil(iters/par_time)``), slice the
+compute columns back out.  ``iters % par_time`` is handled in-kernel by PE
+forwarding, exactly like the paper's unused PEs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockGeometry
+from repro.core.engine import run_blocked
+from repro.core.stencils import Stencil
+from repro.kernels.ref import oracle_run
+from repro.kernels.stencil2d import superstep_2d
+from repro.kernels.stencil3d import superstep_3d
+
+
+def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
+    return jnp.stack([jnp.asarray(coeffs[n], jnp.float32)
+                      for n in stencil.coeff_names])
+
+
+def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    h = geom.size_halo
+    pads = [(0, 0)]
+    for d, p in zip(geom.blocked_dims, geom.padded_dims):
+        pads.append((h, p - d - h))
+    return jnp.pad(grid, pads, mode="edge")
+
+
+def _slice_blocked(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    h = geom.size_halo
+    idx = (slice(None),) + tuple(slice(h, h + d) for d in geom.blocked_dims)
+    return gp[idx]
+
+
+@partial(jax.jit,
+         static_argnames=("stencil", "geom", "iters", "interpret"))
+def _run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
+                coeffs_packed: jnp.ndarray, iters: int,
+                aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
+    superstep = superstep_2d if geom.ndim == 2 else superstep_3d
+    n_super = math.ceil(iters / geom.par_time)
+    aux_p = _pad_blocked(aux, geom) if aux is not None else None
+
+    def body(s, g):
+        steps = jnp.minimum(geom.par_time, iters - s * geom.par_time)
+        gp = _pad_blocked(g, geom)
+        op = superstep(stencil, geom, gp, coeffs_packed, steps, aux_p,
+                       interpret=interpret)
+        return _slice_blocked(op, geom)
+
+    return jax.lax.fori_loop(0, n_super, body, grid)
+
+
+def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
+                      cell_bytes: int = 4) -> int:
+    """Exact HBM traffic of one Pallas super-step, from its DMA schedule.
+
+    The kernels' HBM accesses are fully explicit (manual async copies), so
+    traffic is countable without hardware:
+      * input: every block streams ``nticks = stream + size_halo`` rows
+        (2D) / planes (3D) of extent ``prod(bsize)`` — edge ticks re-read
+        clamped rows; halo columns overlap between adjacent blocks.
+      * aux (Hotspot power): same stream per block.
+      * output: every block writes ``stream`` rows/planes of the compute
+        extent ``prod(csize)`` (out-of-bound columns land in padding and
+        are counted — the wrapper slices them off in HBM).
+
+    This is what the perf model's Eq. 7/8 idealizes; the ratio
+    ``superstep_traffic_bytes / dma_traffic_bytes`` is the model's traffic
+    accuracy for the kernel implementation.
+    """
+    stream = geom.stream_dim
+    nticks = stream + geom.size_halo
+    block_in = math.prod(geom.bsize)
+    block_out = math.prod(geom.csize)
+    n_blocks = geom.num_blocks
+    reads = n_blocks * nticks * block_in * (2 if stencil.has_aux else 1)
+    writes = n_blocks * stream * block_out
+    return (reads + writes) * cell_bytes
+
+
+def stencil_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
+                par_time: int, bsize, aux: jnp.ndarray | None = None,
+                backend: str = "pallas_interpret") -> jnp.ndarray:
+    """Run ``iters`` time-steps with the selected implementation."""
+    if stencil.has_aux and aux is None:
+        raise ValueError(f"{stencil.name} needs an aux (power) grid")
+    if backend == "reference":
+        return oracle_run(stencil, grid, coeffs, iters, aux)
+    if isinstance(bsize, int):
+        bsize = (bsize,) * (grid.ndim - 1)
+    if backend == "engine":
+        return run_blocked(stencil, grid, coeffs, iters, par_time, bsize, aux)
+    if backend not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+    geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time,
+                         tuple(bsize))
+    return _run_pallas(stencil, geom, grid, pack_coeffs(stencil, coeffs),
+                       iters, aux, backend == "pallas_interpret")

@@ -1,0 +1,238 @@
+"""Pallas TPU kernel: 2D stencil with combined spatial + temporal blocking.
+
+Faithful TPU re-architecture of the paper's accelerator (see DESIGN.md §2):
+
+  * 1-D spatial blocking in x, streaming in y (paper §3.1): kernel grid is
+    ``(bnum_x,)``; each program owns one overlapped block of width ``bsize``
+    and streams the full y extent row by row.
+  * Shift registers → **rolling VMEM windows**: one ``(2*rad+1, bsize)``
+    circular row window per temporal stage, indexed mod-S (incrementing the
+    start address of the FPGA shift register == bumping the mod-S slot).
+  * PE chain → **fused stage loop**: stage ``t`` computes its row ``k - t*rad``
+    at stream tick ``k`` — the same ``rad``-row lag the paper gives each PE.
+  * read/write kernels + channels → **double-buffered async DMA**
+    (``pltpu.make_async_copy``): row ``k+1`` is in flight while row ``k`` is
+    consumed; output rows stream back through a 2-deep buffer.
+  * Halos are computed redundantly; only the ``csize``-wide compute region is
+    DMA'd out (the paper's "control only the flow of writes"). Out-of-bound
+    compute lands in padding the wrapper slices off.
+  * PE forwarding (paper §3.2): when fewer than ``par_time`` steps remain, the
+    trailing stages forward their input row unchanged (runtime ``steps``
+    scalar in SMEM).
+
+Boundary handling (DESIGN.md §2.1): the streaming-axis clamp is exact via
+clamped DMA source rows + clamped window reads; the blocked-axis clamp is
+re-imposed on every pushed row (prefix/suffix overwrite with the boundary
+value — only the first/last block ever does real work here).
+
+TPU-shape notes: rows are ``(1, bsize)`` f32 with ``bsize % 128 == 0``;
+in-row shifts use ``jnp.roll`` (lane rotate; swap for ``pltpu.roll`` on a
+sublane-tiled layout if Mosaic rejects the 1-row form). Mosaic pads the
+``(2*rad+1)``-deep windows to 8 sublanes — accounted in the perf model's
+VMEM budget via ``BlockGeometry.vmem_bytes``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import BlockGeometry
+from repro.core.stencils import Stencil
+
+
+def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
+            coeff_ref,                      # VMEM (1, n_coeff) f32
+            gp_ref,                         # ANY (ny, nxp): padded input
+            aux_ref,                        # ANY (ny, nxp) or None
+            out_ref,                        # ANY (ny, nxp): padded output
+            win_ref,                        # VMEM (T, S, BX): stage windows
+            in_buf, in_sems,                # VMEM (2,1,BX) + 2 DMA sems
+            aux_win,                        # VMEM (HA, BX) aux window or None
+            aux_buf, aux_sems,              # (2,1,BX) + sems, or None
+            out_buf, out_sems,              # VMEM (2,1,CS) + 2 DMA sems
+            *, stencil: Stencil, geom: BlockGeometry, ny: int, dimx: int):
+    T, rad = geom.par_time, geom.rad
+    S = 2 * rad + 1
+    BX = geom.bsize[0]
+    CS = geom.csize[0]
+    h = geom.size_halo
+    HA = h + 1
+    b = pl.program_id(0)
+    xs = b * CS                              # block start col in padded grid
+    nticks = ny + h
+    steps = steps_ref[0, 0]
+
+    coeffs = {name: coeff_ref[0, i]
+              for i, name in enumerate(stencil.coeff_names)}
+
+    # --- x boundary re-clamp (blocked dim): only first/last block act -------
+    lo = h - xs                              # positions j < lo are left of grid
+    hi = (dimx - 1) + h - xs                 # positions j > hi are right of grid
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, BX), 1)
+
+    def reclamp_x(row):
+        lo_val = jax.lax.dynamic_slice(row, (0, jnp.clip(lo, 0, BX - 1)), (1, 1))
+        hi_val = jax.lax.dynamic_slice(row, (0, jnp.clip(hi, 0, BX - 1)), (1, 1))
+        row = jnp.where(iota < lo, lo_val, row)
+        return jnp.where(iota > hi, hi_val, row)
+
+    # --- DMA plumbing --------------------------------------------------------
+    def in_copy(k, slot):
+        src = jnp.clip(k, 0, ny - 1)
+        return pltpu.make_async_copy(
+            gp_ref.at[pl.ds(src, 1), pl.ds(xs, BX)],
+            in_buf.at[slot], in_sems.at[slot])
+
+    def aux_copy(k, slot):
+        src = jnp.clip(k, 0, ny - 1)
+        return pltpu.make_async_copy(
+            aux_ref.at[pl.ds(src, 1), pl.ds(xs, BX)],
+            aux_buf.at[slot], aux_sems.at[slot])
+
+    def out_copy(y, slot):
+        return pltpu.make_async_copy(
+            out_buf.at[slot],
+            out_ref.at[pl.ds(y, 1), pl.ds(xs + h, CS)], out_sems.at[slot])
+
+    has_aux = aux_ref is not None
+    in_copy(0, 0).start()
+    if has_aux:
+        aux_copy(0, 0).start()
+
+    def read_win(t, row, newest):
+        """Stage-t window row with stream-axis clamp (row may be out of grid).
+        ``newest`` bounds the clip so we never read an unpushed slot."""
+        r = jnp.clip(row, 0, jnp.minimum(newest, ny - 1))
+        return win_ref[t, pl.ds(r % S, 1), :]
+
+    def body(k, _):
+        # -- wait input row k; prefetch row k+1 into the other buffer --------
+        slot = k % 2
+        in_copy(k, slot).wait()
+
+        @pl.when(k + 1 < nticks)
+        def _():
+            in_copy(k + 1, (k + 1) % 2).start()
+
+        @pl.when(k <= ny - 1)
+        def _():   # push input row into the stage-0 window (pre-padded => BC-ok)
+            win_ref[0, pl.ds(k % S, 1), :] = in_buf[slot]
+
+        if has_aux:
+            aux_copy(k, slot).wait()
+
+            @pl.when(k + 1 < nticks)
+            def _():
+                aux_copy(k + 1, (k + 1) % 2).start()
+
+            @pl.when(k <= ny - 1)
+            def _():
+                aux_win[pl.ds(k % HA, 1), :] = aux_buf[slot]
+
+        # -- PE chain: stage t computes row k - t*rad -------------------------
+        for t in range(1, T + 1):
+            y = k - t * rad
+            newest = k - (t - 1) * rad       # newest row stage t-1 can own
+
+            @pl.when((y >= 0) & (y <= ny - 1))
+            def _(t=t, y=y, newest=newest):
+                rows = {dy: read_win(t - 1, y + dy, newest)
+                        for dy in range(-rad, rad + 1)}
+
+                def get(off):
+                    dy, dx = off
+                    r = rows[dy]
+                    return jnp.roll(r, -dx, axis=1) if dx else r
+
+                aux_row = None
+                if has_aux:
+                    ra = jnp.clip(y, 0, ny - 1)
+                    aux_row = aux_win[pl.ds(ra % HA, 1), :]
+                val = stencil.apply(get, coeffs, aux_row)
+                # PE forwarding: inactive stages copy their input row through.
+                val = jnp.where(t <= steps, val, rows[0])
+                if t < T:
+                    win_ref[t, pl.ds(y % S, 1), :] = reclamp_x(val)
+                else:
+                    oslot = y % 2
+
+                    @pl.when(y >= 2)
+                    def _():   # slot reuse: previous copy must have drained
+                        out_copy(y - 2, oslot).wait()
+
+                    out_buf[oslot] = val[:, h:h + CS]
+                    out_copy(y, oslot).start()
+        return 0
+
+    jax.lax.fori_loop(0, nticks, body, 0)
+
+    # drain outstanding output DMAs (last two rows; ny is static)
+    if ny >= 2:
+        out_copy(ny - 2, (ny - 2) % 2).wait()
+    out_copy(ny - 1, (ny - 1) % 2).wait()
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+def superstep_2d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
+                 coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                 aux_p: Optional[jnp.ndarray] = None,
+                 interpret: bool = True) -> jnp.ndarray:
+    """One super-step (<= par_time fused time-steps) over the padded grid.
+
+    ``gp``/``aux_p``: edge-padded to (ny, bnum*csize + 2*halo).
+    Returns the padded output (only compute columns are meaningful).
+    """
+    ny, nxp = gp.shape
+    T, rad = geom.par_time, geom.rad
+    S = 2 * rad + 1
+    BX = geom.bsize[0]
+    CS = geom.csize[0]
+    dimx = geom.blocked_dims[0]
+
+    kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
+                               ny=ny, dimx=dimx)
+    scratch = [
+        pltpu.VMEM((T, S, BX), jnp.float32),      # stage windows
+        pltpu.VMEM((2, 1, BX), jnp.float32),      # input double buffer
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.VMEM((geom.size_halo + 1, BX), jnp.float32) if stencil.has_aux else None,
+        pltpu.VMEM((2, 1, BX), jnp.float32) if stencil.has_aux else None,
+        pltpu.SemaphoreType.DMA((2,)) if stencil.has_aux else None,
+        pltpu.VMEM((2, 1, CS), jnp.float32),      # output double buffer
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    if not stencil.has_aux:
+        # drop aux scratch slots entirely (kernel signature shrinks to match)
+        scratch = [s for s in scratch if s is not None]
+
+        def kernel_noaux(steps_ref, coeff_ref, gp_ref, out_ref,
+                         win_ref, in_buf, in_sems, out_buf, out_sems):
+            return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
+                           win_ref, in_buf, in_sems, None, None, None,
+                           out_buf, out_sems, stencil=stencil, geom=geom,
+                           ny=ny, dimx=dimx)
+        kernel = kernel_noaux
+
+    n_hbm_in = 2 if stencil.has_aux else 1
+    operands = (coeffs_packed.reshape(1, -1), gp) + (
+        (aux_p,) if stencil.has_aux else ())
+    steps_arr = jnp.asarray(steps, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(geom.bnum[0],),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)]
+        + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=scratch,
+        out_shape=jax.ShapeDtypeStruct((ny, nxp), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(steps_arr, *operands)

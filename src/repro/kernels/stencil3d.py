@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: 3D stencil — 2-D spatial blocking (x,y), z streaming.
+
+The 3D sibling of ``stencil2d.py`` (see that module + DESIGN.md §2 for the
+architecture): this is the paper's 3.5D blocking — a ``(bsize_y, bsize_x)``
+tile marches along z, with one rolling ``(2*rad+1)``-plane VMEM window per
+temporal stage and double-buffered plane DMA.  Kernel grid is
+``(bnum_y, bnum_x)``; halo re-clamping applies to both blocked dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import BlockGeometry
+from repro.core.stencils import Stencil
+
+
+def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
+            win_ref, in_buf, in_sems, aux_win, aux_buf, aux_sems,
+            out_buf, out_sems,
+            *, stencil: Stencil, geom: BlockGeometry, nz: int,
+            dimy: int, dimx: int):
+    T, rad = geom.par_time, geom.rad
+    S = 2 * rad + 1
+    BY, BX = geom.bsize
+    CSY, CSX = geom.csize
+    h = geom.size_halo
+    HA = h + 1
+    by, bx = pl.program_id(0), pl.program_id(1)
+    ys, xs = by * CSY, bx * CSX
+    nticks = nz + h
+    steps = steps_ref[0, 0]
+
+    coeffs = {name: coeff_ref[0, i]
+              for i, name in enumerate(stencil.coeff_names)}
+
+    # --- (y, x) boundary re-clamp: only grid-edge blocks act ----------------
+    lo_y, hi_y = h - ys, (dimy - 1) + h - ys
+    lo_x, hi_x = h - xs, (dimx - 1) + h - xs
+    iota_y = jax.lax.broadcasted_iota(jnp.int32, (1, BY, BX), 1)
+    iota_x = jax.lax.broadcasted_iota(jnp.int32, (1, BY, BX), 2)
+
+    def reclamp(plane):
+        lo_row = jax.lax.dynamic_slice(
+            plane, (0, jnp.clip(lo_y, 0, BY - 1), 0), (1, 1, BX))
+        hi_row = jax.lax.dynamic_slice(
+            plane, (0, jnp.clip(hi_y, 0, BY - 1), 0), (1, 1, BX))
+        plane = jnp.where(iota_y < lo_y, lo_row, plane)
+        plane = jnp.where(iota_y > hi_y, hi_row, plane)
+        lo_col = jax.lax.dynamic_slice(
+            plane, (0, 0, jnp.clip(lo_x, 0, BX - 1)), (1, BY, 1))
+        hi_col = jax.lax.dynamic_slice(
+            plane, (0, 0, jnp.clip(hi_x, 0, BX - 1)), (1, BY, 1))
+        plane = jnp.where(iota_x < lo_x, lo_col, plane)
+        return jnp.where(iota_x > hi_x, hi_col, plane)
+
+    # --- DMA plumbing --------------------------------------------------------
+    def in_copy(k, slot):
+        src = jnp.clip(k, 0, nz - 1)
+        return pltpu.make_async_copy(
+            gp_ref.at[pl.ds(src, 1), pl.ds(ys, BY), pl.ds(xs, BX)],
+            in_buf.at[slot], in_sems.at[slot])
+
+    def aux_copy(k, slot):
+        src = jnp.clip(k, 0, nz - 1)
+        return pltpu.make_async_copy(
+            aux_ref.at[pl.ds(src, 1), pl.ds(ys, BY), pl.ds(xs, BX)],
+            aux_buf.at[slot], aux_sems.at[slot])
+
+    def out_copy(z, slot):
+        return pltpu.make_async_copy(
+            out_buf.at[slot],
+            out_ref.at[pl.ds(z, 1), pl.ds(ys + h, CSY), pl.ds(xs + h, CSX)],
+            out_sems.at[slot])
+
+    has_aux = aux_ref is not None
+    in_copy(0, 0).start()
+    if has_aux:
+        aux_copy(0, 0).start()
+
+    def read_win(t, plane_i, newest):
+        r = jnp.clip(plane_i, 0, jnp.minimum(newest, nz - 1))
+        return win_ref[t, pl.ds(r % S, 1), :, :]
+
+    def body(k, _):
+        slot = k % 2
+        in_copy(k, slot).wait()
+
+        @pl.when(k + 1 < nticks)
+        def _():
+            in_copy(k + 1, (k + 1) % 2).start()
+
+        @pl.when(k <= nz - 1)
+        def _():
+            win_ref[0, pl.ds(k % S, 1), :, :] = in_buf[slot]
+
+        if has_aux:
+            aux_copy(k, slot).wait()
+
+            @pl.when(k + 1 < nticks)
+            def _():
+                aux_copy(k + 1, (k + 1) % 2).start()
+
+            @pl.when(k <= nz - 1)
+            def _():
+                aux_win[pl.ds(k % HA, 1), :, :] = aux_buf[slot]
+
+        for t in range(1, T + 1):
+            z = k - t * rad
+            newest = k - (t - 1) * rad
+
+            @pl.when((z >= 0) & (z <= nz - 1))
+            def _(t=t, z=z, newest=newest):
+                planes = {dz: read_win(t - 1, z + dz, newest)
+                          for dz in range(-rad, rad + 1)}
+
+                def get(off):
+                    dz, dy, dx = off
+                    p = planes[dz]
+                    if dy:
+                        p = jnp.roll(p, -dy, axis=1)
+                    if dx:
+                        p = jnp.roll(p, -dx, axis=2)
+                    return p
+
+                aux_plane = None
+                if has_aux:
+                    ra = jnp.clip(z, 0, nz - 1)
+                    aux_plane = aux_win[pl.ds(ra % HA, 1), :, :]
+                val = stencil.apply(get, coeffs, aux_plane)
+                val = jnp.where(t <= steps, val, planes[0])  # PE forwarding
+                if t < T:
+                    win_ref[t, pl.ds(z % S, 1), :, :] = reclamp(val)
+                else:
+                    oslot = z % 2
+
+                    @pl.when(z >= 2)
+                    def _():
+                        out_copy(z - 2, oslot).wait()
+
+                    out_buf[oslot] = val[:, h:h + CSY, h:h + CSX]
+                    out_copy(z, oslot).start()
+        return 0
+
+    jax.lax.fori_loop(0, nticks, body, 0)
+
+    if nz >= 2:
+        out_copy(nz - 2, (nz - 2) % 2).wait()
+    out_copy(nz - 1, (nz - 1) % 2).wait()
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
+                 coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                 aux_p: Optional[jnp.ndarray] = None,
+                 interpret: bool = True) -> jnp.ndarray:
+    nz, nyp, nxp = gp.shape
+    T, rad = geom.par_time, geom.rad
+    S = 2 * rad + 1
+    BY, BX = geom.bsize
+    CSY, CSX = geom.csize
+    dimy, dimx = geom.blocked_dims
+
+    kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
+                               nz=nz, dimy=dimy, dimx=dimx)
+    scratch = [
+        pltpu.VMEM((T, S, BY, BX), jnp.float32),
+        pltpu.VMEM((2, 1, BY, BX), jnp.float32),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.VMEM((geom.size_halo + 1, BY, BX), jnp.float32) if stencil.has_aux else None,
+        pltpu.VMEM((2, 1, BY, BX), jnp.float32) if stencil.has_aux else None,
+        pltpu.SemaphoreType.DMA((2,)) if stencil.has_aux else None,
+        pltpu.VMEM((2, 1, CSY, CSX), jnp.float32),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    if not stencil.has_aux:
+        scratch = [s for s in scratch if s is not None]
+
+        def kernel_noaux(steps_ref, coeff_ref, gp_ref, out_ref,
+                         win_ref, in_buf, in_sems, out_buf, out_sems):
+            return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
+                           win_ref, in_buf, in_sems, None, None, None,
+                           out_buf, out_sems, stencil=stencil, geom=geom,
+                           nz=nz, dimy=dimy, dimx=dimx)
+        kernel = kernel_noaux
+
+    n_hbm_in = 2 if stencil.has_aux else 1
+    operands = (coeffs_packed.reshape(1, -1), gp) + (
+        (aux_p,) if stencil.has_aux else ())
+    steps_arr = jnp.asarray(steps, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(geom.bnum[0], geom.bnum[1]),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)]
+        + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=scratch,
+        out_shape=jax.ShapeDtypeStruct((nz, nyp, nxp), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(steps_arr, *operands)

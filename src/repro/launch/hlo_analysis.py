@@ -1,0 +1,602 @@
+"""Optimized-HLO analyzer: loop-aware FLOPs, collective bytes, HBM traffic.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, so for scan-over-layers models it under-reports FLOPs/bytes by ~L×
+(verified empirically — see EXPERIMENTS.md §Dry-run notes).  This module
+parses ``compiled.as_text()`` (post-optimization, post-SPMD-partitioning, so
+all quantities are **per device**) and:
+
+  1. builds the computation call graph (fusion/call/while/conditional),
+  2. infers each while loop's trip count from its condition computation
+     (the ``constant(N)`` feeding the ``compare``; scan/fori lowerings are
+     ``i < N`` with unit step),
+  3. multiplies every instruction's contribution by the product of enclosing
+     trip counts,
+  4. reports per-device:
+       * ``flops``        — dot/convolution FLOPs (2·M·N·K per dot; operand
+                            shapes resolved through a per-computation symbol
+                            table since optimized HLO prints bare operand
+                            names)
+       * ``coll_bytes``   — wire bytes of collectives with ring factors:
+                            all-reduce 2(G-1)/G, all-gather/reduce-scatter/
+                            all-to-all (G-1)/G, collective-permute 1x
+       * ``hbm_bytes``    — Σ (operand+result bytes) over fusion-boundary
+                            instructions: a materialization model of HBM
+                            traffic (VMEM-resident reuse inside a fusion is
+                            free; anything crossing a fusion boundary pays)
+       * per-collective breakdowns + while trip counts.
+
+Approximations bias consistently — exactly what the §Perf hillclimb needs
+(before/after deltas on the same estimator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_elems(type_str: str) -> int:
+    return math.prod(_first_shape_dims(type_str)) if _SHAPE_RE.search(
+        type_str) else 0
+
+
+def _operand_span(line: str, opcode: str) -> str:
+    """Text inside the opcode's parens (quote-aware, nesting-aware)."""
+    start = line.find(opcode + "(")
+    if start < 0:
+        return ""
+    i = start + len(opcode) + 1
+    depth = 1
+    out = []
+    in_str = False
+    while i < len(line) and depth:
+        c = line[i]
+        if in_str:
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+        elif c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    types: Dict[str, str]
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation],
+                                         Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "(" in line and \
+                line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                current = Computation(m.group(2), [], {})
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+                continue
+        if current is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, rtype, opcode = mi.group(1), mi.group(2), mi.group(3)
+            span = _operand_span(line, opcode)
+            operands = _OPERAND_NAME_RE.findall(span)
+            ins = Instruction(name, opcode, rtype, line, operands)
+            current.instructions.append(ins)
+            current.types[name] = rtype
+    return comps, entry
+
+
+def _operand_bytes(ins: Instruction, comp: Computation) -> float:
+    total = 0.0
+    for op in ins.operands:
+        t = comp.types.get(op)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    out = _shape_elems(ins.result_type)
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    lhs_t = comp.types.get(ins.operands[0]) if ins.operands else None
+    if mc and lhs_t:
+        dims = _first_shape_dims(lhs_t)
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out * k
+
+
+def _conv_flops(ins: Instruction, comp: Computation) -> float:
+    out = _shape_elems(ins.result_type)
+    if len(ins.operands) >= 2:
+        rhs_t = comp.types.get(ins.operands[1])
+        if rhs_t:
+            dims = _first_shape_dims(rhs_t)
+            if dims:
+                return 2.0 * out * math.prod(dims[:-1])
+    return 2.0 * out
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(d) for d in m.group(1).split(",")]
+        return math.prod(dims[1:]) if len(dims) > 1 else dims[0]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def while_trip_count(while_line: str, cond: Optional[Computation]) -> int:
+    m = _TRIP_RE.search(while_line)          # authoritative backend_config
+    if m:
+        return int(m.group(1))
+    if cond is not None:                     # fallback: bound constant in cond
+        consts = []
+        for ins in cond.instructions:
+            if ins.opcode == "constant":
+                mc = _CONST_RE.search(ins.line)
+                if mc:
+                    consts.append(int(mc.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+_SKIP_OPS = frozenset([
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-done",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "send-done", "recv-done", "custom-call",
+])
+
+_SLICING_OPS = frozenset(["dynamic-slice", "gather"])
+
+
+def _instr_traffic(ins: Instruction, comp: Computation) -> float:
+    """HBM bytes for one top-level instruction — slice-aware.
+
+    dynamic-slice/gather read only the slice (result-sized); DUS writes only
+    the update; everything else pays operands+result. Without this, scan
+    carry buffers (the (L, ...) stacked weights/ys sliced per layer) would be
+    billed at full-buffer size per trip — a ~L× overcount.
+    """
+    res = _shape_bytes(ins.result_type)
+    if ins.opcode in _SLICING_OPS:
+        return 2.0 * res
+    if ins.opcode == "dynamic-update-slice":
+        upd = (comp.types.get(ins.operands[1])
+               if len(ins.operands) > 1 else None)
+        return 2.0 * (_shape_bytes(upd) if upd else res)
+    if ins.opcode == "scatter":
+        upd = (comp.types.get(ins.operands[2])
+               if len(ins.operands) > 2 else None)
+        return 2.0 * (_shape_bytes(upd) if upd else res)
+    if ins.opcode == "broadcast":
+        return res
+    return res + _operand_bytes(ins, comp)
+
+
+def _fusion_traffic(fusion_ins: Instruction, comp: Computation,
+                    called: Optional[Computation],
+                    comps: Optional[Dict[str, Computation]] = None) -> float:
+    """Fusion-boundary traffic with slice-aware parameter consumption.
+
+    A fused computation's parameter that is consumed *only* through
+    dynamic-slice/gather reads just the slices; a fusion whose root is a
+    dynamic-update-slice writes just the update. kLoop fusions around a
+    per-layer weight slice otherwise bill the whole (L,...) stack per trip.
+    Wholesale-consumed parameters bill their *source* bytes (resolved
+    through pure-convert producers — CPU bf16-emulation correction).
+    """
+    if called is None:
+        return _shape_bytes(fusion_ins.result_type) + _operand_bytes(
+            fusion_ins, comp)
+    # map parameter name -> operand bytes as consumed
+    total = 0.0
+    param_names = {}
+    for ins in called.instructions:
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.line)
+            if m:
+                param_names[ins.name] = int(m.group(1))
+
+    uses_of: Dict[str, List[Instruction]] = defaultdict(list)
+    for ins in called.instructions:
+        for op in ins.operands:
+            uses_of[op].append(ins)
+
+    def _slice_consumed(u: Instruction, vname: str) -> Optional[float]:
+        """Bytes this use actually touches of value ``vname``, or None if it
+        consumes it wholesale.
+
+        * dynamic-update-slice *destination* (operand 0) counts as
+          slice-consumed: XLA aliases the buffer in place, so HBM pays only
+          the update window (billed at the root), not the whole (L, ...)
+          gradient/cache stack per loop trip.
+        * convert/bitcast/copy are transparent: the CPU backend's bf16
+          emulation wraps DUS in full-buffer convert pairs that a
+          native-bf16 TPU never materializes — follow through to the real
+          consumer. (See EXPERIMENTS.md §Perf, estimator notes.)
+        """
+        if u.opcode in _SLICING_OPS:
+            return 2.0 * _shape_bytes(u.result_type)
+        if u.opcode in ("convert", "bitcast", "copy", "reshape"):
+            inner = [_slice_consumed(uu, u.name) for uu in uses_of[u.name]]
+            if inner and all(b is not None for b in inner):
+                return sum(inner)
+            return None
+        if u.opcode == "dynamic-update-slice" and u.operands and \
+                u.operands[0] == vname and vname not in u.operands[1:]:
+            return 0.0
+        return None
+
+    for pname, pidx in param_names.items():
+        uses = uses_of[pname]
+        per_use = [_slice_consumed(u, pname) for u in uses]
+        if uses and all(b is not None for b in per_use):
+            total += sum(per_use)
+        else:
+            t = called.types.get(pname)
+            b = _shape_bytes(t) if t else 0.0
+            if comps is not None and pidx < len(fusion_ins.operands):
+                src = _source_bytes(fusion_ins.operands[pidx], comp, comps)
+                if src:
+                    b = min(b, src)
+            total += b
+
+    def _resolve_root(ins: Instruction) -> Instruction:
+        seen = 0
+        while ins.opcode in ("convert", "bitcast", "copy") and ins.operands \
+                and seen < 8:
+            nxt = next((i for i in called.instructions
+                        if i.name == ins.operands[0]), None)
+            if nxt is None:
+                break
+            ins, seen = nxt, seen + 1
+        return ins
+
+    root = called.instructions[-1] if called.instructions else None
+    root = _resolve_root(root) if root is not None else None
+    if root is not None and root.opcode == "dynamic-update-slice" and \
+            len(root.operands) > 1:
+        upd = called.types.get(root.operands[1])
+        if upd is None:   # update may itself be a convert of a parameter
+            upd_ins = next((i for i in called.instructions
+                            if i.name == root.operands[1]), None)
+            upd = upd_ins.result_type if upd_ins is not None else None
+        total += 2.0 * (_shape_bytes(upd) if upd else 0.0)
+    else:
+        total += _shape_bytes(fusion_ins.result_type)
+    return total
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-instruction attribution (hillclimb instrumentation):
+    # name -> (opcode, total bytes incl. trip multiplier, multiplier)
+    traffic_by_instr: Dict[str, Tuple[str, float, float]] = dataclasses.field(
+        default_factory=dict)
+    flops_by_instr: Dict[str, Tuple[str, float, float]] = dataclasses.field(
+        default_factory=dict)
+    coll_by_instr: Dict[str, Tuple[str, float, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def top_traffic(self, n: int = 15):
+        return sorted(self.traffic_by_instr.items(),
+                      key=lambda kv: -kv[1][1])[:n]
+
+    def top_flops(self, n: int = 15):
+        return sorted(self.flops_by_instr.items(),
+                      key=lambda kv: -kv[1][1])[:n]
+
+    def top_coll(self, n: int = 15):
+        return sorted(self.coll_by_instr.items(),
+                      key=lambda kv: -kv[1][1])[:n]
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "coll_bytes": self.coll_bytes,
+                "hbm_bytes": self.hbm_bytes,
+                "coll_by_op": dict(self.coll_by_op),
+                "coll_count": dict(self.coll_count),
+                "while_trips": dict(self.while_trips)}
+
+
+def attention_stub_flops(ins: Instruction, comp: Computation) -> float:
+    """Analytic MXU FLOPs for a flash-attention stub custom-call.
+
+    Identified by its operand signature: rank-4 float tensors
+    q (B,Sq,H,D), k (B,Skv,Hkv,D)[, v, do]. Three operands = forward
+    (2 dots), four = backward (5 dots); causal halves the pair count.
+    Non-matching callbacks bill zero FLOPs.
+    """
+    shapes = []
+    for op in ins.operands:
+        t = comp.types.get(op)
+        if not t:
+            continue
+        m = _SHAPE_RE.search(t)
+        if not m or not m.group(1).startswith(("f", "bf")):
+            continue
+        dims = _first_shape_dims(t)
+        if len(dims) == 4:
+            shapes.append(dims)
+    if len(shapes) < 2:
+        return 0.0
+    B, Sq, H, D = shapes[0]
+    Skv = shapes[1][1]
+    pairs = 0.5 * B * H * Sq * Skv      # causal
+    n_dots = 2 if len(shapes) == 3 else 5
+    return n_dots * 2.0 * pairs * D
+
+
+_PURE_CONVERT_OPS = frozenset([
+    "parameter", "convert", "bitcast", "copy", "reshape", "tuple",
+    "get-tuple-element", "transpose",
+])
+
+
+def _is_pure_convert_fusion(ins: Instruction, comps: Dict[str, Computation]
+                            ) -> bool:
+    """True if the fusion only moves/re-types data (no arithmetic).
+
+    The CPU backend has no native bf16: FloatNormalization wraps bf16
+    values in f32 convert fusions and runs collectives in f32. A native-
+    bf16 TPU materializes none of this — such fusions bill zero traffic and
+    consumers bill the *source* bytes (see ``_source_bytes``). Without this
+    correction the CPU-proxy roofline over-bills bf16 activation traffic
+    and collective bytes by up to 2x.
+    """
+    if ins.opcode != "fusion":
+        return False
+    m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+    called = comps.get(m.group(1)) if m else None
+    if called is None:
+        return False
+    return all(i.opcode in _PURE_CONVERT_OPS for i in called.instructions)
+
+
+def _source_bytes(name: str, comp: Computation,
+                  comps: Dict[str, Computation], depth: int = 0) -> float:
+    """Bytes of ``name`` resolved through pure-convert producers: the
+    narrowest dtype the value exists in along its convert chain."""
+    t = comp.types.get(name)
+    here = _shape_bytes(t) if t else 0.0
+    if depth >= 4:
+        return here
+    prod = next((i for i in comp.instructions if i.name == name), None)
+    if prod is None:
+        return here
+    if prod.opcode in ("convert", "bitcast", "copy") and prod.operands:
+        src = _source_bytes(prod.operands[0], comp, comps, depth + 1)
+        return min(here, src) if src else here
+    if _is_pure_convert_fusion(prod, comps) and prod.operands:
+        # narrowest representation along the inside convert chain: a CPU
+        # f32->bf16->f32 round-trip marks a value that is bf16 on TPU
+        m = re.search(r"calls=%?([\w.\-]+)", prod.line)
+        called = comps.get(m.group(1)) if m else None
+        if called is not None:
+            inner = [_shape_bytes(i.result_type)
+                     for i in called.instructions
+                     if i.opcode in ("parameter", "convert", "bitcast",
+                                     "copy", "reshape", "transpose")]
+            inner = [b for b in inner if b > 0]
+            if inner:
+                here = min(here, min(inner))
+        srcs = [_source_bytes(o, comp, comps, depth + 1)
+                for o in prod.operands]
+        srcs = [s for s in srcs if s]
+        if srcs:
+            return min(here, max(srcs))
+    return here
+
+
+def analyze(hlo_text: str, default_group: int = 1) -> Analysis:
+    comps, entry = parse_module(hlo_text)
+    out = Analysis()
+    if entry is None:
+        for name in comps:
+            if "main" in name:
+                entry = name
+                break
+    if entry is None:
+        return out
+
+    def _bill_traffic(ins: Instruction, bytes_: float, mult: float):
+        out.hbm_bytes += mult * bytes_
+        old = out.traffic_by_instr.get(ins.name)
+        tot = (old[1] if old else 0.0) + mult * bytes_
+        out.traffic_by_instr[ins.name] = (ins.opcode, tot, mult)
+
+    def _bill_flops(ins: Instruction, fl: float, mult: float):
+        out.flops += mult * fl
+        old = out.flops_by_instr.get(ins.name)
+        tot = (old[1] if old else 0.0) + mult * fl
+        out.flops_by_instr[ins.name] = (ins.opcode, tot, mult)
+
+    def _visit_fusion_flops(comp: Computation, mult: float):
+        """Dots/convs inside fused computations (flops only; traffic is
+        billed at the fusion boundary)."""
+        for ins in comp.instructions:
+            if ins.opcode == "dot":
+                _bill_flops(ins, _dot_flops(ins, comp), mult)
+            elif ins.opcode == "convolution":
+                _bill_flops(ins, _conv_flops(ins, comp), mult)
+
+    def visit(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                body = mb.group(1) if mb else None
+                cond = mcnd.group(1) if mcnd else None
+                trips = while_trip_count(ins.line, comps.get(cond))
+                if body:
+                    out.while_trips[body] = trips
+                    visit(body, mult * trips)
+                continue
+            if ins.opcode == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                names = []
+                if mbr:
+                    names = [b.strip().lstrip("%")
+                             for b in mbr.group(1).split(",")]
+                else:
+                    for attr in ("true_computation", "false_computation"):
+                        m = re.search(attr + r"=%?([\w.\-]+)", ins.line)
+                        if m:
+                            names.append(m.group(1))
+                for b in names:
+                    visit(b, mult)
+                continue
+            if ins.opcode == "fusion":
+                if _is_pure_convert_fusion(ins, comps):
+                    continue   # CPU bf16-emulation artifact: no TPU traffic
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                called = comps.get(m.group(1)) if m else None
+                if called is not None:
+                    _visit_fusion_flops(called, mult)
+                _bill_traffic(ins, _fusion_traffic(ins, comp, called, comps),
+                              mult)
+                continue
+            if ins.opcode == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                if m:
+                    visit(m.group(1), mult)
+                continue
+            if ins.opcode == "dot":
+                _bill_flops(ins, _dot_flops(ins, comp), mult)
+                _bill_traffic(ins, _shape_bytes(ins.result_type)
+                              + _operand_bytes(ins, comp), mult)
+                continue
+            if ins.opcode == "convolution":
+                _bill_flops(ins, _conv_flops(ins, comp), mult)
+                _bill_traffic(ins, _shape_bytes(ins.result_type)
+                              + _operand_bytes(ins, comp), mult)
+                continue
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                opnd = _operand_bytes(ins, comp)
+                res = _shape_bytes(ins.result_type)
+                # native-bf16 correction: a collective fed by a pure f32
+                # convert of a bf16 value moves bf16 on a TPU wire
+                opnd_src = sum(_source_bytes(o, comp, comps)
+                               for o in ins.operands)
+                if 0 < opnd_src < opnd:
+                    res *= opnd_src / opnd
+                    opnd = opnd_src
+                g = _group_size(ins.line, default_group)
+                if base == "all-reduce":
+                    wire = 2.0 * opnd * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    wire = res * (g - 1) / max(g, 1)
+                elif base in ("reduce-scatter", "all-to-all",
+                              "ragged-all-to-all"):
+                    wire = opnd * (g - 1) / max(g, 1)
+                else:   # collective-permute
+                    wire = opnd
+                out.coll_bytes += mult * wire
+                out.coll_by_op[base] += mult * wire
+                out.coll_count[base] += mult
+                old = out.coll_by_instr.get(ins.name)
+                out.coll_by_instr[ins.name] = (
+                    base, (old[1] if old else 0.0) + mult * wire, mult)
+                continue
+            if ins.opcode == "custom-call" and "callback" in ins.line:
+                # kernel stub (e.g. flash attention): operands+result IS the
+                # kernel's DMA schedule; MXU flops assigned analytically
+                _bill_traffic(ins, _instr_traffic(ins, comp), mult)
+                _bill_flops(ins, attention_stub_flops(ins, comp), mult)
+                continue
+            if ins.opcode in _SKIP_OPS:
+                continue
+            # generic top-level op: pays a materialization round-trip
+            _bill_traffic(ins, _instr_traffic(ins, comp), mult)
+
+    visit(entry, 1.0)
+    return out

@@ -1,0 +1,7 @@
+from repro.models.transformer import (ModelConfig, cache_axes, decode_step,
+                                      forward, init_params, lm_loss,
+                                      make_decode_caches, param_axes, prefill)
+
+__all__ = ["ModelConfig", "cache_axes", "decode_step", "forward",
+           "init_params", "lm_loss", "make_decode_caches", "param_axes",
+           "prefill"]

@@ -1,0 +1,116 @@
+"""Shared transformer building blocks: norms, RoPE, MLPs, embeddings.
+
+Everything is a pure function over a params dict; each ``init_*`` has a
+matching ``*_axes`` giving the logical sharding axes of every leaf (same
+pytree structure) so the launcher can derive NamedShardings mechanically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import logical_shard
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def rope_table(positions, d_head: int, theta: float):
+    """positions (...,S) -> cos/sin tables (...,S, d_head/2), f32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x (B,S,H,D); cos/sin (B,S,half) or (S,half). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --- MLP ---------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    mult = 2 if act == "swiglu" else 1
+    return {
+        "w_in": _normal(k1, (d_model, mult * d_ff), dtype, d_model ** -0.5),
+        "w_out": _normal(k2, (d_ff, d_model), dtype, d_ff ** -0.5),
+    }
+
+
+def mlp_axes() -> dict:
+    return {"w_in": ("wt_fsdp", "ff"), "w_out": ("ff", "wt_fsdp")}
+
+
+def apply_mlp(x, p, act: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = logical_shard(h, "batch", "seq", "ff")
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return logical_shard(out, "batch", "seq", "d_model")
+
+
+# --- Embedding / head --------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _normal(k1, (vocab, d_model), dtype, 1.0)}
+    if not tie:
+        p["head"] = _normal(k2, (d_model, vocab), dtype, d_model ** -0.5)
+    return p
+
+
+def embed_axes(tie: bool) -> dict:
+    p = {"tok": ("vocab", "wt_fsdp")}
+    if not tie:
+        p["head"] = ("wt_fsdp", "vocab")
+    return p
+
+
+def embed_tokens(tokens, p, dtype):
+    out = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    return logical_shard(out, "batch", "seq", "d_model")
+
+
+def lm_logits(x, p, true_vocab: int | None = None):
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if true_vocab is not None and true_vocab < w.shape[-1]:
+        pad_mask = jnp.where(jnp.arange(w.shape[-1]) < true_vocab, 0.0, -1e30)
+        logits = logits + pad_mask
+    return logits

@@ -1,0 +1,228 @@
+"""Top-k MoE with expert parallelism.
+
+Three execution paths chosen by context (same math, same params):
+
+  * ``dense``     — no mesh (CPU smoke tests): every expert computed for every
+                    token, combined by routing weights. Exact for any top-k.
+  * ``ep_a2a``    — training/prefill on a mesh: tokens are sequence-sharded
+                    over the EP ('model') axis inside a ``shard_map``; each
+                    shard routes its tokens, packs fixed-capacity per-shard
+                    send buffers, ``all_to_all``s them to the expert owners,
+                    runs a batched per-expert GEMM, and reverses the path.
+                    Fixed capacity (the paper's blocking mindset: bounded
+                    on-chip working set, slack traded like halo redundancy)
+                    keeps every shape static. Expert weights are stored
+                    ZeRO-3 style (FSDP over 'data' on the ff dim) and
+                    all-gathered per layer inside the shard_map.
+  * ``ep_bcast``  — decode (few tokens): tokens replicated over the EP axis;
+                    every shard computes its local experts for all tokens,
+                    masked by routing, then ``psum`` combines. No dispatch
+                    traffic; compute waste bounded by E_local/top_k.
+
+Aux losses (switch-style load balance + router z-loss) are returned alongside.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal
+from repro.parallel import current_rules, logical_shard
+
+
+def init_moe(key, d_model: int, n_experts: int, d_ff: int, act: str,
+             dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    mult = 2 if act == "swiglu" else 1
+    return {
+        "router": _normal(k1, (d_model, n_experts), jnp.float32,
+                          d_model ** -0.5),
+        "w_in": _normal(k2, (n_experts, d_model, mult * d_ff), dtype,
+                        d_model ** -0.5),
+        "w_out": _normal(k3, (n_experts, d_ff, d_model), dtype,
+                         d_ff ** -0.5),
+    }
+
+
+def moe_axes() -> dict:
+    return {"router": (None, None),
+            "w_in": ("experts", None, "wt_fsdp"),
+            "w_out": ("experts", "wt_fsdp", None)}
+
+
+def _act(h, act: str, dtype):
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    return jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+
+
+def _route(x2d, router, top_k: int):
+    """x2d (T, D) -> probs/ids (T, k) + aux losses. f32 router math."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)   # norm_topk_prob
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    E = router.shape[1]
+    f = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    P = probs.mean(axis=0)
+    aux = E * jnp.sum(f * P)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return w, ids, aux + 1e-3 * z
+
+
+def _dense_path(x, p, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    x2 = x.reshape(B * S, D)
+    w, ids, aux = _route(x2, p["router"], cfg.top_k)
+    E = cfg.n_experts
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)       # (T, k, E)
+    comb = jnp.einsum("tk,tke->te", w, onehot).astype(x.dtype)
+    h = jnp.einsum("td,edf->tef", x2, p["w_in"])
+    h = _act(h, cfg.act, x.dtype)
+    y = jnp.einsum("tef,efd->ted", h, p["w_out"])
+    out = jnp.einsum("ted,te->td", y, comb)
+    return out.reshape(B, S, D), aux
+
+
+def _fsdp_gather(w, rules, axis: int):
+    fs = rules.get("wt_fsdp")
+    if not fs:
+        return w
+    names = tuple(fs) if isinstance(fs, (tuple, list)) else (fs,)
+    for name in names:
+        w = jax.lax.all_gather(w, name, axis=axis, tiled=True)
+    return w
+
+
+def _ep_a2a_path(x, p, cfg, mesh, rules):
+    """Train/prefill EP: sequence-sharded tokens, fixed-capacity all_to_all."""
+    ep = rules["experts"]
+    dp = rules["batch"]
+    dp_t = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+    n_ep = mesh.shape[ep]
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // n_ep
+    from jax.sharding import PartitionSpec as P
+    x_spec = P(dp_t, ep, None)
+    w_in_spec = P(ep, None, rules.get("wt_fsdp"))
+    w_out_spec = P(ep, rules.get("wt_fsdp"), None)
+
+    def local(x_l, router, w_in_l, w_out_l):
+        Bl, Sl, D = x_l.shape
+        T = Bl * Sl
+        x2 = x_l.reshape(T, D)
+        w, ids, aux = _route(x2, router, k)
+        aux = jax.lax.pmean(aux, (*dp_t, ep))
+
+        C_s = max(8, -(-T * k * int(8 * cfg.moe_capacity) // (8 * n_ep)))
+        C_s = -(-C_s // 8) * 8
+        e_f = ids.reshape(-1)                       # (T*k,) global expert ids
+        w_f = w.reshape(-1)
+        t_f = jnp.arange(T * k) // k
+        dest = e_f // E_loc
+        order = jnp.argsort(dest * (E + 1) + e_f)   # group by dest, then expert
+        dest_s, e_s, t_s, w_s = dest[order], e_f[order], t_f[order], w_f[order]
+        seg = jnp.searchsorted(dest_s, jnp.arange(n_ep), side="left")
+        pos = jnp.arange(T * k) - seg[dest_s]
+        keep = pos < C_s
+        send_x = jnp.zeros((n_ep, C_s, D), x_l.dtype).at[
+            dest_s, jnp.where(keep, pos, C_s)].set(x2[t_s], mode="drop")
+        send_e = jnp.full((n_ep, C_s), -1, jnp.int32).at[
+            dest_s, jnp.where(keep, pos, C_s)].set(e_s, mode="drop")
+
+        recv_x = jax.lax.all_to_all(send_x, ep, 0, 0, tiled=True)
+        recv_e = jax.lax.all_to_all(send_e[..., None], ep, 0, 0,
+                                    tiled=True)[..., 0]
+
+        my_base = jax.lax.axis_index(ep) * E_loc
+        el = jnp.where(recv_e >= 0, recv_e - my_base, E_loc).reshape(-1)
+        N = n_ep * C_s
+        xr = recv_x.reshape(N, D)
+        order2 = jnp.argsort(el)
+        el_s = el[order2]
+        C_e = max(8, -(-N // E_loc))
+        seg2 = jnp.searchsorted(el_s, jnp.arange(E_loc), side="left")
+        pos2 = jnp.arange(N) - seg2[jnp.clip(el_s, 0, E_loc - 1)]
+        keep2 = (el_s < E_loc) & (pos2 < C_e)
+        buf = jnp.zeros((E_loc, C_e, D), x_l.dtype).at[
+            jnp.where(keep2, el_s, E_loc),
+            jnp.where(keep2, pos2, C_e)].set(xr[order2], mode="drop")
+
+        w_in_f = _fsdp_gather(w_in_l, rules, axis=2)
+        w_out_f = _fsdp_gather(w_out_l, rules, axis=1)
+        h = jnp.einsum("ecd,edf->ecf", buf, w_in_f)
+        h = _act(h, cfg.act, x_l.dtype)
+        yb = jnp.einsum("ecf,efd->ecd", h, w_out_f)
+
+        # reverse second dispatch
+        y_r = yb[jnp.clip(el_s, 0, E_loc - 1),
+                 jnp.clip(pos2, 0, C_e - 1)] * keep2[:, None]
+        y_recv = jnp.zeros((N, D), x_l.dtype).at[order2].set(y_r)
+        y_send = jax.lax.all_to_all(
+            y_recv.reshape(n_ep, C_s, D), ep, 0, 0, tiled=True)
+        # combine on the sender
+        got = y_send[dest_s, jnp.clip(pos, 0, C_s - 1)] * keep[:, None]
+        out = jnp.zeros((T, D), x_l.dtype).at[t_s].add(
+            got * w_s[:, None].astype(x_l.dtype))
+        return out.reshape(Bl, Sl, D), aux
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(x_spec, P(None, None), w_in_spec, w_out_spec),
+                       out_specs=(x_spec, P()), check_vma=False)
+    return fn(x, p["router"], p["w_in"], p["w_out"])
+
+
+def _ep_bcast_path(x, p, cfg, mesh, rules):
+    """Decode EP: tokens replicated over EP axis; local experts masked+psum."""
+    ep = rules["experts"]
+    dp = rules["batch"]
+    dp_t = tuple(dp) if isinstance(dp, (tuple, list)) else (dp,)
+    n_ep = mesh.shape[ep]
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // n_ep
+    from jax.sharding import PartitionSpec as P
+    x_spec = P(dp_t, None, None)
+
+    def local(x_l, router, w_in_l, w_out_l):
+        Bl, Sl, D = x_l.shape
+        x2 = x_l.reshape(Bl * Sl, D)
+        w, ids, aux = _route(x2, router, k)
+        aux = jax.lax.pmean(aux, (*dp_t, ep))
+        my_base = jax.lax.axis_index(ep) * E_loc
+        onehot = jax.nn.one_hot(ids - my_base, E_loc, dtype=jnp.float32)
+        comb = jnp.einsum("tk,tke->te", w, onehot).astype(x_l.dtype)
+        w_in_f = _fsdp_gather(w_in_l, rules, axis=2)
+        w_out_f = _fsdp_gather(w_out_l, rules, axis=1)
+        h = jnp.einsum("td,edf->tef", x2, w_in_f)
+        h = _act(h, cfg.act, x_l.dtype)
+        y = jnp.einsum("tef,efd->ted", h, w_out_f)
+        out = jnp.einsum("ted,te->td", y, comb)
+        out = jax.lax.psum(out, ep)
+        return out.reshape(Bl, Sl, D), aux
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(x_spec, P(None, None),
+                                 P(ep, None, rules.get("wt_fsdp")),
+                                 P(ep, rules.get("wt_fsdp"), None)),
+                       out_specs=(x_spec, P()), check_vma=False)
+    return fn(x, p["router"], p["w_in"], p["w_out"])
+
+
+def apply_moe(x, p, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    mesh, rules = current_rules()
+    if mesh is None or rules is None or rules.get("experts") is None:
+        return _dense_path(x, p, cfg)
+    n_ep = mesh.shape[rules["experts"]]
+    if cfg.n_experts % n_ep:
+        return _dense_path(x, p, cfg)
+    S = x.shape[1]
+    if S % n_ep == 0 and S >= n_ep:          # train / prefill
+        return _ep_a2a_path(x, p, cfg, mesh, rules)
+    return _ep_bcast_path(x, p, cfg, mesh, rules)

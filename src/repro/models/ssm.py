@@ -1,0 +1,208 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked scan + decode step.
+
+The SSD chunked scan *is* the paper's temporal blocking applied to a linear
+recurrence (DESIGN.md §5): a chunk of Q time-steps is processed per HBM
+round-trip (intra-chunk quadratic form), and the only cross-chunk traffic is
+the (H, P, N) carried state — the rolling-window analogue. The chunk length
+plays ``par_time``; growing it trades on-chip working set (the Q×Q score
+tile) for fewer state materializations, exactly the paper's
+area-vs-redundancy trade.
+
+Math follows the minimal SSD reference (Mamba2 paper, listing 1), with B/C
+group-expanded to flat heads for clean head-sharding ('heads' over the
+'model' mesh axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, rms_norm
+from repro.parallel import logical_shard
+
+
+def init_ssm(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.d_state
+    d_inner = H * P
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": _normal(ks[0], (D, d_inner), dtype, D ** -0.5),
+        "w_x": _normal(ks[1], (D, d_inner), dtype, D ** -0.5),
+        "w_B": _normal(ks[2], (D, G * N), dtype, D ** -0.5),
+        "w_C": _normal(ks[3], (D, G * N), dtype, D ** -0.5),
+        "w_dt": _normal(ks[4], (D, H), dtype, D ** -0.5),
+        "conv_x": _normal(ks[5], (cfg.d_conv, d_inner), dtype, 0.5),
+        "conv_bc": _normal(ks[6], (cfg.d_conv, 2 * G * N), dtype, 0.5),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": _normal(ks[7], (d_inner, D), dtype, d_inner ** -0.5),
+    }
+
+
+def ssm_axes() -> dict:
+    return {"w_z": ("wt_fsdp", "heads"), "w_x": ("wt_fsdp", "heads"),
+            "w_B": ("wt_fsdp", None), "w_C": ("wt_fsdp", None),
+            "w_dt": ("wt_fsdp", "heads"),
+            "conv_x": (None, "heads"), "conv_bc": (None, None),
+            "A_log": ("heads",), "D_skip": ("heads",), "dt_bias": ("heads",),
+            "norm": ("heads",), "w_out": ("heads", "wt_fsdp")}
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds (no conv HLO). x (B,S,C)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(dc))
+    return out
+
+
+def _silu(x):
+    return jax.nn.silu(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan(xh, Bh, Ch, dt, A, chunk: int, init_state=None):
+    """Chunked SSD. xh (B,S,H,P); Bh/Ch (B,S,H,N); dt (B,S,H) f32; A (H,) f32.
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    dtype = xh.dtype
+
+    dA = (dt * A).reshape(Bsz, nc, Q, H)                # (B,nc,Q,H), <= 0
+    cs = jnp.cumsum(dA, axis=2)
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+
+    # --- intra-chunk (quadratic within the temporal block) ------------------
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (b,c,i,j,h)
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))                 # (b,c,h,i,j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask, scores * decay, 0.0)
+    M = M * jnp.transpose(dtc, (0, 1, 3, 2))[:, :, :, None, :]    # * dt_j
+    M = logical_shard(M, "batch", None, "heads", None, None)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M.astype(dtype), xc)
+
+    # --- per-chunk states (what crosses the temporal block) -----------------
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                    # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bc.astype(jnp.float32),
+                        (decay_end * dtc).astype(jnp.float32),
+                        xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                        # (b,c,h)
+
+    def scan_body(carry, inp):
+        st, cd = inp
+        prev = carry
+        new = st + cd[:, :, None, None] * prev
+        return new, prev
+
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prevs = jax.lax.scan(
+        scan_body, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prevs = prevs.swapaxes(0, 1)                                   # (b,c,h,p,n)
+
+    # --- inter-chunk contribution -------------------------------------------
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Cc.astype(jnp.float32), prevs, jnp.exp(cs))
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(dtype), final.astype(dtype)
+
+
+def apply_ssm(x, p, cfg, init_state=None) -> Tuple[jnp.ndarray, tuple]:
+    """Train/prefill. x (B,S,D) -> (out, (final ssm state, conv tail)).
+
+    The conv tail is the last ``d_conv-1`` pre-activation conv inputs in the
+    decode-cache channel layout (x | B | C) — the prefill→decode handoff.
+    """
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.d_state
+    B_, S, D = x.shape
+    rep = H // G
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    x_pre = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    bc_pre = jnp.concatenate([jnp.einsum("bsd,dg->bsg", x, p["w_B"]),
+                              jnp.einsum("bsd,dg->bsg", x, p["w_C"])], axis=-1)
+    tail = jnp.concatenate([x_pre, bc_pre], axis=-1)[:, -(cfg.d_conv - 1):, :]
+    if S < cfg.d_conv - 1:
+        tail = jnp.pad(tail, ((0, 0), (cfg.d_conv - 1 - S, 0), (0, 0)))
+    xi = _silu(_causal_conv(x_pre, p["conv_x"]))
+    bc = _silu(_causal_conv(bc_pre, p["conv_bc"]))
+    Bg, Cg = jnp.split(bc, 2, axis=-1)
+    Bh = jnp.repeat(Bg.reshape(B_, S, G, N), rep, axis=2)
+    Ch = jnp.repeat(Cg.reshape(B_, S, G, N), rep, axis=2)
+    xh = xi.reshape(B_, S, H, P)
+    xh = logical_shard(xh, "batch", "seq", "heads", None)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_scan(xh, Bh, Ch, dt, A, cfg.ssd_chunk, init_state)
+    y = y + (p["D_skip"].astype(jnp.float32)[:, None]
+             * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, H * P)
+    y = rms_norm(y * _silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return logical_shard(out, "batch", "seq", "d_model"), (final, tail)
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # (B, d_conv-1, d_inner + 2*G*N)
+    state: jnp.ndarray   # (B, H, P, N)
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.d_state
+    ch = H * P + 2 * G * N
+    return SSMCache(jnp.zeros((batch, cfg.d_conv - 1, ch), dtype),
+                    jnp.zeros((batch, H, P, N), dtype))
+
+
+def decode_ssm(x, p, cfg, cache: SSMCache) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token decode. x (B,1,D)."""
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.d_state
+    B_ = x.shape[0]
+    rep = H // G
+    d_inner = H * P
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])[:, 0]
+    xbc_new = jnp.concatenate(
+        [jnp.einsum("bsd,di->bsi", x, p["w_x"])[:, 0],
+         jnp.einsum("bsd,dg->bsg", x, p["w_B"])[:, 0],
+         jnp.einsum("bsd,dg->bsg", x, p["w_C"])[:, 0]], axis=-1)
+    window = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=1)
+    conv_out = _silu(jnp.einsum("bkc,kc->bc", window, conv_w))
+    xi, Bg, Cg = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    xh = xi.reshape(B_, H, P)
+    Bh = jnp.repeat(Bg.reshape(B_, G, N), rep, axis=1)
+    Ch = jnp.repeat(Cg.reshape(B_, G, N), rep, axis=1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"])[:, 0].astype(jnp.float32)
+        + p["dt_bias"])                                        # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dAe = jnp.exp(dt * A)                                      # (B,H)
+    state = cache.state.astype(jnp.float32)
+    state = (state * dAe[:, :, None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt,
+                          xh.astype(jnp.float32), Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + p["D_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, d_inner).astype(x.dtype)
+    y = rms_norm(y * _silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"])[:, None, :]
+    new_cache = SSMCache(window[:, 1:].astype(cache.conv.dtype),
+                         state.astype(cache.state.dtype))
+    return out, new_cache

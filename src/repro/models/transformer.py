@@ -1,0 +1,586 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / encoder-decoder stacks.
+
+One frozen ``ModelConfig`` describes every assigned architecture; params are
+plain pytrees with scan-stacked per-layer leaves; ``param_axes(cfg)`` returns
+the logical-sharding spec tree with identical structure (the launcher maps it
+to NamedShardings).  All forward paths are pure functions usable under jit,
+shard_map, and remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import (KVCache, attention_axes, cross_attention,
+                                    decode_attention, init_attention,
+                                    self_attention, update_cache)
+from repro.parallel import logical_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv: int = 0
+    d_head: int = 128
+    d_ff: int = 0
+    vocab: int = 32000
+    act: str = "swiglu"
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity: float = 1.25
+    # SSM
+    d_state: int = 0
+    d_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 8
+    ssd_chunk: int = 256
+    # hybrid (Zamba2): groups of [1 shared attn+MLP block, group_size-1 mamba]
+    hybrid_group: int = 6
+    # enc-dec
+    n_enc_layers: int = 0
+    # modality stubs
+    input_mode: str = "tokens"     # tokens | embeds_prefix | frames
+    prefix_len: int = 0            # vlm: patch positions at seq start
+    # perf knobs (hillclimbable)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    loss_chunk: int = 1024
+    remat_policy: str = "full"     # full | dots | none
+    dtype: str = "float32"
+    # attention implementation: "xla" (chunked online-softmax, runs
+    # anywhere), "pallas" (flash kernel; interpret mode off-TPU), "stub"
+    # (custom-call stand-in lowered by the dry-run so the roofline bills the
+    # kernel's true DMA traffic — see kernels/flash_attention.py)
+    attn_impl: str = "xla"
+    # sub-quadratic? (for long_500k eligibility)
+    @property
+    def subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (Megatron-style) so the vocab
+        dim always divides the 16-way TP axis; padded logits are masked."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def jdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline accounting)."""
+        D, V = self.d_model, self.vocab
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        att = D * (self.n_heads + 2 * self.n_kv) * self.d_head \
+            + self.n_heads * self.d_head * D
+        mult = 2 if self.act == "swiglu" else 1
+        mlp = D * mult * self.d_ff + self.d_ff * D
+        moe = (self.n_experts * (D * mult * self.d_ff + self.d_ff * D)
+               + D * self.n_experts) if self.family == "moe" else 0
+        H, P, G, N = (self.ssm_heads, self.ssm_head_dim, self.ssm_groups,
+                      self.d_state)
+        di = H * P
+        ssm = (2 * D * di + 2 * D * G * N + D * H + di * D
+               + self.d_conv * (di + 2 * G * N) + 3 * H + di)
+        if self.family == "dense" or self.family == "vlm":
+            return emb + self.n_layers * (att + mlp)
+        if self.family == "moe":
+            return emb + self.n_layers * (att + moe)
+        if self.family == "ssm":
+            return emb + self.n_layers * ssm
+        if self.family == "hybrid":
+            n_groups = self.n_layers // self.hybrid_group
+            n_mamba = self.n_layers - n_groups
+            return emb + n_mamba * ssm + (att + mlp)
+        if self.family == "encdec":
+            return emb + self.n_enc_layers * (att + mlp) \
+                + self.n_layers * (2 * att + mlp)
+        raise ValueError(self.family)
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of n_experts experts)."""
+        if self.family != "moe":
+            return self.n_params
+        D = self.d_model
+        mult = 2 if self.act == "swiglu" else 1
+        expert = D * mult * self.d_ff + self.d_ff * D
+        inactive = self.n_layers * (self.n_experts - self.top_k) * expert
+        return self.n_params - inactive
+
+
+# --- per-block init / axes ---------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    dt = cfg.jdtype
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln": jnp.ones((D,), dt), "ssm": SSM.init_ssm(ks[0], cfg, dt)}
+    p = {"ln1": jnp.ones((D,), dt),
+         "attn": init_attention(ks[0], D, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                                cfg.qk_norm, dt),
+         "ln2": jnp.ones((D,), dt)}
+    if kind == "moe":
+        p["moe"] = MOE.init_moe(ks[1], D, cfg.n_experts, cfg.d_ff, cfg.act, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], D, cfg.d_ff, cfg.act, dt)
+    if kind == "dec":
+        p["ln_x"] = jnp.ones((D,), dt)
+        p["xattn"] = init_attention(ks[2], D, cfg.n_heads, cfg.n_kv,
+                                    cfg.d_head, False, dt)
+    return p
+
+
+def _block_axes(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "ssm":
+        return {"ln": (None,), "ssm": SSM.ssm_axes()}
+    p = {"ln1": (None,), "attn": attention_axes(cfg.qk_norm), "ln2": (None,)}
+    if kind == "moe":
+        p["moe"] = MOE.moe_axes()
+    else:
+        p["mlp"] = L.mlp_axes()
+    if kind == "dec":
+        p["ln_x"] = (None,)
+        p["xattn"] = attention_axes(False)
+    return p
+
+
+def _stack_init(key, cfg, kind, n):
+    return jax.vmap(lambda k: _init_block(k, cfg, kind))(
+        jax.random.split(key, n))
+
+
+def _stack_axes(cfg, kind):
+    return jax.tree.map(lambda ax: ("layers", *ax), _block_axes(cfg, kind),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# --- model init ---------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    params: dict = {
+        "embed": L.init_embed(ks[0], cfg.padded_vocab, cfg.d_model, dt,
+                              cfg.tie_embeddings),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_init(ks[1], cfg, "dense", cfg.n_layers)
+    elif cfg.family == "moe":
+        params["blocks"] = _stack_init(ks[1], cfg, "moe", cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(ks[1], cfg, "ssm", cfg.n_layers)
+    elif cfg.family == "hybrid":
+        g = cfg.hybrid_group
+        n_groups = cfg.n_layers // g
+        tail = cfg.n_layers - n_groups * g
+        per_group = g - 1
+        params["shared"] = _init_block(ks[1], cfg, "dense")
+        params["groups"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, "ssm", per_group))(
+                jax.random.split(ks[2], n_groups))
+        params["tail"] = _stack_init(ks[3], cfg, "ssm", max(tail, 1)) \
+            if tail else None
+    elif cfg.family == "encdec":
+        params["enc_blocks"] = _stack_init(ks[1], cfg, "dense",
+                                           cfg.n_enc_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+        params["blocks"] = _stack_init(ks[2], cfg, "dec", cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "hybrid" and params.get("tail") is None:
+        params.pop("tail")
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    axes: dict = {
+        "embed": L.embed_axes(cfg.tie_embeddings),
+        "final_norm": (None,),
+    }
+    if cfg.family in ("dense", "vlm"):
+        axes["blocks"] = _stack_axes(cfg, "dense")
+    elif cfg.family == "moe":
+        axes["blocks"] = _stack_axes(cfg, "moe")
+    elif cfg.family == "ssm":
+        axes["blocks"] = _stack_axes(cfg, "ssm")
+    elif cfg.family == "hybrid":
+        axes["shared"] = _block_axes(cfg, "dense")
+        axes["groups"] = jax.tree.map(
+            lambda ax: ("layers", *ax), _stack_axes(cfg, "ssm"),
+            is_leaf=lambda x: isinstance(x, tuple))
+        if cfg.n_layers % cfg.hybrid_group:
+            axes["tail"] = _stack_axes(cfg, "ssm")
+    elif cfg.family == "encdec":
+        axes["enc_blocks"] = _stack_axes(cfg, "dense")
+        axes["enc_norm"] = (None,)
+        axes["blocks"] = _stack_axes(cfg, "dec")
+    return axes
+
+
+# --- forward (train / prefill) ------------------------------------------------
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)   # full
+
+
+def _dense_body(cfg, *, causal=True, kind="dense", memory=None,
+                collect=False):
+    def body(carry, bp):
+        x, aux = carry
+        pos = jnp.arange(x.shape[1])
+        h = self_attention(L.rms_norm(x, bp["ln1"], cfg.norm_eps), bp["attn"],
+                           cfg, pos, causal=causal, return_kv=collect)
+        kv = None
+        if collect:
+            h, kv = h
+        x = logical_shard(x + h, "batch", "seq", "d_model")
+        if kind == "dec":
+            h = cross_attention(L.rms_norm(x, bp["ln_x"], cfg.norm_eps),
+                                memory, bp["xattn"], cfg)
+            x = logical_shard(x + h, "batch", "seq", "d_model")
+        xn = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            h, a = MOE.apply_moe(xn, bp["moe"], cfg)
+            aux = aux + a
+        else:
+            h = L.apply_mlp(xn, bp["mlp"], cfg.act)
+        return (logical_shard(x + h, "batch", "seq", "d_model"), aux), kv
+    return body
+
+
+def _ssm_body(cfg, collect=False):
+    def body(carry, bp):
+        x, aux = carry
+        h, handoff = SSM.apply_ssm(L.rms_norm(x, bp["ln"], cfg.norm_eps),
+                                   bp["ssm"], cfg)
+        ys = handoff if collect else None
+        return (logical_shard(x + h, "batch", "seq", "d_model"), aux), ys
+    return body
+
+
+def forward(params, cfg: ModelConfig, tokens, *, embeds=None, frames=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (hidden (B,S,D), aux_loss scalar).
+
+    ``embeds``: (B, prefix, D) precomputed modality embeddings (vlm),
+    ``frames``: (B, S_enc, D) encoder-side frame embeddings (encdec stub).
+    """
+    dt = cfg.jdtype
+    x = L.embed_tokens(tokens, params["embed"], dt)
+    if cfg.family == "vlm" and embeds is not None:
+        x = jnp.concatenate([embeds.astype(dt), x], axis=1)
+    aux0 = jnp.zeros((), jnp.float32)
+    pol = cfg.remat_policy
+
+    if cfg.family in ("dense", "vlm"):
+        body = _remat(_dense_body(cfg), pol)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    elif cfg.family == "moe":
+        body = _remat(_dense_body(cfg, kind="moe"), pol)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    elif cfg.family == "ssm":
+        body = _remat(_ssm_body(cfg), pol)
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        attn_body = _remat(_dense_body(cfg), pol)
+        mamba_body = _remat(_ssm_body(cfg), pol)
+
+        def group_body(carry, gp):
+            c, _ = attn_body(carry, shared)
+            c, _ = jax.lax.scan(mamba_body, c, gp)
+            return c, None
+        (x, aux), _ = jax.lax.scan(group_body, (x, aux0), params["groups"])
+        if "tail" in params:
+            (x, aux), _ = jax.lax.scan(mamba_body, (x, aux), params["tail"])
+    elif cfg.family == "encdec":
+        assert frames is not None, "encdec needs frame embeddings"
+        enc_body = _remat(_dense_body(cfg, causal=False), pol)
+        (mem, _), _ = jax.lax.scan(enc_body, (frames.astype(dt), aux0),
+                                   params["enc_blocks"])
+        mem = L.rms_norm(mem, params["enc_norm"], cfg.norm_eps)
+        dec_body = _remat(_dense_body(cfg, kind="dec", memory=mem), pol)
+        (x, aux), _ = jax.lax.scan(dec_body, (x, aux0), params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """Chunked softmax cross-entropy (bounded logits memory)."""
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          embeds=batch.get("embeds"),
+                          frames=batch.get("frames"))
+    labels = batch["labels"]
+    if cfg.family == "vlm" and batch.get("embeds") is not None:
+        # prefix positions carry no LM loss
+        hidden = hidden[:, batch["embeds"].shape[1]:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    B, S, D = hidden.shape
+    C = min(cfg.loss_chunk, S)
+    nc = S // C
+    head = params["embed"].get("head")
+    if head is None:
+        head = params["embed"]["tok"].T
+
+    pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e30)
+
+    def chunk_loss(carry, inp):
+        h, y, m = inp
+        logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        logits = logical_shard(logits, "batch", None, "vocab") + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.sum(logits * jax.nn.one_hot(y, cfg.padded_vocab,
+                                               dtype=jnp.float32), axis=-1)
+        return carry + jnp.sum((lse - gold) * m), None
+
+    hs = hidden[:, :nc * C].reshape(B, nc, C, D).swapaxes(0, 1)
+    ys = labels[:, :nc * C].reshape(B, nc, C).swapaxes(0, 1)
+    ms = mask[:, :nc * C].reshape(B, nc, C).swapaxes(0, 1)
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            (hs, ys, ms))
+    loss = total / jnp.maximum(ms.sum(), 1.0)
+    return loss + 1e-2 * aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+            embeds=None, frames=None) -> Tuple[jnp.ndarray, dict, Any]:
+    """Process the prompt and build decode caches padded to ``max_len``.
+
+    Returns (last-position logits (B,1,V), caches, memory-or-None).
+    """
+    dt = cfg.jdtype
+    x = L.embed_tokens(tokens, params["embed"], dt)
+    if cfg.family == "vlm" and embeds is not None:
+        x = jnp.concatenate([embeds.astype(dt), x], axis=1)
+    S = x.shape[1]
+    aux0 = jnp.zeros((), jnp.float32)
+    pol = cfg.remat_policy
+    memory = None
+
+    def pad_seq(a):  # (L,B,S,H,D) -> (L,B,max_len,H,D)
+        return jnp.pad(a, ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        kind = "moe" if cfg.family == "moe" else "dense"
+        body = _remat(_dense_body(cfg, kind=kind, collect=True), pol)
+        (x, _), (ks, vs) = jax.lax.scan(body, (x, aux0), params["blocks"])
+        caches = {"k": pad_seq(ks), "v": pad_seq(vs),
+                  "length": jnp.asarray(S, jnp.int32)}
+    elif cfg.family == "encdec":
+        assert frames is not None
+        enc_body = _remat(_dense_body(cfg, causal=False), pol)
+        (memory, _), _ = jax.lax.scan(enc_body, (frames.astype(dt), aux0),
+                                      params["enc_blocks"])
+        memory = L.rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+        body = _remat(_dense_body(cfg, kind="dec", memory=memory,
+                                  collect=True), pol)
+        (x, _), (ks, vs) = jax.lax.scan(body, (x, aux0), params["blocks"])
+        caches = {"k": pad_seq(ks), "v": pad_seq(vs),
+                  "length": jnp.asarray(S, jnp.int32)}
+    elif cfg.family == "ssm":
+        body = _remat(_ssm_body(cfg, collect=True), pol)
+        (x, _), (states, tails) = jax.lax.scan(body, (x, aux0),
+                                               params["blocks"])
+        caches = {"conv": tails, "state": states,
+                  "length": jnp.asarray(S, jnp.int32)}
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        attn_body = _remat(_dense_body(cfg, collect=True), pol)
+        mamba_body = _remat(_ssm_body(cfg, collect=True), pol)
+
+        def group_body(carry, gp):
+            c, kv = attn_body(carry, shared)
+            c, (st, tl) = jax.lax.scan(mamba_body, c, gp)
+            return c, (kv[0], kv[1], st, tl)
+        (x, _), (ks, vs, sts, tls) = jax.lax.scan(group_body, (x, aux0),
+                                                  params["groups"])
+        caches = {"attn_k": pad_seq(ks), "attn_v": pad_seq(vs),
+                  "conv": tls, "state": sts,
+                  "length": jnp.asarray(S, jnp.int32)}
+        if "tail" in params:
+            (x, _), (tst, ttl) = jax.lax.scan(mamba_body, (x, aux0),
+                                              params["tail"])
+            caches["tail_conv"] = ttl
+            caches["tail_state"] = tst
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["embed"], cfg.vocab).astype(jnp.float32)
+    return logits, caches, memory
+
+
+# --- decode -------------------------------------------------------------------
+
+def make_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.jdtype
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.d_head)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                "length": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        c = SSM.init_ssm_cache(cfg, batch, dt)
+        n = cfg.n_layers
+        return {"conv": jnp.broadcast_to(c.conv, (n, *c.conv.shape)),
+                "state": jnp.broadcast_to(c.state, (n, *c.state.shape)),
+                "length": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        g = cfg.hybrid_group
+        n_groups = cfg.n_layers // g
+        tail = cfg.n_layers - n_groups * g
+        c = SSM.init_ssm_cache(cfg, batch, dt)
+        caches = {
+            "attn_k": jnp.zeros((n_groups, batch, max_len, cfg.n_kv,
+                                 cfg.d_head), dt),
+            "attn_v": jnp.zeros((n_groups, batch, max_len, cfg.n_kv,
+                                 cfg.d_head), dt),
+            "conv": jnp.broadcast_to(c.conv, (n_groups, g - 1, *c.conv.shape)),
+            "state": jnp.broadcast_to(c.state,
+                                      (n_groups, g - 1, *c.state.shape)),
+            "length": jnp.zeros((), jnp.int32),
+        }
+        if tail:
+            caches["tail_conv"] = jnp.broadcast_to(c.conv, (tail, *c.conv.shape))
+            caches["tail_state"] = jnp.broadcast_to(c.state,
+                                                    (tail, *c.state.shape))
+        return caches
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical axes for decode caches ('kv_seq' -> context parallelism)."""
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+                "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+                "length": ()}
+    if cfg.family == "ssm":
+        return {"conv": ("layers", "batch", None, "heads"),
+                "state": ("layers", "batch", "heads", None, None),
+                "length": ()}
+    ax = {"attn_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+          "attn_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+          "conv": ("layers", "stage", "batch", None, "heads"),
+          "state": ("layers", "stage", "batch", "heads", None, None),
+          "length": ()}
+    if cfg.n_layers % cfg.hybrid_group:
+        ax["tail_conv"] = ("layers", "batch", None, "heads")
+        ax["tail_state"] = ("layers", "batch", "heads", None, None)
+    return ax
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches: dict,
+                memory=None) -> Tuple[jnp.ndarray, dict]:
+    """One decode step: tokens (B,1) -> (logits (B,1,V), updated caches)."""
+    dt = cfg.jdtype
+    x = L.embed_tokens(tokens, params["embed"], dt)
+    x = logical_shard(x, "batch", None, "d_model")
+    length = caches["length"]
+
+    def attn_block(x, bp, k_l, v_l):
+        cache = KVCache(k_l, v_l, length)
+        h, (kn, vn) = decode_attention(
+            L.rms_norm(x, bp["ln1"], cfg.norm_eps), bp["attn"], cfg, cache)
+        x = x + h
+        if "xattn" in bp:
+            h = cross_attention(L.rms_norm(x, bp["ln_x"], cfg.norm_eps),
+                                memory, bp["xattn"], cfg)
+            x = x + h
+        xn = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            h, _ = MOE.apply_moe(xn, bp["moe"], cfg)
+        else:
+            h = L.apply_mlp(xn, bp["mlp"], cfg.act)
+        upd = update_cache(cache, kn, vn)
+        return x + h, upd.k, upd.v
+
+    def ssm_block(x, bp, conv_l, state_l):
+        cache = SSM.SSMCache(conv_l, state_l)
+        h, new = SSM.decode_ssm(L.rms_norm(x, bp["ln"], cfg.norm_eps),
+                                bp["ssm"], cfg, cache)
+        return x + h, new.conv, new.state
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        def body(x, inp):
+            bp, k_l, v_l = inp
+            x, k2, v2 = attn_block(x, bp, k_l, v_l)
+            return x, (k2, v2)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["blocks"], caches["k"],
+                                    caches["v"]))
+        new_caches = {"k": ks, "v": vs, "length": length + 1}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            bp, c_l, s_l = inp
+            x, c2, s2 = ssm_block(x, bp, c_l, s_l)
+            return x, (c2, s2)
+        x, (cs, ss) = jax.lax.scan(body, x,
+                                   (params["blocks"], caches["conv"],
+                                    caches["state"]))
+        new_caches = {"conv": cs, "state": ss, "length": length + 1}
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group(x, inp):
+            gp, k_l, v_l, conv_g, state_g = inp
+            x, k2, v2 = attn_block(x, shared, k_l, v_l)
+
+            def mbody(x, minp):
+                bp, c_l, s_l = minp
+                x, c2, s2 = ssm_block(x, bp, c_l, s_l)
+                return x, (c2, s2)
+            x, (cs, ss) = jax.lax.scan(mbody, x, (gp, conv_g, state_g))
+            return x, (k2, v2, cs, ss)
+        x, (ks, vs, cs, ss) = jax.lax.scan(
+            group, x, (params["groups"], caches["attn_k"], caches["attn_v"],
+                       caches["conv"], caches["state"]))
+        new_caches = {"attn_k": ks, "attn_v": vs, "conv": cs, "state": ss,
+                      "length": length + 1}
+        if "tail" in params:
+            def mbody(x, minp):
+                bp, c_l, s_l = minp
+                x, c2, s2 = ssm_block(x, bp, c_l, s_l)
+                return x, (c2, s2)
+            x, (tc, ts) = jax.lax.scan(mbody, x, (params["tail"],
+                                                  caches["tail_conv"],
+                                                  caches["tail_state"]))
+            new_caches["tail_conv"] = tc
+            new_caches["tail_state"] = ts
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["embed"], cfg.vocab).astype(jnp.float32)
+    return logical_shard(logits, "batch", None, "vocab"), new_caches

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+from repro.optim.compression import (ef_compress_update, init_ef_state)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "ef_compress_update", "init_ef_state"]

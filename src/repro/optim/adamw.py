@@ -1,0 +1,92 @@
+"""AdamW + global-norm clipping + cosine schedule (pure JAX, shard-friendly).
+
+Moments are f32 regardless of param dtype (bf16 training keeps f32 master
+weights in the optimizer state); every state leaf inherits the param's
+sharding spec, so ZeRO-style sharding falls out of the param spec tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any          # f32 master copy (None leaves if params already f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype != jnp.float32 else None,
+        params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros), master)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (update + cfg.weight_decay * base)
+        new_p = new.astype(p.dtype)
+        new_master = new if master is not None else None
+        return new_p, m2, v2, new_master
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_ma = tdef.flatten_up_to(state.master)
+    outs = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v,
+                                       flat_ma)]
+    new_p = tdef.unflatten([o[0] for o in outs])
+    new_m = tdef.unflatten([o[1] for o in outs])
+    new_v = tdef.unflatten([o[2] for o in outs])
+    new_ma = tdef.unflatten([o[3] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v, new_ma), metrics

@@ -1,0 +1,67 @@
+"""Error-feedback gradient compression for cross-pod (DCN) reduction.
+
+At 1000+ nodes the slow axis is the cross-pod gradient all-reduce. We provide
+EF21-style compression: per-leaf top-k magnitude sparsification (+ int8
+quantization of the kept values), with the residual fed back into the next
+step. The compressed representation is what would cross the DCN; the local
+(fast, ICI) reduction stays exact.
+
+Usage (see train.fault-tolerant loop): compress per-pod-aggregated grads,
+all-reduce the compressed values over 'pod', decompress, apply.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ef_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x: jnp.ndarray, keep_ratio: float) -> jnp.ndarray:
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.size * keep_ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grads, ef_state, keep_ratio: float = 0.05,
+                       quantize: bool = True):
+    """Compress (grads + residual); return (compressed-decompressed grads,
+    new residual, wire-bytes estimate).
+
+    The returned grads are the values a receiver reconstructs; reducing them
+    across pods is equivalent to reducing the compressed messages.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        mask = _topk_mask(gf, keep_ratio)
+        kept = gf * mask
+        if quantize:
+            q, scale = _quant_int8(kept)
+            kept = _dequant(q, scale) * mask
+        residual = gf - kept
+        wire = jnp.asarray(mask.sum() * (1 if quantize else 4)
+                           + 4 * jnp.ceil(mask.sum() / 8), jnp.float32)
+        return kept.astype(g.dtype), residual, wire
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    new_ef = tdef.unflatten([o[1] for o in outs])
+    wire_bytes = sum(o[2] for o in outs)
+    return comp, new_ef, wire_bytes

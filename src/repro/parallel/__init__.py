@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (ShardingRules, current_rules,
+                                     logical_shard, logical_spec,
+                                     use_sharding_rules)
+
+__all__ = ["ShardingRules", "current_rules", "logical_shard", "logical_spec",
+           "use_sharding_rules"]

@@ -1,0 +1,128 @@
+"""Logical-axis sharding rules (MaxText-style), applied via ambient context.
+
+Models annotate activations/params with *logical* axis names; a
+``ShardingRules`` table maps those to physical mesh axes.  When no rules are
+active (CPU smoke tests) every annotation is a no-op, so the same model code
+runs single-device and on a 512-chip mesh.
+
+Default logical axes:
+  batch      -> ('pod', 'data')   data parallel
+  seq        -> None              (or 'model' for sequence parallelism)
+  heads/ff/vocab/experts -> 'model'   tensor/expert parallel
+  kv_seq     -> 'model'           context-parallel decode (KV cache on seq)
+  wt_fsdp    -> 'data'            ZeRO-3 weight shard (gathered per layer)
+  layers     -> None              scan-stacked leading dim
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+class ShardingRules(dict):
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        for ax in logical_axes:
+            v = self.get(ax) if ax is not None else None
+            out.append(tuple(v) if isinstance(v, list) else v)
+        return P(*out)
+
+
+def default_rules(multi_pod: bool = False, fsdp_over_pod: bool = False,
+                  seq_parallel: bool = False) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fsdp = (("pod", "data") if (multi_pod and fsdp_over_pod) else ("data",))
+    return ShardingRules(
+        batch=dp,
+        seq="model" if seq_parallel else None,
+        moe_seq="model",
+        heads="model",
+        kv_heads="model",
+        kv_seq="model",
+        d_model=None,
+        ff="model",
+        vocab="model",
+        experts="model",
+        wt_fsdp=fsdp,
+        layers=None,
+        stage=None,
+    )
+
+
+class _State(threading.local):
+    rules: Optional[ShardingRules] = None
+    mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_sharding_rules(mesh: Mesh, rules: ShardingRules):
+    prev = (_STATE.rules, _STATE.mesh)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        with mesh:
+            yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def current_rules() -> Tuple[Optional[Mesh], Optional[ShardingRules]]:
+    return _STATE.mesh, _STATE.rules
+
+
+def logical_spec(*logical_axes) -> Optional[P]:
+    _, rules = current_rules()
+    if rules is None:
+        return None
+    return rules.spec(logical_axes)
+
+
+def _axis_size(mesh: Mesh, v) -> int:
+    names = (v,) if isinstance(v, str) else tuple(v)
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def resolve_spec(shape, logical_axes, mesh: Mesh, rules: ShardingRules) -> P:
+    """Spec with per-dim divisibility fallback: a logical axis whose mesh
+    extent does not divide the dim is replicated (e.g. GQA kv=2 heads on a
+    16-way 'model' axis). A mesh axis consumed by an earlier dim is not
+    reused (first dim wins): two logical axes may share a mesh axis in the
+    rules (e.g. kv_seq and kv_heads both -> 'model'), and usually at most one
+    survives the divisibility check — when both do, the later is replicated."""
+    out = []
+    used: set = set()
+    for dim, ax in zip(shape, logical_axes):
+        v = rules.get(ax) if ax is not None else None
+        if isinstance(v, list):
+            v = tuple(v)
+        if v is not None:
+            names = (v,) if isinstance(v, str) else tuple(v)
+            if dim % _axis_size(mesh, v) != 0 or used & set(names):
+                v = None
+            else:
+                used |= set(names)
+        out.append(v)
+    return P(*out)
+
+
+def logical_shard(x, *logical_axes):
+    """Annotate ``x`` with the sharding for these logical axes (no-op when no
+    rules are active; non-divisible dims fall back to replication)."""
+    mesh, rules = current_rules()
+    if rules is None or mesh is None:
+        return x
+    spec = resolve_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

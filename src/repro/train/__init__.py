@@ -1,0 +1,8 @@
+from repro.train.steps import (make_compressed_train_step,
+                               make_decode_fn, make_prefill_fn,
+                               make_train_step)
+from repro.train.loop import TrainLoopConfig, fault_tolerant_train
+
+__all__ = ["make_compressed_train_step", "make_decode_fn",
+           "make_prefill_fn", "make_train_step",
+           "TrainLoopConfig", "fault_tolerant_train"]

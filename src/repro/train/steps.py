@@ -1,0 +1,142 @@
+"""jit-able train / prefill / decode step factories.
+
+``make_train_step`` builds the canonical production step:
+  loss (remat'd layer scan) -> grads (microbatch grad-accumulation scan)
+  -> global-norm clip -> AdamW -> metrics.
+Gradient accumulation runs as a ``lax.scan`` over microbatches with f32
+accumulators — the standard activation-memory lever (the per-microbatch
+backward overlaps its gradient all-reduce under the XLA latency-hiding
+scheduler).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (ModelConfig, decode_step, lm_loss,
+                          make_decode_caches, prefill)
+from repro.optim import AdamWState, adamw_update
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import logical_shard
+
+
+def _shard_batch_tree(tree, lead=()):
+    """Re-impose batch sharding on (micro)batch leaves. Constraint
+    propagation dies across the reshape -> scan-slice boundary (XLA then
+    replicates activations downstream); stating it explicitly costs nothing
+    and anchors the whole layer stack (EXPERIMENTS.md §Perf iteration 1)."""
+    return jax.tree.map(
+        lambda x: logical_shard(x, *lead, "batch",
+                                *([None] * (x.ndim - 1 - len(lead)))), tree)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb)
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            resh = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            resh = _shard_batch_tree(resh, lead=(None,))
+
+            def acc(carry, mb):
+                l_acc, g_acc = carry
+                mb = _shard_batch_tree(mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), resh)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_compressed_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                               microbatches: int = 1,
+                               keep_ratio: float = 0.05,
+                               quantize: bool = True):
+    """Cross-pod variant of ``make_train_step`` with EF-top-k gradient
+    compression (DESIGN.md §4: the slow hop at 1000+ nodes is the cross-pod
+    DCN all-reduce; EF21-style top-k + int8 bounds its wire bytes while the
+    error-feedback residual preserves convergence).
+
+    State is (params, (opt_state, ef_state)); metrics include the wire-byte
+    estimate of the compressed message. The fast intra-pod (ICI) reduction
+    stays exact — compression applies to the already pod-aggregated grads.
+    """
+    from repro.optim import ef_compress_update, init_ef_state
+
+    def train_step(params, state, batch):
+        opt_state, ef_state = state
+
+        def loss_fn(p, mb):
+            return lm_loss(p, cfg, mb)
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            resh = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            resh = _shard_batch_tree(resh, lead=(None,))
+
+            def acc(carry, mb):
+                l_acc, g_acc = carry
+                mb = _shard_batch_tree(mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), resh)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        grads, ef_state, wire = ef_compress_update(
+            grads, ef_state, keep_ratio=keep_ratio, quantize=quantize)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        metrics["loss"] = loss
+        metrics["compressed_wire_bytes"] = wire
+        return new_params, (new_opt, ef_state), metrics
+
+    train_step.init_extra = init_ef_state
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int):
+    def prefill_fn(params, batch: dict):
+        logits, caches, memory = prefill(
+            params, cfg, batch["tokens"], max_len,
+            embeds=batch.get("embeds"), frames=batch.get("frames"))
+        return logits, caches, memory
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, tokens, caches, memory=None):
+        return decode_step(params, cfg, tokens, caches, memory=memory)
+    return decode_fn

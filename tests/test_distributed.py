@@ -1,0 +1,19 @@
+"""Distributed stencil: run the 8-fake-device check in a subprocess so the
+main test process keeps a single-device view (dry-run flags must not leak)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_multidevice_stencil_matches_oracle():
+    script = os.path.join(os.path.dirname(__file__),
+                          "multidevice_stencil_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL OK" in out.stdout

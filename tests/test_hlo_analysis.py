@@ -1,0 +1,70 @@
+"""HLO analyzer: trip-count-aware FLOPs must match analytic counts."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    D, B, L = 128, 32, 8
+
+    def model(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    c = _compile(model,
+                 jax.ShapeDtypeStruct((B, D), jnp.float32),
+                 jax.ShapeDtypeStruct((L, D, D), jnp.float32))
+    an = hlo_analysis.analyze(c.as_text())
+    ideal = 2 * B * D * D * L
+    assert ideal * 0.9 <= an.flops <= ideal * 1.3, (an.flops, ideal)
+    assert any(t == L for t in an.while_trips.values()), an.while_trips
+
+
+def test_nested_scan_flops():
+    D, B, L1, L2 = 64, 16, 3, 5
+
+    def model(x, ws):
+        def outer(c, w2):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, w2)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+
+    c = _compile(model,
+                 jax.ShapeDtypeStruct((B, D), jnp.float32),
+                 jax.ShapeDtypeStruct((L1, L2, D, D), jnp.float32))
+    an = hlo_analysis.analyze(c.as_text())
+    ideal = 2 * B * D * D * L1 * L2
+    assert ideal * 0.9 <= an.flops <= ideal * 1.3, (an.flops, ideal)
+
+
+def test_grad_flops_roughly_3x_forward():
+    # grad wrt BOTH operands of the matmul: backward needs dx = g @ w.T and
+    # dw = x.T @ g on top of the forward x @ w  ->  ~3x forward FLOPs.
+    # (grad wrt w alone would be exactly 2x: forward + dw only.)
+    D, B = 256, 64
+
+    def f(w, x):
+        return jnp.sum(jnp.tanh(x @ w) ** 2)
+
+    cf = _compile(f, jax.ShapeDtypeStruct((D, D), jnp.float32),
+                  jax.ShapeDtypeStruct((B, D), jnp.float32))
+    cg = _compile(jax.grad(f, argnums=(0, 1)),
+                  jax.ShapeDtypeStruct((D, D), jnp.float32),
+                  jax.ShapeDtypeStruct((B, D), jnp.float32))
+    ff = hlo_analysis.analyze(cf.as_text()).flops
+    fg = hlo_analysis.analyze(cg.as_text()).flops
+    assert 2.4 <= fg / ff <= 3.6, (ff, fg)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import STENCILS, default_coeffs
+from repro.core.blocking import BlockGeometry, superstep_traffic_bytes
+from repro.kernels.ops import stencil_run
+from repro.kernels.ref import oracle_run
+
+_geometry2d = st.tuples(
+    st.integers(2, 40),            # ny
+    st.integers(2, 70),            # nx
+    st.integers(1, 6),             # iters
+    st.integers(1, 4),             # par_time
+    st.sampled_from([16, 24, 32]), # bsize
+    st.sampled_from(["diffusion2d", "hotspot2d"]),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_geometry2d)
+def test_pallas_equals_oracle_any_geometry(params):
+    ny, nx, iters, par_time, bsize, name = params
+    stencil = STENCILS[name]
+    if bsize <= 2 * stencil.radius * par_time:
+        return
+    key = jax.random.PRNGKey(ny * 1000 + nx)
+    g = jax.random.uniform(key, (ny, nx), jnp.float32, 0.5, 2.0)
+    aux = (jax.random.uniform(jax.random.fold_in(key, 7), (ny, nx),
+                              jnp.float32, 0.0, 0.1)
+           if stencil.has_aux else None)
+    c = default_coeffs(stencil)
+    want = oracle_run(stencil, g, c, iters, aux)
+    got = stencil_run(stencil, g, c, iters, par_time, bsize, aux,
+                      backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(10, 100000), st.integers(10, 100000), st.integers(1, 16),
+       st.integers(1, 8), st.sampled_from([256, 1024, 4096]))
+def test_blocking_geometry_invariants(dimy, dimx, par_time, rad, bsize):
+    if bsize <= 2 * rad * par_time:
+        return
+    geom = BlockGeometry(2, (dimy, dimx), rad, par_time, (bsize,))
+    # compute blocks tile at least the whole grid (Eq. 5)
+    assert geom.bnum[0] * geom.csize[0] >= dimx
+    # ... but never overshoot by a full block
+    assert (geom.bnum[0] - 1) * geom.csize[0] < dimx
+    # halo identity (Eq. 4): bsize = csize + 2*halo
+    assert geom.csize[0] + 2 * geom.size_halo == geom.bsize[0]
+    # redundancy >= 1, monotone in halo
+    assert geom.redundancy >= 1.0
+    # traffic accounting is positive and >= compulsory traffic
+    st_ = STENCILS["diffusion2d"]
+    traffic = superstep_traffic_bytes(geom, st_.num_read, st_.num_write)
+    assert traffic >= 4 * 2 * dimy * dimx * 0.99  # >= one read + one write
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 40), st.integers(0, 3))
+def test_diffusion_maximum_principle(ny, nx, seed):
+    """Convex-coefficient diffusion can never exceed initial extrema."""
+    stencil = STENCILS["diffusion2d"]
+    g = jax.random.uniform(jax.random.PRNGKey(seed), (ny, nx),
+                           jnp.float32, -1.0, 1.0)
+    c = default_coeffs(stencil)   # convex: coefficients sum to 1
+    out = stencil_run(stencil, g, c, 5, 2, 16, backend="pallas_interpret")
+    assert float(jnp.max(out)) <= float(jnp.max(g)) + 1e-5
+    assert float(jnp.min(out)) >= float(jnp.min(g)) - 1e-5
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 11))
+def test_temporal_blocking_is_iteration_invariant(iters):
+    """Result depends only on iteration count, not on par_time factorization."""
+    stencil = STENCILS["diffusion2d"]
+    g = jax.random.uniform(jax.random.PRNGKey(0), (19, 37),
+                           jnp.float32, 0.5, 2.0)
+    c = default_coeffs(stencil)
+    ref = oracle_run(stencil, g, c, iters)
+    for pt in (1, 2, 4):
+        got = stencil_run(stencil, g, c, iters, pt, 24,
+                          backend="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)

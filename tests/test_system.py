@@ -1,0 +1,286 @@
+"""System tests: fault tolerance, checkpointing, data pipeline, compression.
+
+These exercise the 1000-node substrate pieces at toy scale:
+  * checkpoint atomicity / integrity / retention,
+  * fault_tolerant_train restart + failure retry + straggler detection,
+  * elastic re-mesh (restore onto a different mesh),
+  * stateless data addressing (restart-exactness),
+  * error-feedback gradient compression invariants.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, save_pytree
+from repro.data import DataConfig, SyntheticLMDataset, prefetch
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         ef_compress_update, init_ef_state)
+from repro.optim.adamw import AdamWConfig
+from repro.train import TrainLoopConfig, fault_tolerant_train
+
+
+def _toy_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(k, (8, 8)),
+              "b": jnp.zeros((8,), jnp.bfloat16)}
+    return params
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2)
+    params = _toy_state()
+    for s in (1, 5, 9):
+        mgr.save_async({"params": params, "step": jnp.asarray(s)}, s)
+    mgr.wait()
+    assert latest_step(d) == 9
+    # retention: only the last two steps remain
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                   if n.startswith("step_") and not n.endswith(".tmp"))
+    assert steps == [5, 9]
+    restored, step = mgr.restore_latest({"params": params,
+                                         "step": jnp.zeros(())})
+    assert step == 9
+    np.testing.assert_array_equal(restored["params"]["w"], params["w"])
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_ignores_incomplete_tmp(tmp_path):
+    d = str(tmp_path / "ck")
+    params = _toy_state()
+    save_pytree({"p": params}, d, 3)
+    # a crashed save leaves a .tmp dir: must not shadow the good step
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))
+    assert latest_step(d) == 3
+
+
+def test_checkpoint_integrity_check(tmp_path):
+    from repro.checkpoint import restore_pytree
+    d = str(tmp_path / "ck")
+    params = _toy_state()
+    save_pytree({"p": params}, d, 1)
+    shard = os.path.join(d, "step_00000001", "shard_00000.npz")
+    data = dict(np.load(shard))
+    key = list(data)[0]
+    data[key] = data[key] + 1.0
+    np.savez(shard, **data)
+    with pytest.raises(IOError, match="integrity"):
+        restore_pytree({"p": params}, d, 1)
+
+
+# --- fault-tolerant loop -----------------------------------------------------
+
+def _toy_train(tmp_path, total_steps, failure_hook=None):
+    cfg = AdamWConfig(lr=5e-2, warmup_steps=2, total_steps=total_steps,
+                      weight_decay=0.0)
+
+    def step_fn(params, opt, batch):
+        def loss_fn(p):
+            pred = batch["x"] @ p["w"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, m = adamw_update(cfg, params, g, opt)
+        m["loss"] = loss
+        return params, opt, m
+
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((8, 8)).astype(np.float32)
+
+    def batch_at(s):
+        r = np.random.default_rng(s)
+        x = r.standard_normal((16, 8)).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(x @ W)}
+
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    opt = adamw_init(params)
+    loop = TrainLoopConfig(total_steps=total_steps, checkpoint_every=5,
+                           checkpoint_dir=str(tmp_path / "ck"),
+                           straggler_factor=50.0)
+    return fault_tolerant_train(loop, step_fn, (params, opt),
+                                iter(()), batch_at,
+                                failure_hook=failure_hook,
+                                log=lambda *_: None)
+
+
+def test_loop_trains_and_checkpoints(tmp_path):
+    params, opt, ev = _toy_train(tmp_path, 20)
+    assert np.mean(ev["losses"][-3:]) < np.mean(ev["losses"][:3])
+    assert latest_step(str(tmp_path / "ck")) == 19
+
+
+def test_loop_recovers_from_injected_failure(tmp_path):
+    boom = {7}
+
+    def failure_hook(s):
+        if s in boom:
+            boom.remove(s)
+            raise RuntimeError("simulated device loss")
+
+    params, opt, ev = _toy_train(tmp_path, 12, failure_hook=failure_hook)
+    assert ev["retries"] == 1
+    assert len(ev["losses"]) >= 12         # re-ran steps from last checkpoint
+
+
+def test_loop_restart_resumes_from_checkpoint(tmp_path):
+    # first run writes checkpoints
+    _toy_train(tmp_path, 8)
+    ck = latest_step(str(tmp_path / "ck"))
+    assert ck is not None
+    # second run: resumes at ck+1, executes only the remainder
+    params, opt, ev = _toy_train(tmp_path, 14)
+    assert len(ev["losses"]) == 14 - (ck + 1)
+
+
+def test_data_pipeline_stateless_and_host_sharded():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8, seed=3)
+    a = SyntheticLMDataset(cfg).batch_at(5)
+    b = SyntheticLMDataset(cfg).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])  # restart-exact
+    # host sharding partitions the global batch deterministically
+    h0 = SyntheticLMDataset(cfg, host_id=0, num_hosts=2).batch_at(5)
+    h1 = SyntheticLMDataset(cfg, host_id=1, num_hosts=2).batch_at(5)
+    assert h0["tokens"].shape[0] == 4 and h1["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_prefetch_preserves_order():
+    it = prefetch(iter([{"i": i} for i in range(6)]), depth=2)
+    assert [b["i"] for b in it] == list(range(6))
+
+
+# --- elastic re-mesh ---------------------------------------------------------
+
+def test_elastic_remesh_roundtrip():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import reshard_for_mesh
+    params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    spec = {"w": P(None, None)}
+    out = reshard_for_mesh(params, mesh1, spec)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(params["w"]))
+
+
+# --- optimizer + compression -------------------------------------------------
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, s)) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup
+    assert lrs[2] > lrs[3] > lrs[4]          # cosine decay
+    assert abs(lrs[4] - 0.1) < 1e-6          # floor
+
+
+def test_adamw_clips_global_norm():
+    cfg = AdamWConfig(lr=1e-2, clip_norm=1.0, warmup_steps=0,
+                      weight_decay=0.0)
+    params = {"w": jnp.zeros((4, 4))}
+    opt = adamw_init(params)
+    g = {"w": jnp.full((4, 4), 1e6)}
+    new_params, _, metrics = adamw_update(cfg, params, g, opt)
+    assert float(metrics["grad_norm"]) > 1.0          # raw norm reported
+    # clipped update: param step bounded by ~lr regardless of grad scale
+    assert float(jnp.max(jnp.abs(new_params["w"]))) < 10 * cfg.lr
+
+
+def test_ef_compression_error_feedback():
+    """Residual carries the dropped mass: kept + residual == grads."""
+    params = {"w": jnp.zeros((4, 4))}
+    g = {"w": jnp.arange(1.0, 17.0).reshape(4, 4)}   # distinct magnitudes
+    ef = init_ef_state(params)
+    kept, ef2, wire = ef_compress_update(g, ef, keep_ratio=0.25,
+                                         quantize=False)
+    recon = kept["w"].astype(jnp.float32) + ef2["w"]
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g["w"]),
+                               rtol=1e-6)
+    # compression actually sparsifies: only the top-4 magnitudes kept
+    assert float((kept["w"] != 0).sum()) <= 4
+    # EF invariant over any horizon: delivered + residual == sum of grads
+    total = jnp.zeros((4, 4))
+    ef = init_ef_state(params)
+    n = 16
+    for _ in range(n):
+        kept, ef, _ = ef_compress_update(g, ef, keep_ratio=0.25,
+                                         quantize=False)
+        total = total + kept["w"]
+    np.testing.assert_allclose(np.asarray(total + ef["w"]),
+                               n * np.asarray(g["w"]), rtol=1e-5)
+    # and the delivered mass is a growing fraction of the target (no leak)
+    assert float(jnp.sum(total)) > 0.7 * n * float(jnp.sum(g["w"]))
+
+
+def test_compressed_train_step_converges():
+    """EF-compressed training reaches a comparable loss to exact training
+    on a tiny LM (the cross-pod DCN trick preserves convergence)."""
+    from repro.data import DataConfig, SyntheticLMDataset
+    from repro.models import ModelConfig, init_params
+    from repro.train import make_compressed_train_step, make_train_step
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv=1, d_head=16, d_ff=64, vocab=64,
+                      tie_embeddings=True, attn_q_chunk=16, attn_kv_chunk=16,
+                      loss_chunk=16)
+    data = SyntheticLMDataset(DataConfig(vocab=64, seq_len=32,
+                                         global_batch=4))
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=30)
+
+    exact = jax.jit(make_train_step(cfg, ocfg))
+    comp = jax.jit(make_compressed_train_step(cfg, ocfg, keep_ratio=0.2))
+
+    pe = init_params(jax.random.PRNGKey(0), cfg)
+    pc = jax.tree.map(lambda x: x, pe)
+    oe = adamw_init(pe)
+    oc = (adamw_init(pc), comp.init_extra(pc))
+    le = lc = None
+    for s in range(30):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        pe, oe, me = exact(pe, oe, batch)
+        pc, oc, mc = comp(pc, oc, batch)
+        le, lc = float(me["loss"]), float(mc["loss"])
+    assert mc["compressed_wire_bytes"] > 0
+    # compressed training tracks exact within a reasonable factor
+    assert lc < 1.3 * le + 0.5, (lc, le)
+
+
+def test_loop_detects_stragglers(tmp_path):
+    """A step much slower than the rolling median is recorded and triggers
+    an early checkpoint."""
+    import time as _time
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=15)
+
+    def step_fn(params, opt, batch):
+        def loss_fn(p):
+            return jnp.mean((batch["x"] @ p["w"]) ** 2)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, m = adamw_update(cfg, params, g, opt)
+        m["loss"] = loss
+        return params, opt, m
+
+    def batch_at(s):
+        r = np.random.default_rng(s)
+        return {"x": jnp.asarray(r.standard_normal((4, 8)), jnp.float32)}
+
+    def slow_hook(s):
+        if s == 10:
+            _time.sleep(0.6)        # simulated slow host (inside timing)
+
+    params = {"w": jnp.ones((8, 8), jnp.float32)}
+    opt = adamw_init(params)
+    loop = TrainLoopConfig(total_steps=15, checkpoint_every=100,
+                           checkpoint_dir=str(tmp_path / "ck"),
+                           straggler_factor=5.0, straggler_window=20)
+    _, _, ev = fault_tolerant_train(loop, step_fn, (params, opt), iter(()),
+                                    batch_at, failure_hook=slow_hook,
+                                    log=lambda *_: None)
+    assert any(s == 10 for s, _, _ in ev["stragglers"]), ev["stragglers"]
+    # early checkpoint was written
+    assert latest_step(str(tmp_path / "ck")) is not None
