@@ -25,11 +25,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import STENCILS, autotune, default_coeffs, predict
-from repro.core.blocking import BlockGeometry, superstep_traffic_bytes
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import STENCILS, autotune
+from repro.core.blocking import BlockGeometry
 from repro.core.engine import blocked_superstep
 from repro.data import make_stencil_inputs
-from repro.kernels.ops import dma_traffic_bytes, stencil_run
 from repro.launch import hlo_analysis
 
 # paper-scale dims (>= 1 GB inputs): 16384^2 (2D), 448^3-ish (3D)
@@ -73,12 +73,17 @@ def run(n_candidates: int = 3, with_hlo: bool = True) -> list[dict]:
                 "run_time_s": round(p.run_time, 4),
             }
             if rank == 0:
-                model_bytes = superstep_traffic_bytes(
-                    p.geom, st.num_read, st.num_write)
-                kernel_bytes = dma_traffic_bytes(st, p.geom)
+                # traffic accuracy via the plan API (model Eq. 7/8 vs. the
+                # Pallas kernels' exact DMA schedule)
+                tr = plan(StencilProblem(st, dims),
+                          RunConfig(backend="engine",
+                                    par_time=p.geom.par_time,
+                                    bsize=p.geom.bsize)).traffic_report()
+                model_bytes = tr["model_bytes_per_superstep"]
+                kernel_bytes = tr["kernel_dma_bytes_per_superstep"]
                 row["model_bytes_per_super"] = model_bytes
                 row["kernel_dma_bytes_per_super"] = kernel_bytes
-                row["traffic_accuracy"] = round(model_bytes / kernel_bytes, 3)
+                row["traffic_accuracy"] = round(tr["traffic_accuracy"], 3)
                 if with_hlo:
                     hlo_bytes = _hlo_traffic(st, p.geom, dims)
                     row["engine_hlo_bytes_per_super"] = hlo_bytes
@@ -88,12 +93,12 @@ def run(n_candidates: int = 3, with_hlo: bool = True) -> list[dict]:
 
         # host sanity anchor (engine backend, reduced dims, few iters)
         hdims = HOST_DIMS[st.ndim]
-        best = autotune(st, hdims, 8)[0]
+        hplan = plan(StencilProblem(st, hdims),
+                     RunConfig(backend="engine", autotune=True, iters_hint=8))
+        best = hplan.predicted(8)
         grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), hdims,
                                         st.has_aux)
-        coeffs = default_coeffs(st)
-        fn = lambda: stencil_run(st, grid, coeffs, 8, best.geom.par_time,  # noqa: E731
-                                 best.geom.bsize, aux, backend="engine")
+        fn = lambda: hplan.run(grid, 8, aux=aux)  # noqa: E731
         fn().block_until_ready()
         t0 = time.perf_counter()
         fn().block_until_ready()

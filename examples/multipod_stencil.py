@@ -1,11 +1,12 @@
 """Multi-device stencil: spatial distribution over a mesh (paper §8's stated
 future work, implemented).
 
-Forces 8 host-platform devices, builds a (2, 2, 2) pod×data×model mesh,
-domain-decomposes a Diffusion/Hotspot grid over it, and runs the combined
-spatial+temporal blocked engine per shard with ``rad*par_time``-wide halo
-exchange (ppermute) once per super-step — ``par_time``× fewer exchanges than
-step-by-step halo exchange. Verifies bit-level agreement with the
+Forces 8 host-platform devices, builds a (2, 2, 2) pod×data×model mesh, and
+runs a Diffusion/Hotspot grid through ``plan()`` with the ``distributed``
+backend — the mesh is just config.  Each shard runs the combined
+spatial+temporal blocked engine with ``rad*par_time``-wide halo exchange
+(ppermute) once per super-step — ``par_time``× fewer exchanges than
+step-by-step halo exchange.  Verifies bit-level agreement with the
 single-device oracle.
 
     python examples/multipod_stencil.py          # note: no PYTHONPATH needed
@@ -17,13 +18,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # ruff: noqa: E402
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import HOTSPOT2D, default_coeffs
-from repro.core.distributed import distributed_run
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import default_coeffs, HOTSPOT2D
 from repro.data import make_stencil_inputs
-from repro.kernels.ops import stencil_run
 
 DIMS = (256, 512)
 ITERS = 10
@@ -39,14 +41,19 @@ def main():
 
     grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), DIMS, True)
     coeffs = default_coeffs(HOTSPOT2D)
+    problem = StencilProblem("hotspot2d", DIMS)
 
     # grid axis 0 (y) sharded over pod+data, axis 1 (x) over model
     axis_map = (("pod", "data"), ("model",))
-    out = distributed_run(HOTSPOT2D, grid, coeffs, ITERS, PAR_TIME, BSIZE,
-                          mesh, axis_map, aux=aux)
+    cfg = RunConfig(backend="distributed", par_time=PAR_TIME, bsize=BSIZE,
+                    mesh=mesh, axis_map=axis_map)
+    dist = plan(problem, cfg)
+    print(dist.describe())
+    out = dist.run(grid, ITERS, coeffs, aux=aux)
 
-    ref = stencil_run(HOTSPOT2D, grid, coeffs, ITERS, PAR_TIME, BSIZE,
-                      aux=aux, backend="reference")
+    ref = plan(problem, dataclasses.replace(cfg, backend="reference",
+                                            mesh=None, axis_map=None)
+               ).run(grid, ITERS, coeffs, aux=aux)
     err = float(jnp.max(jnp.abs(out - ref)))
     print(f"8-way sharded vs single-device oracle: max|err| = {err:.3e}")
     assert err < 1e-4

@@ -1,16 +1,19 @@
 """Quickstart: the paper's technique in one page.
 
-Runs Diffusion 2D with combined spatial + temporal blocking (the paper's
-accelerator), checks it against the unblocked oracle, and shows the
-performance model doing design-space pruning (paper §5.3).
+Describes Diffusion 2D as a ``StencilProblem``, lets ``plan()`` pick
+(bsize, par_time) with the performance model (paper §4, §5.3), runs the
+combined spatial + temporal blocked backends through the resulting
+``StencilPlan``, and checks them against the unblocked oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import DIFFUSION2D, autotune, default_coeffs
-from repro.kernels.ops import stencil_run
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import DIFFUSION2D, default_coeffs
 
 GRID = (512, 512)
 ITERS = 12
@@ -20,33 +23,35 @@ def main():
     key = jax.random.PRNGKey(0)
     grid = jax.random.uniform(key, GRID, jnp.float32, 0.5, 2.0)
     coeffs = default_coeffs(DIFFUSION2D)
+    problem = StencilProblem("diffusion2d", GRID)
 
     # 1. Design-space pruning with the performance model (paper §4, §5.3):
-    #    enumerate (bsize, par_time), drop configs over the VMEM budget,
-    #    rank by predicted runtime.
-    candidates = autotune(DIFFUSION2D, GRID, ITERS)
-    print("top autotuner candidates (paper §5.3 pruning):")
-    for p in candidates[:4]:
+    #    plan(autotune=True) enumerates (bsize, par_time), drops configs over
+    #    the VMEM budget, and compiles the best one.
+    eng = plan(problem, RunConfig(backend="engine", autotune=True,
+                                  iters_hint=ITERS))
+    print(eng.describe())
+    print("runner-up candidates (paper §5.3 pruning):")
+    for p in eng.candidates[1:4]:
         print("  ", p.describe())
-    best = candidates[0]
-    bsize, par_time = best.geom.bsize, best.geom.par_time
+    bsize, par_time = eng.geometry.bsize, eng.geometry.par_time
 
-    # 2. Run the combined spatial+temporal blocked implementations.
-    ref = stencil_run(DIFFUSION2D, grid, coeffs, ITERS, par_time, bsize,
-                      backend="reference")          # unblocked oracle
-    eng = stencil_run(DIFFUSION2D, grid, coeffs, ITERS, par_time, bsize,
-                      backend="engine")             # pure-JAX blocked engine
-    pal = stencil_run(DIFFUSION2D, grid, coeffs, ITERS, par_time, bsize,
-                      backend="pallas_interpret")   # Pallas kernel (interpret)
+    # 2. Run the same schedule through every backend via the one plan() call.
+    cfg = RunConfig(par_time=par_time, bsize=bsize)
+    ref = plan(problem, dataclasses.replace(cfg, backend="reference")
+               ).run(grid, ITERS, coeffs)            # unblocked oracle
+    out_eng = eng.run(grid, ITERS, coeffs)           # pure-JAX blocked engine
+    out_pal = plan(problem, dataclasses.replace(cfg, backend="pallas_interpret")
+                   ).run(grid, ITERS, coeffs)        # Pallas kernel (interpret)
 
-    for name, out in [("engine", eng), ("pallas", pal)]:
+    for name, out in [("engine", out_eng), ("pallas", out_pal)]:
         err = float(jnp.max(jnp.abs(out - ref)))
         print(f"{name:8s} max|err| vs oracle = {err:.3e}")
         assert err < 1e-4, name
 
     print(f"\nblocked == unblocked for bsize={bsize}, par_time={par_time} "
           f"({ITERS} iters, grid {GRID}).")
-    print("predicted on TPU v5e:", best.describe())
+    print("model vs kernel DMA traffic:", eng.traffic_report())
 
 
 if __name__ == "__main__":

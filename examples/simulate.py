@@ -1,7 +1,7 @@
 """Long-running stencil simulation with checkpoint/restart — the paper's
 application wired to the fault-tolerance substrate.
 
-Runs an iterative Diffusion/Hotspot simulation in super-steps of
+Builds one autotuned ``StencilPlan`` and advances it in super-steps of
 ``par_time`` fused iterations, checkpointing the grid every N super-steps.
 Kill it mid-run and start it again: it resumes from the latest snapshot
 (integrity-checked, atomic). ``--inject-failure`` simulates a device loss.
@@ -15,10 +15,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import RunConfig, StencilProblem, plan
 from repro.checkpoint import CheckpointManager
-from repro.core import STENCILS, autotune, default_coeffs
-from repro.core.engine import blocked_superstep
-from repro.core.blocking import BlockGeometry
+from repro.core import STENCILS
 from repro.data import make_stencil_inputs
 
 
@@ -38,10 +37,10 @@ def main():
     st = STENCILS[args.stencil]
     dims = (args.dim,) * 2 if st.ndim == 2 else \
         (max(32, args.dim // 8), args.dim // 2, args.dim // 2)
-    coeffs = default_coeffs(st)
-    best = autotune(st, dims, args.iters)[0]
-    pt, bsize = best.geom.par_time, best.geom.bsize
-    geom = BlockGeometry(st.ndim, dims, st.radius, pt, bsize)
+    sim = plan(StencilProblem(st, dims),
+               RunConfig(backend="engine", autotune=True,
+                         iters_hint=args.iters))
+    pt, bsize = sim.geometry.par_time, sim.geometry.bsize
     n_super = -(-args.iters // pt)
     print(f"{st.name} {dims}, {args.iters} iters = {n_super} super-steps "
           f"of par_time={pt}, bsize={bsize}")
@@ -65,8 +64,8 @@ def main():
             if s in fails:
                 fails.remove(s)
                 raise RuntimeError(f"injected failure at super-step {s}")
-            steps = jnp.minimum(pt, args.iters - s * pt)
-            grid = blocked_superstep(st, geom, grid, coeffs, steps, aux)
+            steps = min(pt, args.iters - s * pt)
+            grid = sim.run(grid, steps, aux=aux)   # one super-step per call
         except RuntimeError as e:
             print(f"[failure] {e}; restoring latest checkpoint")
             restored, _ = mgr.restore_latest(template)

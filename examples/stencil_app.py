@@ -1,15 +1,15 @@
 """End-to-end stencil application driver — the paper's Table 4 workflow.
 
-Picks a stencil, autotunes (bsize, par_time) with the performance model,
-runs a few hundred iterations of the combined spatial+temporal blocked
-engine, and reports measured GCell/s / GFLOP/s / GB/s next to the model's
-prediction (paper §6.2 "model accuracy").
+Picks a stencil, lets ``plan()`` autotune (bsize, par_time) with the
+performance model, runs a few hundred iterations through the resulting
+``StencilPlan``, and reports measured GCell/s / GFLOP/s / GB/s next to the
+model's prediction (paper §6.2 "model accuracy").
 
     PYTHONPATH=src python examples/stencil_app.py --stencil diffusion2d \
         --dim 1024 --iters 200
 
 On this CPU container the measured numbers reflect the host, not a TPU;
-the structure (autotune -> run -> model-accuracy) is the deliverable.
+the structure (plan -> run -> model-accuracy) is the deliverable.
 """
 import argparse
 import math
@@ -18,9 +18,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import STENCILS, autotune, default_coeffs, predict
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import STENCILS
 from repro.data import make_stencil_inputs
-from repro.kernels.ops import stencil_run
 
 
 def main():
@@ -42,27 +42,23 @@ def main():
     ndim = st.ndim
     dims = (args.dim,) * ndim if ndim == 2 else \
         (max(64, args.dim // 4),) + (args.dim,) * 2
-    coeffs = default_coeffs(st)
     grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), dims, st.has_aux)
 
-    # 1. autotune on the perf model (paper §5.3)
-    cands = autotune(st, dims, args.iters)
-    best = cands[0]
-    par_time = args.par_time or best.geom.par_time
-    bsize = (args.bsize,) * (ndim - 1) if args.bsize else best.geom.bsize
-    pred = predict(st, dims, args.iters, bsize, par_time)
-    print(f"{st.name}: dims={dims} iters={args.iters}")
-    print(f"  autotuned: {pred.describe()}")
+    # 1. one plan() call: any schedule field left unset is filled by the
+    #    perf-model autotuner (paper §5.3)
+    p = plan(StencilProblem(st, dims),
+             RunConfig(backend=args.backend, par_time=args.par_time,
+                       bsize=args.bsize, iters_hint=args.iters))
+    pred = p.predicted(args.iters)
+    print(p.describe())
     print(f"  predicted run_time on TPU v5e: {pred.run_time * 1e3:.2f} ms "
           f"({pred.n_super} super-steps)")
 
-    # 2. run it (jit warm-up excluded from timing)
-    run = lambda: stencil_run(st, grid, coeffs, args.iters, par_time,  # noqa: E731
-                              bsize, aux, backend=args.backend)
-    out = run()
+    # 2. run it (jit warm-up excluded from timing); the plan is reusable
+    out = p.run(grid, args.iters, aux=aux)
     out.block_until_ready()
     t0 = time.perf_counter()
-    out = run()
+    out = p.run(grid, args.iters, aux=aux)
     out.block_until_ready()
     dt = time.perf_counter() - t0
 

@@ -1,0 +1,23 @@
+"""Public API: ``StencilProblem`` -> ``plan()`` -> ``StencilPlan``.
+
+    from repro.api import StencilProblem, RunConfig, plan
+
+    problem = StencilProblem("diffusion2d", (4096, 4096))
+    p = plan(problem, RunConfig(backend="pallas_interpret", autotune=True))
+    out = p.run(grid, iters=1000)
+    print(p.describe(), p.traffic_report())
+
+Backends are pluggable via :func:`register_backend`; the built-ins are
+``reference``, ``engine``, ``pallas``, ``pallas_interpret`` and
+``distributed`` (a mesh is just config — see ``RunConfig.mesh``).
+"""
+from repro.api.backends import (Backend, get_backend, list_backends,
+                                register_backend)
+from repro.api.config import RunConfig
+from repro.api.plan import StencilPlan, plan
+from repro.api.problem import StencilProblem
+
+__all__ = [
+    "Backend", "RunConfig", "StencilPlan", "StencilProblem", "get_backend",
+    "list_backends", "plan", "register_backend",
+]

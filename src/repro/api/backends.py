@@ -1,0 +1,146 @@
+"""Backend protocol + registry.
+
+A *backend* is one executable implementation of the combined spatial/temporal
+blocked computation.  It is registered as a factory::
+
+    register_backend(name, factory)
+    factory(problem: StencilProblem, config: RunConfig,
+            geom: BlockGeometry | None) -> ExecuteFn
+    ExecuteFn(grid, coeffs, iters, aux) -> grid
+
+``plan()`` resolves the name through the registry, so adding a backend (GPU
+Pallas, batched ensembles, ...) is one ``register_backend`` call — no
+if/elif dispatch chain to edit.  The built-ins registered below:
+
+  ``reference``         unblocked oracle (kernels/ref.py) — ground truth
+  ``engine``            pure-JAX blocked engine (core/engine.py)
+  ``pallas``            Pallas kernels compiled for TPU (kernels/stencil*.py)
+  ``pallas_interpret``  same kernels, interpret mode (CPU-correctness)
+  ``distributed``       shard_map runtime over ``config.mesh``
+                        (core/distributed.py); the mesh is just config
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Protocol
+
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockGeometry
+from repro.api.config import RunConfig
+from repro.api.problem import StencilProblem
+
+#: (grid, coeffs, iters, aux) -> final grid
+ExecuteFn = Callable[..., jnp.ndarray]
+
+
+class Backend(Protocol):
+    """Factory protocol every registered backend implements."""
+
+    def __call__(self, problem: StencilProblem, config: RunConfig,
+                 geom: Optional[BlockGeometry]) -> ExecuteFn:
+        ...
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, factory: Backend, *,
+                     overwrite: bool = False) -> None:
+    """Register ``factory`` under ``name`` for use as ``RunConfig.backend``."""
+    if not callable(factory):
+        raise TypeError(f"backend factory for {name!r} is not callable")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = factory
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {list_backends()}") from None
+
+
+def list_backends() -> list:
+    return sorted(_REGISTRY)
+
+
+# --- built-in backends -------------------------------------------------------
+
+def _reference_backend(problem, config, geom):
+    from repro.kernels.ref import oracle_run
+    st = problem.stencil
+
+    def execute(grid, coeffs, iters, aux=None):
+        return oracle_run(st, grid, coeffs, iters, aux)
+    return execute
+
+
+def _engine_backend(problem, config, geom):
+    from repro.core.engine import run_blocked
+    st = problem.stencil
+    par_time, bsize = geom.par_time, geom.bsize
+
+    def execute(grid, coeffs, iters, aux=None):
+        return run_blocked(st, grid, coeffs, iters, par_time, bsize, aux)
+    return execute
+
+
+def _make_pallas_backend(force_interpret: bool):
+    def factory(problem, config, geom):
+        from repro.kernels.ops import pack_coeffs, run_pallas
+        if problem.jnp_dtype != jnp.float32:
+            raise ValueError("the Pallas kernels are f32-only "
+                             f"(problem.dtype={problem.dtype})")
+        st = problem.stencil
+        interpret = force_interpret or config.interpret
+
+        def execute(grid, coeffs, iters, aux=None):
+            return run_pallas(st, geom, grid, pack_coeffs(st, coeffs),
+                              iters, aux, interpret)
+        return execute
+    return factory
+
+
+def resolve_axis_map(problem: StencilProblem, config: RunConfig):
+    """The grid-axis -> mesh-axes decomposition the distributed backend uses.
+
+    Default when ``config.axis_map`` is unset: shard the streaming axis over
+    every mesh axis, replicate the blocked axes."""
+    if config.mesh is None:
+        raise ValueError("backend='distributed' needs config.mesh "
+                         "(and optionally config.axis_map)")
+    if config.axis_map is not None:
+        if len(config.axis_map) != problem.ndim:
+            raise ValueError(f"axis_map {config.axis_map} must have one entry "
+                             f"per grid axis ({problem.ndim})")
+        return config.axis_map
+    return (tuple(config.mesh.axis_names),) + (None,) * (problem.ndim - 1)
+
+
+def _distributed_backend(problem, config, geom):
+    from repro.core.distributed import build_distributed_fn
+    st = problem.stencil
+    mesh = config.mesh
+    axis_map = resolve_axis_map(problem, config)
+    par_time, bsize = geom.par_time, geom.bsize
+    compiled: Dict[int, Callable] = {}    # one shard_map program per iters
+
+    def execute(grid, coeffs, iters, aux=None):
+        fn = compiled.get(iters)
+        if fn is None:
+            fn = build_distributed_fn(st, problem.shape, iters, par_time,
+                                      bsize, mesh, axis_map)
+            compiled[iters] = fn
+        aux_in = aux if aux is not None else jnp.zeros((), jnp.float32)
+        return fn(grid, aux_in, coeffs)
+    return execute
+
+
+register_backend("reference", _reference_backend)
+register_backend("engine", _engine_backend)
+register_backend("pallas", _make_pallas_backend(force_interpret=False))
+register_backend("pallas_interpret", _make_pallas_backend(force_interpret=True))
+register_backend("distributed", _distributed_backend)

@@ -1,0 +1,69 @@
+"""Execution configuration — how to run a :class:`StencilProblem`.
+
+``RunConfig`` carries everything the planner needs that is *not* part of the
+problem statement: which backend, the (bsize, par_time) schedule (or
+``autotune=True`` to let the performance model choose, paper §5.3), the
+device model used for prediction/pruning, and the mesh/sharding spec for the
+distributed backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+from repro.core.perf_model import DEVICES, Device
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Backend + schedule + placement for one plan.
+
+    ``par_time``/``bsize`` left as ``None`` (or ``autotune=True``) hands the
+    choice to the performance model: candidates are enumerated, pruned by the
+    VMEM budget and ranked by predicted run time (paper §5.3).  Specifying
+    only one of the two constrains the autotuner to configurations matching
+    it.
+    """
+    backend: str = "engine"
+    par_time: Optional[int] = None
+    bsize: Optional[Union[int, Tuple[int, ...]]] = None
+    autotune: bool = False
+    device: Union[Device, str] = "tpu_v5e"
+    cell_bytes: int = 4
+    par_time_max: int = 64
+    iters_hint: int = 100        # iteration count used for ranking/prediction
+    mesh: Optional[object] = None          # jax.sharding.Mesh (distributed)
+    axis_map: Optional[Tuple] = None       # grid axis -> mesh axis names
+    interpret: bool = False      # force Pallas interpret mode
+
+    def __post_init__(self):
+        if self.par_time is not None and self.par_time < 1:
+            raise ValueError(f"par_time must be >= 1, got {self.par_time}")
+        if self.bsize is not None and not isinstance(self.bsize, int):
+            object.__setattr__(self, "bsize",
+                               tuple(int(b) for b in self.bsize))
+        if self.axis_map is not None:
+            # a bare string is one axis name, not a sequence of characters
+            object.__setattr__(
+                self, "axis_map",
+                tuple((a,) if isinstance(a, str) else tuple(a) if a else None
+                      for a in self.axis_map))
+
+    def resolved_device(self) -> Device:
+        if isinstance(self.device, Device):
+            return self.device
+        if self.device not in DEVICES:
+            raise ValueError(f"unknown device {self.device!r}; "
+                             f"have: {sorted(DEVICES)}")
+        return DEVICES[self.device]
+
+    def normalized_bsize(self, ndim: int) -> Optional[Tuple[int, ...]]:
+        """bsize as a per-blocked-dim tuple (``ndim - 1`` entries)."""
+        if self.bsize is None:
+            return None
+        if isinstance(self.bsize, int):
+            return (self.bsize,) * (ndim - 1)
+        if len(self.bsize) != ndim - 1:
+            raise ValueError(f"bsize {self.bsize} has {len(self.bsize)} "
+                             f"entries; a {ndim}D grid blocks {ndim - 1} dims")
+        return self.bsize

@@ -1,0 +1,197 @@
+"""``plan(problem, config) -> StencilPlan`` — the single public entry point.
+
+Mirrors the paper's two-phase workflow: the performance model prunes the
+(bsize, par_time) design space *offline* (§4, §5.3), then a fixed
+configuration executes many iterations.  A ``StencilPlan`` is that fixed
+configuration: reusable across calls and iteration counts, and introspectable
+(``predicted()``, ``traffic_report()``, ``describe()``) without running
+anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.api.backends import ExecuteFn, get_backend, resolve_axis_map
+from repro.api.config import RunConfig
+from repro.api.problem import StencilProblem
+from repro.core import perf_model
+from repro.core.blocking import BlockGeometry, superstep_traffic_bytes
+from repro.core.stencils import default_coeffs
+from repro.core.perf_model import Device, Prediction
+
+
+def _chip_layout(problem: StencilProblem, config: RunConfig):
+    """(n_chips, chip_grid) for the perf model; (1, None) off-mesh."""
+    if config.backend != "distributed" or config.mesh is None:
+        return 1, None
+    mesh = config.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axis_map = resolve_axis_map(problem, config)
+    chip_grid = tuple(
+        math.prod(sizes[a] for a in names) if names else 1
+        for names in axis_map)
+    return math.prod(chip_grid), chip_grid
+
+
+def _resolve_schedule(problem: StencilProblem, config: RunConfig,
+                      device: Device, n_chips: int, chip_grid):
+    """Pick (par_time, bsize): explicit, or perf-model autotuned (§5.3).
+
+    A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
+    value (the paper's tuned depths, e.g. 36, need not be powers of two);
+    the free dimension(s) are enumerated, pruned by the VMEM budget and
+    by geometric feasibility, and ranked by predicted run time."""
+    st = problem.stencil
+    par_time = config.par_time
+    bsize = config.normalized_bsize(problem.ndim)
+    if not config.autotune and par_time is not None and bsize is not None:
+        return par_time, bsize, ()
+    cands = perf_model.autotune(
+        st, problem.shape, config.iters_hint, device, config.cell_bytes,
+        config.par_time_max, n_chips, chip_grid,
+        par_time=par_time, bsize=bsize)
+    if not cands:
+        raise ValueError(
+            f"no VMEM-feasible (bsize, par_time) for {st.name} on "
+            f"{problem.shape} under {device.name} "
+            f"(par_time={par_time}, bsize={bsize}, "
+            f"par_time_max={config.par_time_max})")
+    return cands[0].geom.par_time, cands[0].geom.bsize, tuple(cands)
+
+
+def plan(problem: StencilProblem, config: Optional[RunConfig] = None,
+         ) -> "StencilPlan":
+    """Compile ``problem`` under ``config`` into a reusable ``StencilPlan``."""
+    if config is None:
+        config = RunConfig()
+    factory = get_backend(config.backend)       # fail fast on unknown names
+    device = config.resolved_device()
+    n_chips, chip_grid = _chip_layout(problem, config)
+    # The unblocked oracle ignores (bsize, par_time): an unresolvable or
+    # invalid schedule degrades a 'reference' plan to geometry-less instead
+    # of failing (legacy stencil_run never validated the oracle's schedule).
+    geom, cands = None, ()
+    try:
+        par_time, bsize, cands = _resolve_schedule(problem, config, device,
+                                                   n_chips, chip_grid)
+        geom = BlockGeometry(problem.ndim, problem.shape,
+                             problem.stencil.radius, par_time, tuple(bsize))
+    except ValueError:
+        if config.backend != "reference":
+            raise
+    execute = factory(problem, config, geom)
+    return StencilPlan(problem=problem, config=config, geometry=geom,
+                       backend=config.backend, device=device,
+                       n_chips=n_chips, chip_grid=chip_grid,
+                       candidates=cands, _execute=execute)
+
+
+@dataclasses.dataclass
+class StencilPlan:
+    """A compiled, reusable executable for one (problem, config) pair."""
+    problem: StencilProblem
+    config: RunConfig
+    geometry: Optional[BlockGeometry]
+    backend: str
+    device: Device
+    n_chips: int
+    chip_grid: Optional[tuple]
+    #: autotuner candidates ranked best-first (empty when the schedule was
+    #: pinned explicitly) — candidates[0] is the compiled schedule
+    candidates: tuple
+    _execute: ExecuteFn = dataclasses.field(repr=False)
+
+    # --- execution ----------------------------------------------------------
+    def run(self, grid, iters: int, coeffs: Optional[dict] = None, *,
+            aux=None) -> jnp.ndarray:
+        """Advance ``grid`` by ``iters`` time-steps.
+
+        ``coeffs`` defaults to :func:`~repro.core.stencils.default_coeffs`;
+        ``aux`` is the Hotspot ``power`` grid (required iff the stencil has
+        an aux stream).  The plan is reusable: call ``run`` any number of
+        times, with any ``iters``."""
+        grid = jnp.asarray(grid, self.problem.jnp_dtype)
+        if tuple(grid.shape) != self.problem.shape:
+            raise ValueError(f"grid shape {grid.shape} != problem shape "
+                             f"{self.problem.shape}")
+        iters = int(iters)
+        if iters < 0:
+            raise ValueError(f"iters must be >= 0, got {iters}")
+        if coeffs is None:
+            coeffs = default_coeffs(self.problem.stencil,
+                                    self.problem.jnp_dtype)
+        if self.problem.needs_aux:
+            if aux is None:
+                raise ValueError(f"{self.problem.stencil.name} needs an aux "
+                                 "(power) grid")
+            aux = jnp.asarray(aux, self.problem.jnp_dtype)
+            if tuple(aux.shape) != self.problem.shape:
+                raise ValueError(f"aux shape {aux.shape} != problem shape "
+                                 f"{self.problem.shape}")
+        elif aux is not None:
+            raise ValueError(f"{self.problem.stencil.name} takes no aux grid")
+        if iters == 0:
+            return grid
+        return self._execute(grid, coeffs, iters, aux)
+
+    # --- introspection ------------------------------------------------------
+    def predicted(self, iters: Optional[int] = None,
+                  device: Optional[Device] = None) -> Prediction:
+        """Performance-model :class:`Prediction` for this plan (paper §4)."""
+        geom = self._require_geometry("predicted()")
+        return perf_model.predict(
+            self.problem.stencil, self.problem.shape,
+            iters if iters is not None else self.config.iters_hint,
+            geom.bsize, geom.par_time, device or self.device,
+            self.config.cell_bytes, self.n_chips, self.chip_grid)
+
+    def traffic_report(self, iters: Optional[int] = None) -> dict:
+        """Model traffic (paper Eq. 7/8) vs. the Pallas kernels' exact DMA
+        schedule — the hardware-free 'model accuracy' of Table 4."""
+        from repro.kernels.ops import dma_traffic_bytes
+        geom = self._require_geometry("traffic_report()")
+        st = self.problem.stencil
+        cb = self.config.cell_bytes
+        model = superstep_traffic_bytes(geom, st.num_read, st.num_write, cb)
+        kernel = dma_traffic_bytes(st, geom, cb)
+        report = {
+            "model_bytes_per_superstep": model,
+            "kernel_dma_bytes_per_superstep": kernel,
+            "traffic_accuracy": model / kernel,
+            "redundancy": geom.redundancy,
+            "vmem_bytes": geom.vmem_bytes(cb, st.has_aux),
+        }
+        if iters is not None:
+            n_super = math.ceil(iters / geom.par_time)
+            report["n_super"] = n_super
+            report["model_bytes_total"] = model * n_super
+            report["kernel_dma_bytes_total"] = kernel * n_super
+        return report
+
+    def describe(self) -> str:
+        st = self.problem.stencil
+        lines = [f"StencilPlan[{self.backend}] {st.name} "
+                 f"{self.problem.shape} {self.problem.dtype}"]
+        if self.geometry is not None:
+            g = self.geometry
+            lines.append(f"  schedule: bsize={g.bsize} par_time={g.par_time} "
+                         f"csize={g.csize} bnum={g.bnum} "
+                         f"redundancy={g.redundancy:.3f}")
+            lines.append("  predicted: " + self.predicted().describe())
+        else:
+            lines.append("  schedule: none (unblocked oracle)")
+        if self.n_chips > 1:
+            lines.append(f"  mesh: {self.n_chips} chips, "
+                         f"chip_grid={self.chip_grid}")
+        return "\n".join(lines)
+
+    def _require_geometry(self, what: str) -> BlockGeometry:
+        if self.geometry is None:
+            raise ValueError(f"{what} needs a block geometry; this "
+                             f"'{self.backend}' plan was built without a "
+                             "feasible (bsize, par_time)")
+        return self.geometry

@@ -1,0 +1,81 @@
+"""Declarative problem description — what to compute, not how.
+
+``StencilProblem`` is the immutable front half of the two-phase workflow the
+paper prescribes (§4, §5.3): describe the computation once, then let
+``repro.api.plan`` pair it with a :class:`~repro.api.config.RunConfig` to
+produce an executable :class:`~repro.api.plan.StencilPlan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core.stencils import STENCILS, Stencil
+
+#: Supported boundary conditions.  The paper (§5.1) clamps every out-of-bound
+#: neighbor to the boundary cell (edge replication); that is the only BC the
+#: engine/kernels implement today.
+BOUNDARIES = ("clamp",)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProblem:
+    """An iterated-stencil computation on a fixed grid.
+
+    Parameters
+    ----------
+    stencil:
+        A :class:`~repro.core.stencils.Stencil` or the name of one of the
+        registered paper stencils (``"diffusion2d"``, ``"hotspot3d"``, ...).
+    shape:
+        Grid extents, streaming axis first (``(ny, nx)`` / ``(nz, ny, nx)``).
+    dtype:
+        Cell dtype (normalized to a canonical string; f32 is the paper's).
+    boundary:
+        Boundary condition; only ``"clamp"`` (paper §5.1) is supported.
+    aux:
+        Auxiliary-input spec: ``None`` inherits ``stencil.has_aux`` (Hotspot's
+        ``power`` grid); an explicit bool must agree with the stencil.
+    """
+    stencil: Union[Stencil, str]
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    boundary: str = "clamp"
+    aux: Optional[bool] = None
+
+    def __post_init__(self):
+        st = self.stencil
+        if isinstance(st, str):
+            if st not in STENCILS:
+                raise ValueError(f"unknown stencil {st!r}; "
+                                 f"registered: {sorted(STENCILS)}")
+            st = STENCILS[st]
+            object.__setattr__(self, "stencil", st)
+        shape = tuple(int(d) for d in self.shape)
+        object.__setattr__(self, "shape", shape)
+        if len(shape) != st.ndim:
+            raise ValueError(f"{st.name} is {st.ndim}D but shape={shape}")
+        if any(d < 1 for d in shape):
+            raise ValueError(f"non-positive grid extent in {shape}")
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(f"boundary {self.boundary!r} not supported "
+                             f"(have: {BOUNDARIES})")
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+        if self.aux is not None and bool(self.aux) != st.has_aux:
+            raise ValueError(
+                f"aux={self.aux} conflicts with {st.name} "
+                f"(stencil.has_aux={st.has_aux})")
+
+    @property
+    def ndim(self) -> int:
+        return self.stencil.ndim
+
+    @property
+    def needs_aux(self) -> bool:
+        return self.stencil.has_aux if self.aux is None else bool(self.aux)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)

@@ -1,0 +1,49 @@
+"""Version shims over moving jax APIs.
+
+The repo is written against the current jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams``); older releases spell
+these differently.  Everything that touches one of those names goes through
+this module so the rest of the codebase stays on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        # pre-0.5 jax calls the replication check ``check_rep``
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(name) -> int:
+    """Static mesh-axis size from inside shard_map (``jax.lax.axis_size``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)   # static int for a static operand
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (current) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -85,8 +85,10 @@ class BlockGeometry:
     # --- paper Eq. (7): traversed cells per blocked dimension ---------------
     @property
     def trav(self) -> Tuple[int, ...]:
-        return tuple(n * c + 2 * self.size_halo
-                     for n, c in zip(self.bnum, self.csize))
+        """Alias of :attr:`padded_dims`: the Eq. (7) 'traversed' extent
+        (``bnum * csize + 2*halo``) is exactly the padded extent the
+        engine/kernels see — one definition, two paper names."""
+        return self.padded_dims
 
     # --- paper Eq. (6): cells read from external memory per input buffer ----
     @property
@@ -124,8 +126,25 @@ class BlockGeometry:
         return win + stream + out + aux
 
 
-def choose_bsize_candidates(ndim: int, dims: Sequence[int]) -> list:
-    """Power-of-two block extents, lane-aligned (paper §5.3 restrictions)."""
+def bsize_feasible(rad: int, par_time: int, bsize: Sequence[int]) -> bool:
+    """True iff ``bsize`` yields a valid geometry after halo widening.
+
+    Small grids at high ``par_time`` otherwise produce candidates that
+    :class:`BlockGeometry` rejects: the compute block ``csize = bsize -
+    2*rad*par_time`` collapses to <= 0.  (No grid-extent check is needed: a
+    block can never exceed the padded extent, since ``padded = bnum*csize +
+    2*halo >= csize + 2*halo = bsize`` whenever csize > 0.)"""
+    halo = rad * par_time
+    return all(b > 2 * halo for b in bsize)
+
+
+def choose_bsize_candidates(ndim: int, dims: Sequence[int], rad: int = 1,
+                            par_time: int | None = None) -> list:
+    """Power-of-two block extents, lane-aligned (paper §5.3 restrictions).
+
+    When ``par_time`` is given, candidates infeasible for that temporal
+    depth (see :func:`bsize_feasible`) are dropped; the result may be empty
+    — callers autotuning a small grid must handle that, not crash."""
     out = []
     if ndim == 2:
         b = LANE * 2
@@ -137,6 +156,8 @@ def choose_bsize_candidates(ndim: int, dims: Sequence[int]) -> list:
         while b <= max(32, min(dims[1], dims[2], 512)):
             out.append((b, b))   # square blocks for 3D (paper §5.3)
             b *= 2
+    if par_time is not None:
+        out = [bs for bs in out if bsize_feasible(rad, par_time, bs)]
     return out
 
 

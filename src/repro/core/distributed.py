@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.blocking import BlockGeometry
 from repro.core.engine import blocked_superstep
 from repro.core.stencils import Stencil
@@ -39,14 +40,14 @@ def _linear_index(axis_names: Tuple[str, ...]) -> jnp.ndarray:
     """Linearized shard index over (possibly several) mesh axes."""
     idx = jax.lax.axis_index(axis_names[0])
     for name in axis_names[1:]:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * compat.axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
 def _axis_total(axis_names: Tuple[str, ...]) -> int:
     n = 1
     for name in axis_names:
-        n *= jax.lax.axis_size(name)
+        n *= compat.axis_size(name)
     return n
 
 
@@ -191,9 +192,9 @@ def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
         return jax.lax.fori_loop(0, n_super, superstep, g)
 
     aux_spec = spec if has_aux else P()
-    shmapped = jax.shard_map(local_run, mesh=mesh,
-                             in_specs=(spec, aux_spec, P()),
-                             out_specs=spec, check_vma=False)
+    shmapped = compat.shard_map(local_run, mesh=mesh,
+                                in_specs=(spec, aux_spec, P()),
+                                out_specs=spec, check_vma=False)
     return jax.jit(shmapped,
                    in_shardings=(NamedSharding(mesh, spec),
                                  NamedSharding(mesh, aux_spec),

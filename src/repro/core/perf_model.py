@@ -20,7 +20,8 @@ import dataclasses
 import math
 from typing import Sequence
 
-from repro.core.blocking import (BlockGeometry, LANE, choose_bsize_candidates,
+from repro.core.blocking import (BlockGeometry, LANE, bsize_feasible,
+                                 choose_bsize_candidates,
                                  superstep_traffic_bytes)
 from repro.core.stencils import Stencil
 
@@ -128,20 +129,37 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
 def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
              device: Device = TPU_V5E, cell_bytes: int = 4,
              par_time_max: int = 64, n_chips: int = 1,
-             chip_grid: Sequence[int] | None = None) -> list:
+             chip_grid: Sequence[int] | None = None, *,
+             par_time: int | None = None,
+             bsize: Sequence[int] | None = None) -> list:
     """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
     par_time, drop configs whose working set exceeds the VMEM budget, rank by
-    predicted run time. Returns predictions sorted best-first."""
-    cands = []
-    for bsize in choose_bsize_candidates(len(dims), dims):
-        pt = 1
+    predicted run time. Returns predictions sorted best-first.
+
+    A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
+    value (the paper's tuned depths, e.g. 36, need not be powers of two);
+    only the free dimension(s) are enumerated.  May return ``[]`` when
+    nothing is feasible — callers must not index blindly."""
+    if par_time is not None:
+        pts = [par_time]
+    else:
+        pts, pt = [], 1
         while pt <= par_time_max:
-            if min(bsize) > 2 * stencil.radius * pt:
-                p = predict(stencil, dims, iters, bsize, pt, device,
-                            cell_bytes, n_chips, chip_grid)
-                if p.vmem_bytes <= device.vmem_budget:
-                    cands.append(p)
+            pts.append(pt)
             pt *= 2
+    cands = []
+    for pt in pts:
+        if bsize is not None:
+            # feasibility mirrors choose_bsize_candidates' filter
+            bss = ([tuple(bsize)]
+                   if bsize_feasible(stencil.radius, pt, bsize) else [])
+        else:
+            bss = choose_bsize_candidates(len(dims), dims, stencil.radius, pt)
+        for bs in bss:
+            p = predict(stencil, dims, iters, bs, pt, device,
+                        cell_bytes, n_chips, chip_grid)
+            if p.vmem_bytes <= device.vmem_budget:
+                cands.append(p)
     cands.sort(key=lambda p: p.run_time)
     return cands
 

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_KV = 512
@@ -147,7 +149,7 @@ def _flash_fwd_pallas(q, k, v, causal: bool, block_q: int, block_kv: int,
             jax.ShapeDtypeStruct((B * H, Sq, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qt, kt, vt)
     o = o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
@@ -271,7 +273,7 @@ def _flash_bwd_pallas(q, k, v, o, lse, do, causal: bool, block_q: int,
         out_specs=pl.BlockSpec((None, block_q, D), lambda h, i: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qt, kt, vt, dot, lset, dltt)
 
@@ -297,7 +299,7 @@ def _flash_bwd_pallas(q, k, v, o, lse, do, causal: bool, block_q: int,
             jax.ShapeDtypeStruct((B * H, Skv, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qt, kt, vt, dot, lset, dltt)
 

@@ -1,13 +1,12 @@
-"""jit'd dispatch wrappers around the stencil implementations.
+"""Pallas dispatch + legacy entry-point shim.
 
-``stencil_run(..., backend=...)`` is the one public entry point:
+The public API lives in ``repro.api`` (``StencilProblem`` -> ``plan()`` ->
+``StencilPlan``); this module keeps the Pallas super-step driver that the
+``pallas``/``pallas_interpret`` backends compile to, the exact DMA-traffic
+accounting, and ``stencil_run`` — the deprecated pre-``plan()`` entry point,
+now a thin shim.
 
-  backend="reference"         unblocked oracle (kernels/ref.py)
-  backend="engine"            pure-JAX blocked engine (core/engine.py)
-  backend="pallas_interpret"  Pallas kernels, interpret mode (CPU-correctness)
-  backend="pallas"            Pallas kernels, compiled for TPU
-
-The Pallas path mirrors run_blocked's super-step loop: edge-pad the blocked
+The Pallas path mirrors the engine's super-step loop: edge-pad the blocked
 dims, launch one kernel per super-step (``ceil(iters/par_time)``), slice the
 compute columns back out.  ``iters % par_time`` is handled in-kernel by PE
 forwarding, exactly like the paper's unused PEs.
@@ -15,15 +14,14 @@ forwarding, exactly like the paper's unused PEs.
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockGeometry
-from repro.core.engine import run_blocked
 from repro.core.stencils import Stencil
-from repro.kernels.ref import oracle_run
 from repro.kernels.stencil2d import superstep_2d
 from repro.kernels.stencil3d import superstep_3d
 
@@ -49,9 +47,10 @@ def _slice_blocked(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
 
 @partial(jax.jit,
          static_argnames=("stencil", "geom", "iters", "interpret"))
-def _run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
-                coeffs_packed: jnp.ndarray, iters: int,
-                aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
+def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
+               coeffs_packed: jnp.ndarray, iters: int,
+               aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
+    """``iters`` time-steps via the streaming Pallas kernels."""
     superstep = superstep_2d if geom.ndim == 2 else superstep_3d
     n_super = math.ceil(iters / geom.par_time)
     aux_p = _pad_blocked(aux, geom) if aux is not None else None
@@ -97,18 +96,18 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
 def stencil_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
                 par_time: int, bsize, aux: jnp.ndarray | None = None,
                 backend: str = "pallas_interpret") -> jnp.ndarray:
-    """Run ``iters`` time-steps with the selected implementation."""
-    if stencil.has_aux and aux is None:
-        raise ValueError(f"{stencil.name} needs an aux (power) grid")
-    if backend == "reference":
-        return oracle_run(stencil, grid, coeffs, iters, aux)
-    if isinstance(bsize, int):
-        bsize = (bsize,) * (grid.ndim - 1)
-    if backend == "engine":
-        return run_blocked(stencil, grid, coeffs, iters, par_time, bsize, aux)
-    if backend not in ("pallas", "pallas_interpret"):
-        raise ValueError(f"unknown backend {backend!r}")
-    geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time,
-                         tuple(bsize))
-    return _run_pallas(stencil, geom, grid, pack_coeffs(stencil, coeffs),
-                       iters, aux, backend == "pallas_interpret")
+    """Deprecated: use ``repro.api.plan`` instead.
+
+    Thin shim over ``plan(StencilProblem(...), RunConfig(...)).run(...)``,
+    kept for old call sites.  Results are identical to the plan path.
+    """
+    warnings.warn(
+        "stencil_run is deprecated; use repro.api.plan(StencilProblem(...), "
+        "RunConfig(backend=...)).run(grid, iters, coeffs, aux=aux)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import RunConfig, StencilProblem, plan
+    grid = jnp.asarray(grid)
+    problem = StencilProblem(stencil, tuple(grid.shape),
+                             dtype=grid.dtype.name)   # legacy: dtype-generic
+    config = RunConfig(backend=backend, par_time=par_time, bsize=bsize)
+    return plan(problem, config).run(grid, iters, coeffs, aux=aux)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 from repro.core.blocking import BlockGeometry
 from repro.core.stencils import Stencil
 
@@ -203,6 +205,6 @@ def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
         scratch_shapes=scratch,
         out_shape=jax.ShapeDtypeStruct((nz, nyp, nxp), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(steps_arr, *operands)

@@ -29,6 +29,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import _normal
 from repro.parallel import current_rules, logical_shard
 
@@ -172,9 +173,10 @@ def _ep_a2a_path(x, p, cfg, mesh, rules):
             got * w_s[:, None].astype(x_l.dtype))
         return out.reshape(Bl, Sl, D), aux
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(x_spec, P(None, None), w_in_spec, w_out_spec),
-                       out_specs=(x_spec, P()), check_vma=False)
+    fn = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_in_spec, w_out_spec),
+        out_specs=(x_spec, P()), check_vma=False)
     return fn(x, p["router"], p["w_in"], p["w_out"])
 
 
@@ -206,11 +208,12 @@ def _ep_bcast_path(x, p, cfg, mesh, rules):
         out = jax.lax.psum(out, ep)
         return out.reshape(Bl, Sl, D), aux
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(x_spec, P(None, None),
-                                 P(ep, None, rules.get("wt_fsdp")),
-                                 P(ep, rules.get("wt_fsdp"), None)),
-                       out_specs=(x_spec, P()), check_vma=False)
+    fn = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, P(None, None),
+                  P(ep, None, rules.get("wt_fsdp")),
+                  P(ep, rules.get("wt_fsdp"), None)),
+        out_specs=(x_spec, P()), check_vma=False)
     return fn(x, p["router"], p["w_in"], p["w_out"])
 
 

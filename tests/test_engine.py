@@ -1,10 +1,12 @@
-"""Blocked engine == unblocked oracle, for every paper stencil."""
+"""Blocked engine == unblocked oracle, for every paper stencil (via ``plan()``),
+plus BlockGeometry unit checks against the paper's equations."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import STENCILS, default_coeffs, make_star, run_blocked
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import STENCILS, default_coeffs, make_star
 from repro.core.blocking import BlockGeometry
 from repro.kernels.ref import oracle_run
 
@@ -21,6 +23,12 @@ def _grid(stencil, dims, seed=0):
     return g, aux
 
 
+def _engine_run(st, g, c, iters, par_time, bsize, aux=None):
+    p = plan(StencilProblem(st, tuple(g.shape)),
+             RunConfig(backend="engine", par_time=par_time, bsize=bsize))
+    return p.run(g, iters, c, aux=aux)
+
+
 @pytest.mark.parametrize("name", ["diffusion2d", "hotspot2d"])
 @pytest.mark.parametrize("iters,par_time,bsize", [
     (1, 1, 24), (4, 4, 24), (7, 4, 32), (8, 2, 20), (3, 8, 40),
@@ -31,7 +39,7 @@ def test_blocked_matches_oracle_2d(name, iters, par_time, bsize):
     g, aux = _grid(st, dims)
     c = default_coeffs(st)
     want = oracle_run(st, g, c, iters, aux)
-    got = run_blocked(st, g, c, iters, par_time, (bsize,), aux)
+    got = _engine_run(st, g, c, iters, par_time, (bsize,), aux)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -46,7 +54,7 @@ def test_blocked_matches_oracle_3d(name, iters, par_time, bsize):
     g, aux = _grid(st, dims)
     c = default_coeffs(st)
     want = oracle_run(st, g, c, iters, aux)
-    got = run_blocked(st, g, c, iters, par_time, (bsize, bsize), aux)
+    got = _engine_run(st, g, c, iters, par_time, (bsize, bsize), aux)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -57,7 +65,7 @@ def test_high_order_star():
     g, _ = _grid(st, dims)
     c = default_coeffs(st)
     want = oracle_run(st, g, c, 3)
-    got = run_blocked(st, g, c, 3, 2, (24,))
+    got = _engine_run(st, g, c, 3, 2, (24,))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -69,6 +77,7 @@ def test_geometry_matches_paper_equations():
     assert geom.csize == (4024,)           # Eq. (4)
     assert geom.bnum == (4,)               # Eq. (5): ceil(16096/4024)=4
     assert geom.trav == (4 * 4024 + 72,)   # Eq. (7)
+    assert geom.trav == geom.padded_dims   # Eq. (7) == padded extent (alias)
     # dim chosen a multiple of csize -> minimal out-of-bound (paper §5.2)
     assert geom.bnum[0] * geom.csize[0] == 16096
 
@@ -82,27 +91,21 @@ def test_box_stencil_blocked_matches_oracle():
     """Paper §6.4 portability claim: differently-shaped (box) stencils run
     through the same blocked engine unchanged."""
     from repro.core import make_box
-    from repro.core.engine import run_blocked
-    from repro.kernels.ref import oracle_run
-    from repro.core.stencils import default_coeffs
     st = make_box(2, 1)          # 9-point box
     key = jax.random.PRNGKey(3)
     grid = jax.random.uniform(key, (96, 160), jnp.float32, 0.5, 2.0)
     coeffs = default_coeffs(st)
     ref = oracle_run(st, grid, coeffs, 6, None)
-    out = run_blocked(st, grid, coeffs, 6, par_time=3, bsize=(64,))
+    out = _engine_run(st, grid, coeffs, 6, 3, (64,))
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
 
 
 def test_box3d_stencil_blocked_matches_oracle():
     from repro.core import make_box
-    from repro.core.engine import run_blocked
-    from repro.kernels.ref import oracle_run
-    from repro.core.stencils import default_coeffs
     st = make_box(3, 1)          # 27-point box
     key = jax.random.PRNGKey(4)
     grid = jax.random.uniform(key, (24, 48, 48), jnp.float32, 0.5, 2.0)
     coeffs = default_coeffs(st)
     ref = oracle_run(st, grid, coeffs, 4, None)
-    out = run_blocked(st, grid, coeffs, 4, par_time=2, bsize=(24, 24))
+    out = _engine_run(st, grid, coeffs, 4, 2, (24, 24))
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-5

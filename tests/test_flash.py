@@ -97,26 +97,35 @@ def test_stub_path_matches_oracle():
     assert jnp.max(jnp.abs(o - r)) < 1e-5
 
 
-# --- property-based sweep (hypothesis) ----------------------------------------
+# --- property-based sweep (hypothesis is an OPTIONAL dependency) --------------
+# Gated so the rest of this module still collects/runs without it; the
+# sweep itself reports as skipped via pytest.importorskip.
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
 
-
-@settings(max_examples=12, deadline=None)
-@given(st.integers(1, 2),                    # B
-       st.sampled_from([64, 128]),           # S
-       st.sampled_from([(2, 1), (2, 2), (4, 2)]),   # (H, Hkv)
-       st.sampled_from([32, 64]),            # D
-       st.sampled_from([32, 64]),            # block_q
-       st.sampled_from([32, 64]),            # block_kv
-       st.booleans())                        # causal
-def test_flash_property_any_geometry(B, S, heads, D, bq, bkv, causal):
-    H, Hkv = heads
-    q, k, v = _mk(B, S, S, H, Hkv, D, jnp.float32, seed=B * S + H + D)
-    o = flash_attention(q, k, v, causal, bq, bkv, True)
-    r = ref_attention(q, k, v, causal=causal)
-    assert jnp.max(jnp.abs(o - r)) < 1e-4
-    # row-stochastic sanity: outputs are convex combos of V rows, so they
-    # stay within [min(V), max(V)] per head dim
-    assert float(jnp.max(o)) <= float(jnp.max(v)) + 1e-4
-    assert float(jnp.min(o)) >= float(jnp.min(v)) - 1e-4
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 2),                    # B
+           st.sampled_from([64, 128]),           # S
+           st.sampled_from([(2, 1), (2, 2), (4, 2)]),   # (H, Hkv)
+           st.sampled_from([32, 64]),            # D
+           st.sampled_from([32, 64]),            # block_q
+           st.sampled_from([32, 64]),            # block_kv
+           st.booleans())                        # causal
+    def test_flash_property_any_geometry(B, S, heads, D, bq, bkv, causal):
+        H, Hkv = heads
+        q, k, v = _mk(B, S, S, H, Hkv, D, jnp.float32, seed=B * S + H + D)
+        o = flash_attention(q, k, v, causal, bq, bkv, True)
+        r = ref_attention(q, k, v, causal=causal)
+        assert jnp.max(jnp.abs(o - r)) < 1e-4
+        # row-stochastic sanity: outputs are convex combos of V rows, so they
+        # stay within [min(V), max(V)] per head dim
+        assert float(jnp.max(o)) <= float(jnp.max(v)) + 1e-4
+        assert float(jnp.min(o)) >= float(jnp.min(v)) - 1e-4
+else:
+    def test_flash_property_any_geometry():
+        pytest.importorskip("hypothesis")

@@ -1,11 +1,12 @@
-"""Pallas kernels (interpret mode) vs. pure-jnp oracle — shape/param sweeps."""
+"""Pallas kernels (interpret mode) vs. pure-jnp oracle — shape/param sweeps,
+driven through the public ``plan()`` API."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import RunConfig, StencilProblem, plan
 from repro.core import STENCILS, default_coeffs
-from repro.kernels.ops import stencil_run
 from repro.kernels.ref import oracle_run
 
 
@@ -17,6 +18,13 @@ def _data(stencil, dims, seed=0):
         aux = jax.random.uniform(jax.random.fold_in(k, 1), dims,
                                  jnp.float32, 0.0, 0.1)
     return g, aux
+
+
+def _plan_run(st, g, c, iters, par_time, bsize, aux=None,
+              backend="pallas_interpret"):
+    p = plan(StencilProblem(st, tuple(g.shape)),
+             RunConfig(backend=backend, par_time=par_time, bsize=bsize))
+    return p.run(g, iters, c, aux=aux)
 
 
 @pytest.mark.parametrize("name", ["diffusion2d", "hotspot2d"])
@@ -32,8 +40,7 @@ def test_pallas2d_matches_oracle(name, dims, iters, par_time, bsize):
     g, aux = _data(st, dims)
     c = default_coeffs(st)
     want = oracle_run(st, g, c, iters, aux)
-    got = stencil_run(st, g, c, iters, par_time, bsize, aux,
-                      backend="pallas_interpret")
+    got = _plan_run(st, g, c, iters, par_time, bsize, aux)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -50,8 +57,7 @@ def test_pallas3d_matches_oracle(name, dims, iters, par_time, bsize):
     g, aux = _data(st, dims)
     c = default_coeffs(st)
     want = oracle_run(st, g, c, iters, aux)
-    got = stencil_run(st, g, c, iters, par_time, bsize, aux,
-                      backend="pallas_interpret")
+    got = _plan_run(st, g, c, iters, par_time, bsize, aux)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -60,7 +66,7 @@ def test_backends_agree():
     st = STENCILS["diffusion2d"]
     g, _ = _data(st, (21, 45))
     c = default_coeffs(st)
-    outs = [stencil_run(st, g, c, 5, 2, 24, backend=b)
+    outs = [_plan_run(st, g, c, 5, 2, 24, backend=b)
             for b in ("reference", "engine", "pallas_interpret")]
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),

@@ -1,16 +1,28 @@
-"""Hypothesis property tests on the system's invariants."""
-import math
+"""Hypothesis property tests on the system's invariants (via ``plan()``)."""
+import pytest
 
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need the optional hypothesis dep")
+import hypothesis.strategies as st   # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
-from repro.core import STENCILS, default_coeffs
-from repro.core.blocking import BlockGeometry, superstep_traffic_bytes
-from repro.kernels.ops import stencil_run
-from repro.kernels.ref import oracle_run
+import jax                           # noqa: E402
+import jax.numpy as jnp              # noqa: E402
+import numpy as np                   # noqa: E402
+
+from repro.api import RunConfig, StencilProblem, plan        # noqa: E402
+from repro.core import STENCILS, default_coeffs              # noqa: E402
+from repro.core.blocking import (BlockGeometry,              # noqa: E402
+                                 superstep_traffic_bytes)
+from repro.kernels.ref import oracle_run                     # noqa: E402
+
+
+def _plan_run(stencil, g, c, iters, par_time, bsize, aux=None,
+              backend="pallas_interpret"):
+    p = plan(StencilProblem(stencil, tuple(g.shape)),
+             RunConfig(backend=backend, par_time=par_time, bsize=bsize))
+    return p.run(g, iters, c, aux=aux)
+
 
 _geometry2d = st.tuples(
     st.integers(2, 40),            # ny
@@ -36,8 +48,7 @@ def test_pallas_equals_oracle_any_geometry(params):
            if stencil.has_aux else None)
     c = default_coeffs(stencil)
     want = oracle_run(stencil, g, c, iters, aux)
-    got = stencil_run(stencil, g, c, iters, par_time, bsize, aux,
-                      backend="pallas_interpret")
+    got = _plan_run(stencil, g, c, iters, par_time, bsize, aux)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5)
 
@@ -55,6 +66,8 @@ def test_blocking_geometry_invariants(dimy, dimx, par_time, rad, bsize):
     assert (geom.bnum[0] - 1) * geom.csize[0] < dimx
     # halo identity (Eq. 4): bsize = csize + 2*halo
     assert geom.csize[0] + 2 * geom.size_halo == geom.bsize[0]
+    # Eq. (7) traversed extent == padded extent (single definition)
+    assert geom.trav == geom.padded_dims
     # redundancy >= 1, monotone in halo
     assert geom.redundancy >= 1.0
     # traffic accounting is positive and >= compulsory traffic
@@ -71,7 +84,7 @@ def test_diffusion_maximum_principle(ny, nx, seed):
     g = jax.random.uniform(jax.random.PRNGKey(seed), (ny, nx),
                            jnp.float32, -1.0, 1.0)
     c = default_coeffs(stencil)   # convex: coefficients sum to 1
-    out = stencil_run(stencil, g, c, 5, 2, 16, backend="pallas_interpret")
+    out = _plan_run(stencil, g, c, 5, 2, 16)
     assert float(jnp.max(out)) <= float(jnp.max(g)) + 1e-5
     assert float(jnp.min(out)) >= float(jnp.min(g)) - 1e-5
     assert not bool(jnp.any(jnp.isnan(out)))
@@ -80,14 +93,14 @@ def test_diffusion_maximum_principle(ny, nx, seed):
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 11))
 def test_temporal_blocking_is_iteration_invariant(iters):
-    """Result depends only on iteration count, not on par_time factorization."""
+    """Result depends only on iteration count, not on par_time factorization.
+    A single plan is reused across every par_time's oracle comparison."""
     stencil = STENCILS["diffusion2d"]
     g = jax.random.uniform(jax.random.PRNGKey(0), (19, 37),
                            jnp.float32, 0.5, 2.0)
     c = default_coeffs(stencil)
     ref = oracle_run(stencil, g, c, iters)
     for pt in (1, 2, 4):
-        got = stencil_run(stencil, g, c, iters, pt, 24,
-                          backend="pallas_interpret")
+        got = _plan_run(stencil, g, c, iters, pt, 24)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=3e-5, atol=3e-5)
