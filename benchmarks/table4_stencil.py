@@ -14,22 +14,24 @@ reports, per stencil on TPU v5e constants:
   * **engine HLO bytes**: counted fusion-boundary traffic of the pure-JAX
     engine for the same geometry — the ~2-orders-larger number that shows
     why the manual-DMA Pallas kernel is the production path on TPU,
-  * measured host GCell/s of the blocked engine at reduced dims (sanity
-    anchor only — CPU gathers, not TPU DMA).
+  * **measured tuning** (the paper's Table 4 "Measured" + "Model Accuracy"
+    columns): ``repro.api.tune`` times the model's top candidates on the
+    blocked engine at reduced, host-measurable dims, reports measured
+    GCell/s and model accuracy (estimated/measured time) per stencil, and
+    persists the winner in the schedule cache — a second run of this
+    benchmark is served from the cache without re-timing.
 """
 from __future__ import annotations
 
 import math
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import RunConfig, StencilProblem, plan
+from repro.api import RunConfig, StencilProblem, plan, tune
 from repro.core import STENCILS, autotune
 from repro.core.blocking import BlockGeometry
 from repro.core.engine import blocked_superstep
-from repro.data import make_stencil_inputs
 from repro.launch import hlo_analysis
 
 # paper-scale dims (>= 1 GB inputs): 16384^2 (2D), 448^3-ish (3D)
@@ -53,7 +55,10 @@ def _hlo_traffic(st, geom: BlockGeometry, dims) -> float:
     return an.hbm_bytes
 
 
-def run(n_candidates: int = 3, with_hlo: bool = True) -> list[dict]:
+def run(n_candidates: int = 3, with_hlo: bool = True,
+        cache=None) -> list[dict]:
+    """``cache``: passed through to ``RunConfig.cache`` for the measured rows
+    (None = default location, False = no persistence, str = explicit path)."""
     rows = []
     for name in ("diffusion2d", "diffusion3d", "hotspot2d", "hotspot3d"):
         st = STENCILS[name]
@@ -91,25 +96,26 @@ def run(n_candidates: int = 3, with_hlo: bool = True) -> list[dict]:
                         hlo_bytes / kernel_bytes, 1) if kernel_bytes else None
             rows.append(row)
 
-        # host sanity anchor (engine backend, reduced dims, few iters)
+        # measured tuning at host-measurable dims (Table 4 "Measured" +
+        # "Model Accuracy" columns): time the model's top candidates on the
+        # blocked engine, persist the winner in the schedule cache.
         hdims = HOST_DIMS[st.ndim]
-        hplan = plan(StencilProblem(st, hdims),
-                     RunConfig(backend="engine", autotune=True, iters_hint=8))
-        best = hplan.predicted(8)
-        grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), hdims,
-                                        st.has_aux)
-        fn = lambda: hplan.run(grid, 8, aux=aux)  # noqa: E731
-        fn().block_until_ready()
-        t0 = time.perf_counter()
-        fn().block_until_ready()
-        dt = time.perf_counter() - t0
-        rows.append({
-            "benchmark": st.name, "rank": "host-anchor",
-            "dims": hdims, "iters": 8,
-            "bsize": best.geom.bsize, "par_time": best.geom.par_time,
-            "host_gcells_s": round(math.prod(hdims) * 8 / dt / 1e9, 4),
-            "host_s": round(dt, 3),
-        })
+        hplan = tune(StencilProblem(st, hdims),
+                     RunConfig(backend="engine", iters_hint=8,
+                               tune_top_k=3, tune_warmup=1, tune_repeats=2,
+                               cache=cache))
+        for rank, c in enumerate(hplan.candidates):
+            rows.append({
+                "benchmark": st.name, "rank": f"measured-{rank}",
+                "dims": hdims, "iters": 8,
+                "bsize": c.geom.bsize, "par_time": c.geom.par_time,
+                "measured_s_per_super": round(c.measured_s, 6),
+                "measured_gcells_s": round(
+                    math.prod(hdims) * c.geom.par_time
+                    / c.measured_s / 1e9, 4),
+                "model_accuracy": c.model_accuracy,
+                "from_cache": c.from_cache,
+            })
     return rows
 
 
@@ -119,10 +125,12 @@ def main():
           f"{'GB/s':>7s} {'GFLOP/s':>8s} {'GCell/s':>8s} {'bound':>7s} "
           f"{'VMEM MiB':>8s} {'traffic acc':>11s}")
     for r in rows:
-        if r["rank"] == "host-anchor":
+        if str(r["rank"]).startswith("measured"):
+            src = "cache" if r["from_cache"] else "timed"
             print(f"{r['benchmark']:13s} {str(r['bsize']):>12s} "
-                  f"{r['par_time']:5d}   host anchor: "
-                  f"{r['host_gcells_s']:.4f} GCell/s ({r['host_s']}s)")
+                  f"{r['par_time']:5d}   measured ({src}): "
+                  f"{r['measured_gcells_s']:.4f} GCell/s @ {r['dims']}, "
+                  f"model_accuracy={r['model_accuracy']:.3g}")
             continue
         acc = r.get("traffic_accuracy")
         print(f"{r['benchmark']:13s} {str(r['bsize']):>12s} "

@@ -12,7 +12,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.api import RunConfig, StencilProblem, plan
+from repro.api import RunConfig, StencilProblem, plan, tune
 from repro.core import DIFFUSION2D, default_coeffs
 
 GRID = (512, 512)
@@ -52,6 +52,17 @@ def main():
     print(f"\nblocked == unblocked for bsize={bsize}, par_time={par_time} "
           f"({ITERS} iters, grid {GRID}).")
     print("model vs kernel DMA traffic:", eng.traffic_report())
+
+    # 3. Measured autotuning (Table 4's "Measured" column): time the model's
+    #    top candidates on the real backend and compile the fastest.  With a
+    #    cache path (the default), the winner is persisted and later plan()
+    #    calls skip the timing entirely; cache=False keeps this demo
+    #    filesystem-free.
+    meas = tune(problem, RunConfig(backend="engine", iters_hint=ITERS,
+                                   tune_top_k=2, tune_repeats=2, cache=False))
+    print("\nmeasured autotune (model shortlist, stopwatch winner):")
+    for c in meas.candidates:
+        print("  ", c.describe())
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@
     out = p.run(grid, iters=1000)
     print(p.describe(), p.traffic_report())
 
+``RunConfig(autotune="measure")`` (or the :func:`tune` helper) upgrades the
+perf-model tuning to *measured* tuning: the model's top-K candidates are
+timed on the selected backend and the winner is persisted to a schedule
+cache, so the timing cost is paid once per (problem, backend, device) key.
+
 Backends are pluggable via :func:`register_backend`; the built-ins are
 ``reference``, ``engine``, ``pallas``, ``pallas_interpret`` and
 ``distributed`` (a mesh is just config — see ``RunConfig.mesh``).
@@ -16,8 +21,11 @@ from repro.api.backends import (Backend, get_backend, list_backends,
 from repro.api.config import RunConfig
 from repro.api.plan import StencilPlan, plan
 from repro.api.problem import StencilProblem
+from repro.api.schedule_cache import ScheduleCache
+from repro.api.tuner import TunedCandidate, tune
 
 __all__ = [
-    "Backend", "RunConfig", "StencilPlan", "StencilProblem", "get_backend",
-    "list_backends", "plan", "register_backend",
+    "Backend", "RunConfig", "ScheduleCache", "StencilPlan", "StencilProblem",
+    "TunedCandidate", "get_backend", "list_backends", "plan",
+    "register_backend", "tune",
 ]

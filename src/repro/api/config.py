@@ -2,9 +2,9 @@
 
 ``RunConfig`` carries everything the planner needs that is *not* part of the
 problem statement: which backend, the (bsize, par_time) schedule (or
-``autotune=True`` to let the performance model choose, paper §5.3), the
-device model used for prediction/pruning, and the mesh/sharding spec for the
-distributed backend.
+``autotune="model"``/``"measure"`` to let the tuner choose), the device model
+used for prediction/pruning, the measured-tuning knobs and schedule-cache
+location, and the mesh/sharding spec for the distributed backend.
 """
 from __future__ import annotations
 
@@ -13,21 +13,34 @@ from typing import Optional, Tuple, Union
 
 from repro.core.perf_model import DEVICES, Device
 
+#: Accepted ``RunConfig.autotune`` modes (``False`` disables; the legacy
+#: booleans are aliases: ``True`` -> ``"model"``).
+AUTOTUNE_MODES = ("model", "measure")
+
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
     """Backend + schedule + placement for one plan.
 
-    ``par_time``/``bsize`` left as ``None`` (or ``autotune=True``) hands the
-    choice to the performance model: candidates are enumerated, pruned by the
-    VMEM budget and ranked by predicted run time (paper §5.3).  Specifying
-    only one of the two constrains the autotuner to configurations matching
+    ``par_time``/``bsize`` left as ``None`` (or ``autotune`` set) hands the
+    choice to the tuner.  ``autotune="model"`` (alias ``True``) ranks
+    candidates by the performance model alone (paper §5.3);
+    ``autotune="measure"`` takes the model's ``tune_top_k`` shortlist, times
+    each candidate on the selected backend (``repro.api.tuner``) and compiles
+    the measured winner — consulting/filling the persistent schedule cache
+    (``repro.api.schedule_cache``) so the timing cost is paid once per
+    (problem, backend, device) key.  Specifying only one of
+    ``par_time``/``bsize`` constrains the tuner to configurations matching
     it.
+
+    ``cache``: ``None`` uses the default cache location (the
+    ``REPRO_SCHEDULE_CACHE`` env var, else ``~/.cache/repro/schedules.json``);
+    a path string overrides it; ``False`` disables persistence entirely.
     """
     backend: str = "engine"
     par_time: Optional[int] = None
     bsize: Optional[Union[int, Tuple[int, ...]]] = None
-    autotune: bool = False
+    autotune: Union[bool, str] = False
     device: Union[Device, str] = "tpu_v5e"
     cell_bytes: int = 4
     par_time_max: int = 64
@@ -35,8 +48,27 @@ class RunConfig:
     mesh: Optional[object] = None          # jax.sharding.Mesh (distributed)
     axis_map: Optional[Tuple] = None       # grid axis -> mesh axis names
     interpret: bool = False      # force Pallas interpret mode
+    # --- measured-tuning knobs (autotune="measure") -------------------------
+    cache: Union[None, bool, str] = None   # schedule-cache path / False = off
+    tune_top_k: int = 4          # model candidates the tuner times
+    tune_warmup: int = 1         # untimed runs per candidate (compile+warm)
+    tune_repeats: int = 3        # timed runs per candidate (min is kept)
+    tune_iters: Optional[int] = None  # iters per timed run (None: 1 super-step)
 
     def __post_init__(self):
+        if isinstance(self.autotune, bool):
+            object.__setattr__(self, "autotune",
+                               "model" if self.autotune else False)
+        elif self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(f"autotune must be a bool or one of "
+                             f"{AUTOTUNE_MODES}, got {self.autotune!r}")
+        if self.tune_top_k < 1:
+            raise ValueError(f"tune_top_k must be >= 1, got {self.tune_top_k}")
+        if self.tune_warmup < 0 or self.tune_repeats < 1:
+            raise ValueError("need tune_warmup >= 0 and tune_repeats >= 1, "
+                             f"got {self.tune_warmup}/{self.tune_repeats}")
+        if self.tune_iters is not None and self.tune_iters < 1:
+            raise ValueError(f"tune_iters must be >= 1, got {self.tune_iters}")
         if self.par_time is not None and self.par_time < 1:
             raise ValueError(f"par_time must be >= 1, got {self.par_time}")
         if self.bsize is not None and not isinstance(self.bsize, int):

@@ -15,6 +15,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.api import schedule_cache, tuner
 from repro.api.backends import ExecuteFn, get_backend, resolve_axis_map
 from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
@@ -37,30 +38,99 @@ def _chip_layout(problem: StencilProblem, config: RunConfig):
     return math.prod(chip_grid), chip_grid
 
 
-def _resolve_schedule(problem: StencilProblem, config: RunConfig,
-                      device: Device, n_chips: int, chip_grid):
-    """Pick (par_time, bsize): explicit, or perf-model autotuned (§5.3).
+def _candidate_shortlist(problem: StencilProblem, config: RunConfig,
+                         device: Device, n_chips: int, chip_grid,
+                         top_k: Optional[int] = None):
+    """Model-ranked predictions (§5.3 pruning), best first.
 
     A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
     value (the paper's tuned depths, e.g. 36, need not be powers of two);
     the free dimension(s) are enumerated, pruned by the VMEM budget and
-    by geometric feasibility, and ranked by predicted run time."""
-    st = problem.stencil
+    by geometric feasibility, and ranked by predicted run time.  ``top_k``
+    truncates to the shortlist the measured tuner times."""
+    cands = perf_model.autotune(
+        problem.stencil, problem.shape, config.iters_hint, device,
+        config.cell_bytes, config.par_time_max, n_chips, chip_grid,
+        par_time=config.par_time,
+        bsize=config.normalized_bsize(problem.ndim), top_k=top_k)
+    if not cands:
+        raise ValueError(
+            f"no VMEM-feasible (bsize, par_time) for {problem.stencil.name} "
+            f"on {problem.shape} under {device.name} "
+            f"(par_time={config.par_time}, bsize={config.bsize}, "
+            f"par_time_max={config.par_time_max})")
+    return cands
+
+
+def _resolve_schedule(problem: StencilProblem, config: RunConfig,
+                      device: Device, n_chips: int, chip_grid):
+    """Pick (par_time, bsize): explicit, or perf-model autotuned (§5.3)."""
     par_time = config.par_time
     bsize = config.normalized_bsize(problem.ndim)
     if not config.autotune and par_time is not None and bsize is not None:
         return par_time, bsize, ()
-    cands = perf_model.autotune(
-        st, problem.shape, config.iters_hint, device, config.cell_bytes,
-        config.par_time_max, n_chips, chip_grid,
-        par_time=par_time, bsize=bsize)
-    if not cands:
-        raise ValueError(
-            f"no VMEM-feasible (bsize, par_time) for {st.name} on "
-            f"{problem.shape} under {device.name} "
-            f"(par_time={par_time}, bsize={bsize}, "
-            f"par_time_max={config.par_time_max})")
+    cands = _candidate_shortlist(problem, config, device, n_chips, chip_grid)
     return cands[0].geom.par_time, cands[0].geom.bsize, tuple(cands)
+
+
+def _resolve_measured(problem: StencilProblem, config: RunConfig,
+                      device: Device, n_chips: int, chip_grid):
+    """autotune="measure": serve the schedule from the persistent cache, or
+    time the model's shortlist on the real backend and persist the winner.
+
+    Returns ``(par_time, bsize, candidates, from_cache)`` where candidates
+    are :class:`~repro.api.tuner.TunedCandidate`, measured-best first.
+    """
+    cache = schedule_cache.ScheduleCache.resolve(config.cache)
+    key = schedule_cache.schedule_key(problem, config, device,
+                                      n_chips, chip_grid)
+    if cache is not None:
+        entry = cache.get(key)
+        if entry is not None:
+            # The cache file is documented as hand-editable JSON: a mangled
+            # or future-layout entry is a miss (re-tune), never a crash.
+            try:
+                par_time = int(entry["par_time"])
+                bsize = tuple(int(b) for b in entry["bsize"])
+                measured_s = float(entry["measured_s"])
+                accuracy = float(entry["model_accuracy"])
+                if (par_time < 1 or len(bsize) != problem.ndim - 1
+                        or any(b < 1 for b in bsize) or measured_s <= 0):
+                    raise ValueError("mangled schedule-cache entry")
+                pred = perf_model.predict(
+                    problem.stencil, problem.shape, config.iters_hint, bsize,
+                    par_time, device, config.cell_bytes, n_chips, chip_grid)
+            except (KeyError, TypeError, ValueError):
+                entry = None
+            else:
+                cand = tuner.TunedCandidate(
+                    prediction=pred, measured_s=measured_s,
+                    measured_run_time=measured_s * pred.n_super,
+                    model_accuracy=accuracy, from_cache=True)
+                return par_time, bsize, (cand,), True
+    shortlist = _candidate_shortlist(problem, config, device,
+                                     n_chips, chip_grid,
+                                     top_k=config.tune_top_k)
+    tuned = tuner.measure_candidates(problem, config, shortlist)
+    best = tuned[0]
+    if cache is not None:
+        cache.put(key, {
+            "stencil": problem.stencil.name,
+            "par_time": best.geom.par_time, "bsize": list(best.geom.bsize),
+            "measured_s": best.measured_s,
+            "model_accuracy": best.model_accuracy,
+        })
+    return best.geom.par_time, best.geom.bsize, tuned, False
+
+
+def _validate_distributed(problem: StencilProblem, config: RunConfig) -> None:
+    """Fail at plan time (not first ``run()``) when the mesh cannot shard the
+    grid evenly — ``predict`` ceil-divides, so only this check catches it."""
+    if config.backend != "distributed" or config.mesh is None:
+        return
+    from repro.core.distributed import shard_extents
+    shard_extents(problem.shape, resolve_axis_map(problem, config),
+                  config.mesh)
 
 
 def plan(problem: StencilProblem, config: Optional[RunConfig] = None,
@@ -69,15 +139,20 @@ def plan(problem: StencilProblem, config: Optional[RunConfig] = None,
     if config is None:
         config = RunConfig()
     factory = get_backend(config.backend)       # fail fast on unknown names
+    _validate_distributed(problem, config)
     device = config.resolved_device()
     n_chips, chip_grid = _chip_layout(problem, config)
     # The unblocked oracle ignores (bsize, par_time): an unresolvable or
     # invalid schedule degrades a 'reference' plan to geometry-less instead
     # of failing (legacy stencil_run never validated the oracle's schedule).
-    geom, cands = None, ()
+    geom, cands, from_cache = None, (), False
     try:
-        par_time, bsize, cands = _resolve_schedule(problem, config, device,
-                                                   n_chips, chip_grid)
+        if config.autotune == "measure":
+            par_time, bsize, cands, from_cache = _resolve_measured(
+                problem, config, device, n_chips, chip_grid)
+        else:
+            par_time, bsize, cands = _resolve_schedule(
+                problem, config, device, n_chips, chip_grid)
         geom = BlockGeometry(problem.ndim, problem.shape,
                              problem.stencil.radius, par_time, tuple(bsize))
     except ValueError:
@@ -87,7 +162,8 @@ def plan(problem: StencilProblem, config: Optional[RunConfig] = None,
     return StencilPlan(problem=problem, config=config, geometry=geom,
                        backend=config.backend, device=device,
                        n_chips=n_chips, chip_grid=chip_grid,
-                       candidates=cands, _execute=execute)
+                       candidates=cands, _execute=execute,
+                       tuned_from_cache=from_cache)
 
 
 @dataclasses.dataclass
@@ -101,9 +177,15 @@ class StencilPlan:
     n_chips: int
     chip_grid: Optional[tuple]
     #: autotuner candidates ranked best-first (empty when the schedule was
-    #: pinned explicitly) — candidates[0] is the compiled schedule
+    #: pinned explicitly) — candidates[0] is the compiled schedule.  Model
+    #: autotuning yields :class:`~repro.core.perf_model.Prediction`s;
+    #: measured autotuning yields :class:`~repro.api.tuner.TunedCandidate`s
+    #: carrying measured seconds and model accuracy per candidate.
     candidates: tuple
     _execute: ExecuteFn = dataclasses.field(repr=False)
+    #: True when the measured schedule was served by the persistent cache
+    #: (no candidate was re-timed for this plan)
+    tuned_from_cache: bool = False
 
     # --- execution ----------------------------------------------------------
     def run(self, grid, iters: int, coeffs: Optional[dict] = None, *,
@@ -182,6 +264,9 @@ class StencilPlan:
                          f"csize={g.csize} bnum={g.bnum} "
                          f"redundancy={g.redundancy:.3f}")
             lines.append("  predicted: " + self.predicted().describe())
+            if self.candidates and isinstance(self.candidates[0],
+                                              tuner.TunedCandidate):
+                lines.append("  measured:  " + self.candidates[0].describe())
         else:
             lines.append("  schedule: none (unblocked oracle)")
         if self.n_chips > 1:

@@ -1,0 +1,178 @@
+"""Persistent schedule cache — measured-tuning winners, paid for once.
+
+The measured autotuner (``repro.api.tuner``) is the expensive half of
+``plan(..., RunConfig(autotune="measure"))``: it compiles and times several
+candidate schedules on the real backend.  A production process (the ROADMAP's
+serving north-star) cannot afford that on every boot, so winners are
+persisted to a small JSON file keyed by everything that determines the
+optimum:
+
+    (stencil, shape, dtype, cell_bytes, backend, interpret flag,
+     execution platform, device, n_chips / chip_grid,
+     pinned par_time/bsize, code-version salt)
+
+The *code-version salt* is a content hash of the stencil/kernel/engine/
+blocking sources: editing any of them silently invalidates every cached
+schedule
+(stale winners are never served), with no manual version bump to forget.
+
+Cache resolution (see ``RunConfig.cache``): ``None``/``True`` -> the
+``REPRO_SCHEDULE_CACHE`` env var, else ``~/.cache/repro/schedules.json``
+(honoring ``XDG_CACHE_HOME``); a path string -> that file; ``False`` ->
+caching disabled.  The file is human-readable JSON; deleting it (or any
+entry) is always safe — the only cost is re-tuning on the next miss.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+import warnings
+from pathlib import Path
+from typing import Optional, Union
+
+#: Bump when the on-disk entry layout changes (not for code changes — those
+#: are covered by the content salt).
+CACHE_FORMAT_VERSION = 1
+
+_salt_cache: Optional[str] = None
+
+
+def code_version_salt() -> str:
+    """Content hash of the sources that determine a schedule's performance."""
+    global _salt_cache
+    if _salt_cache is None:
+        from repro.core import blocking, engine, stencils
+        from repro.kernels import ops, stencil2d, stencil3d
+        h = hashlib.sha1()
+        for mod in (blocking, engine, stencils, ops, stencil2d, stencil3d):
+            with open(mod.__file__, "rb") as f:
+                h.update(f.read())
+        _salt_cache = h.hexdigest()[:12]
+    return _salt_cache
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_SCHEDULE_CACHE")
+    if env:
+        return Path(env)
+    base = os.environ.get("XDG_CACHE_HOME") or (Path.home() / ".cache")
+    return Path(base) / "repro" / "schedules.json"
+
+
+def _stencil_fingerprint(st) -> str:
+    """Hash of what makes a stencil *itself*: name alone is not identity for
+    user-defined stencils, whose ``apply`` can change under the same name."""
+    h = hashlib.sha1()
+    h.update(repr((st.ndim, st.radius, st.flop_pcu, st.num_read,
+                   st.num_write, st.has_aux, st.coeff_names,
+                   st.offsets)).encode())
+    code = getattr(st.apply, "__code__", None)
+    if code is not None:
+        h.update(code.co_code)
+        # nested code objects repr with process-dependent addresses: skip
+        h.update(repr([c for c in code.co_consts
+                       if not hasattr(c, "co_code")]).encode())
+    return h.hexdigest()[:8]
+
+
+def schedule_key(problem, config, device, n_chips: int, chip_grid,
+                 salt: Optional[str] = None) -> str:
+    """Stable, human-readable cache key for one tuning context.
+
+    ``iters_hint`` is deliberately excluded: winners are ranked by amortized
+    per-iteration time (see ``repro.api.tuner``), a steady-state metric that
+    does not depend on how many super-steps a run chains.
+    Everything that constrains the swept candidate set *is* included —
+    pinned ``par_time``/``bsize``, ``par_time_max`` and ``tune_top_k`` — so
+    a winner found under a tight constraint never shadows (or violates) a
+    search run under a looser one.
+    """
+    import jax
+    shape = "x".join(str(d) for d in problem.shape)
+    grid = "x".join(str(c) for c in chip_grid) if chip_grid else "-"
+    pin_bs = config.normalized_bsize(problem.ndim)
+    pin = (f"{config.par_time if config.par_time is not None else '-'}"
+           f",{'x'.join(str(b) for b in pin_bs) if pin_bs else '-'}")
+    return "|".join([
+        problem.stencil.name, f"st={_stencil_fingerprint(problem.stencil)}",
+        f"shape={shape}", f"dtype={problem.dtype}",
+        f"cb={config.cell_bytes}", f"backend={config.backend}",
+        # interpret-mode timings have no relation to compiled ordering:
+        # never let one serve the other from the cache
+        f"interp={int(bool(config.interpret))}",
+        # config.device is only the perf-model's label; the stopwatch ran on
+        # the actual jax platform — a shared cache file must not let a
+        # CPU-timed winner serve a TPU process (or vice versa)
+        f"host={jax.default_backend()}",
+        f"device={device.name}", f"chips={n_chips}", f"grid={grid}",
+        f"pin={pin}",
+        f"lim={config.par_time_max}/{config.tune_top_k}",
+        f"salt={salt or code_version_salt()}",
+    ])
+
+
+class ScheduleCache:
+    """A JSON file of measured-tuning winners, safe to share and to delete.
+
+    Writes are atomic (tempfile + ``os.replace``) and re-read the file first,
+    so concurrent tuners lose at worst one entry, never the file.
+    """
+
+    def __init__(self, path: Union[str, Path]):
+        self.path = Path(path)
+
+    @classmethod
+    def resolve(cls, cache: Union[None, bool, str, Path]
+                ) -> Optional["ScheduleCache"]:
+        """``RunConfig.cache`` -> a cache instance, or None when disabled."""
+        if cache is False:
+            return None
+        if cache is None or cache is True:
+            return cls(default_cache_path())
+        return cls(cache)
+
+    def _load(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        if (not isinstance(data, dict)
+                or data.get("version") != CACHE_FORMAT_VERSION
+                or not isinstance(data.get("entries"), dict)):
+            return {}    # unknown layout: treat as empty, overwrite on put
+        return data["entries"]
+
+    def get(self, key: str) -> Optional[dict]:
+        entry = self._load().get(key)
+        return dict(entry) if isinstance(entry, dict) else None
+
+    def put(self, key: str, entry: dict) -> None:
+        """Persist ``entry``; an unwritable path degrades to a warning — the
+        cache is an optimization, and a write failure must not discard the
+        freshly measured winner by crashing ``plan()``."""
+        tmp = None
+        try:
+            entries = self._load()
+            entries[key] = dict(entry, saved_at=time.time())
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                       prefix=self.path.name, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": CACHE_FORMAT_VERSION,
+                           "entries": entries}, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            warnings.warn(f"schedule cache not persisted to {self.path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+
+    def __len__(self) -> int:
+        return len(self._load())

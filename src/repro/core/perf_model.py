@@ -87,6 +87,7 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
     local_dims = tuple(dims)
+    cg = (1,) * len(dims)
     if n_chips > 1:
         cg = tuple(chip_grid) if chip_grid else (n_chips,) + (1,) * (len(dims) - 1)
         local_dims = tuple(math.ceil(d / c) for d, c in zip(dims, cg))
@@ -104,9 +105,15 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     t_compute = flops_per_super / device.vpu_flops
 
     # --- collective term: halo exchange once per super-step ----------------
+    # Each grid axis actually sharded by the chip grid exchanges two strips
+    # of width size_halo whose face area is the shard's cross-section
+    # *perpendicular to that axis* — not always the streaming-axis face the
+    # 2D paper setup suggests.
     t_halo = 0.0
     if n_chips > 1:
-        halo_cells = geom.size_halo * math.prod(local_dims) // local_dims[0]
+        local_cells = math.prod(local_dims)
+        halo_cells = sum(geom.size_halo * local_cells // local_dims[ax]
+                         for ax, c in enumerate(cg) if c > 1)
         halo_bytes = 2 * halo_cells * cell_bytes * max(stencil.num_read, 1)
         t_halo = halo_bytes / device.ici_bw
 
@@ -131,14 +138,17 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
              par_time_max: int = 64, n_chips: int = 1,
              chip_grid: Sequence[int] | None = None, *,
              par_time: int | None = None,
-             bsize: Sequence[int] | None = None) -> list:
+             bsize: Sequence[int] | None = None,
+             top_k: int | None = None) -> list:
     """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
     par_time, drop configs whose working set exceeds the VMEM budget, rank by
     predicted run time. Returns predictions sorted best-first.
 
     A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
     value (the paper's tuned depths, e.g. 36, need not be powers of two);
-    only the free dimension(s) are enumerated.  May return ``[]`` when
+    only the free dimension(s) are enumerated.  ``top_k`` keeps only the
+    best-ranked predictions — the shortlist the measured tuner
+    (``repro.api.tuner``) times on real hardware.  May return ``[]`` when
     nothing is feasible — callers must not index blindly."""
     if par_time is not None:
         pts = [par_time]
@@ -161,7 +171,7 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
             if p.vmem_bytes <= device.vmem_budget:
                 cands.append(p)
     cands.sort(key=lambda p: p.run_time)
-    return cands
+    return cands if top_k is None else cands[:top_k]
 
 
 def model_accuracy(measured_s: float, predicted: Prediction) -> float:

@@ -27,6 +27,17 @@ Getter = Callable[[Sequence[int]], jnp.ndarray]
 TEMP_AMB = 80.0  # Hotspot ambient temperature — compile-time constant (paper §5.1)
 
 
+def _star_offsets(ndim: int, radius: int) -> tuple:
+    """Axis-aligned (star) neighborhood: center + ±1..radius on each axis."""
+    offs = []
+    for axis in range(ndim):
+        for d in range(-radius, radius + 1):
+            off = [0] * ndim
+            off[axis] = d
+            offs.append(tuple(off))
+    return tuple(dict.fromkeys(offs))  # dedup center
+
+
 @dataclasses.dataclass(frozen=True)
 class Stencil:
     name: str
@@ -38,6 +49,22 @@ class Stencil:
     has_aux: bool                 # second input stream (Hotspot `power`)
     coeff_names: tuple            # scalar coefficients, passed at run time
     apply: Callable               # (get, coeffs, aux_center) -> updated center
+    #: Neighbor offsets ``apply`` actually touches, stored at construction so
+    #: non-star shapes (``make_box`` diagonals) report their true footprint.
+    #: Defaults to the axis-aligned star — correct for every builtin.
+    offsets: tuple = ()
+
+    def __post_init__(self):
+        offs = self.offsets or _star_offsets(self.ndim, self.radius)
+        object.__setattr__(self, "offsets",
+                           tuple(tuple(int(d) for d in o) for o in offs))
+        if any(len(o) != self.ndim for o in self.offsets):
+            raise ValueError(f"{self.name}: offsets must be {self.ndim}-D")
+        span = max((abs(d) for o in self.offsets for d in o), default=0)
+        if span > self.radius:
+            raise ValueError(
+                f"{self.name}: offset span {span} exceeds radius "
+                f"{self.radius} — halo sizing (rad*par_time) would be wrong")
 
     @property
     def bytes_pcu(self) -> int:
@@ -47,17 +74,6 @@ class Stencil:
     @property
     def bytes_per_flop(self) -> float:
         return self.bytes_pcu / self.flop_pcu
-
-    @property
-    def offsets(self) -> tuple:
-        """Star-stencil offsets touched by ``apply`` (for halo sizing)."""
-        offs = []
-        for axis in range(self.ndim):
-            for d in range(-self.radius, self.radius + 1):
-                off = [0] * self.ndim
-                off[axis] = d
-                offs.append(tuple(off))
-        return tuple(dict.fromkeys(offs))  # dedup center
 
 
 def _diffusion2d(get: Getter, c: Mapping[str, jnp.ndarray], aux=None):
@@ -131,7 +147,8 @@ def make_star(ndim: int, radius: int) -> Stencil:
         return out
 
     return Stencil(f"star{ndim}d_r{radius}", ndim, radius, flops, 1, 1, False,
-                   tuple(names), _apply)
+                   tuple(names), _apply,
+                   offsets=(tuple([0] * ndim),) + tuple(o for _, o in offs))
 
 
 def make_box(ndim: int, radius: int) -> Stencil:
@@ -157,7 +174,7 @@ def make_box(ndim: int, radius: int) -> Stencil:
         return out
 
     return Stencil(f"box{ndim}d_r{radius}", ndim, radius, flops, 1, 1, False,
-                   tuple(names), _apply)
+                   tuple(names), _apply, offsets=tuple(o for _, o in offs))
 
 
 def default_coeffs(stencil: Stencil, dtype=jnp.float32) -> dict:

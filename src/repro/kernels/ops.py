@@ -71,9 +71,12 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
 
     The kernels' HBM accesses are fully explicit (manual async copies), so
     traffic is countable without hardware:
-      * input: every block streams ``nticks = stream + size_halo`` rows
-        (2D) / planes (3D) of extent ``prod(bsize)`` — edge ticks re-read
-        clamped rows; halo columns overlap between adjacent blocks.
+      * input: every block streams ``stream`` rows (2D) / planes (3D) of
+        extent ``prod(bsize)`` — the pipeline runs ``stream + size_halo``
+        ticks to drain the PE chain, but the trailing ticks fetch nothing
+        (the prefetch stops at the last real row; out-of-grid reads are
+        clamped window reads, not DMAs); halo columns overlap between
+        adjacent blocks.
       * aux (Hotspot power): same stream per block.
       * output: every block writes ``stream`` rows/planes of the compute
         extent ``prod(csize)`` (out-of-bound columns land in padding and
@@ -84,11 +87,10 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
     accuracy for the kernel implementation.
     """
     stream = geom.stream_dim
-    nticks = stream + geom.size_halo
     block_in = math.prod(geom.bsize)
     block_out = math.prod(geom.csize)
     n_blocks = geom.num_blocks
-    reads = n_blocks * nticks * block_in * (2 if stencil.has_aux else 1)
+    reads = n_blocks * stream * block_in * (2 if stencil.has_aux else 1)
     writes = n_blocks * stream * block_out
     return (reads + writes) * cell_bytes
 

@@ -115,10 +115,17 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
 
     def body(k, _):
         # -- wait input row k; prefetch row k+1 into the other buffer --------
+        # Rows past ny-1 are never pushed (the window push below is gated at
+        # k <= ny-1) and read_win clamps to the last pushed row, so fetching
+        # them would be pure waste: stop both the prefetch and its matching
+        # wait at the last real row instead of running to nticks.
         slot = k % 2
-        in_copy(k, slot).wait()
 
-        @pl.when(k + 1 < nticks)
+        @pl.when(k <= ny - 1)
+        def _():
+            in_copy(k, slot).wait()
+
+        @pl.when(k + 1 <= ny - 1)
         def _():
             in_copy(k + 1, (k + 1) % 2).start()
 
@@ -127,9 +134,11 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
             win_ref[0, pl.ds(k % S, 1), :] = in_buf[slot]
 
         if has_aux:
-            aux_copy(k, slot).wait()
+            @pl.when(k <= ny - 1)
+            def _():
+                aux_copy(k, slot).wait()
 
-            @pl.when(k + 1 < nticks)
+            @pl.when(k + 1 <= ny - 1)
             def _():
                 aux_copy(k + 1, (k + 1) % 2).start()
 

@@ -90,10 +90,16 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
         return win_ref[t, pl.ds(r % S, 1), :, :]
 
     def body(k, _):
+        # Planes past nz-1 are never pushed and read_win clamps to the last
+        # pushed plane; stop the prefetch (and its matching wait) at the last
+        # real plane instead of fetching clamped re-reads out to nticks.
         slot = k % 2
-        in_copy(k, slot).wait()
 
-        @pl.when(k + 1 < nticks)
+        @pl.when(k <= nz - 1)
+        def _():
+            in_copy(k, slot).wait()
+
+        @pl.when(k + 1 <= nz - 1)
         def _():
             in_copy(k + 1, (k + 1) % 2).start()
 
@@ -102,9 +108,11 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
             win_ref[0, pl.ds(k % S, 1), :, :] = in_buf[slot]
 
         if has_aux:
-            aux_copy(k, slot).wait()
+            @pl.when(k <= nz - 1)
+            def _():
+                aux_copy(k, slot).wait()
 
-            @pl.when(k + 1 < nticks)
+            @pl.when(k + 1 <= nz - 1)
             def _():
                 aux_copy(k + 1, (k + 1) % 2).start()
 

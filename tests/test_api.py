@@ -148,6 +148,57 @@ def test_distributed_axis_map_accepts_bare_string_names():
     assert cfg.axis_map == (("data",), None)
 
 
+class _FakeMesh:
+    """Mesh stand-in: plan-time checks only touch axis_names/devices.shape,
+    so an indivisible multi-chip layout is testable on one real device."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+def test_distributed_plan_rejects_indivisible_grid_at_plan_time():
+    """Satellite bugfix: the divisibility error must fire at plan() — not
+    deep inside build_distributed_fn at the first run()."""
+    mesh = _FakeMesh((3,), ("x",))
+    with pytest.raises(ValueError, match="not divisible"):
+        plan(StencilProblem("diffusion2d", (25, 40)),
+             RunConfig(backend="distributed", par_time=2, bsize=24,
+                       mesh=mesh))
+    # divisible grids still plan fine (execution is deferred)
+    p = plan(StencilProblem("diffusion2d", (24, 40)),
+             RunConfig(backend="distributed", par_time=2, bsize=24,
+                       mesh=mesh))
+    assert p.n_chips == 3
+
+
+def test_predict_halo_follows_chip_grid():
+    """Satellite bugfix: t_halo must price the face perpendicular to each
+    sharded axis, not always the streaming-axis cross-section."""
+    from repro.core.perf_model import TPU_V5E, predict
+    st = STENCILS["diffusion2d"]
+    dims, bsize, pt = (100, 512), (256,), 4
+    h = st.radius * pt
+    # shard the *blocked* axis: local dims (100, 256); exchanged strips have
+    # cross-section 100 (the streaming extent), width h, both directions
+    p = predict(st, dims, 64, bsize, pt, TPU_V5E, 4, n_chips=2,
+                chip_grid=(1, 2))
+    want = 2 * (h * 100) * 4 * st.num_read / TPU_V5E.ici_bw
+    assert p.t_halo == pytest.approx(want)
+    # streaming-axis sharding keeps the legacy form: cross-section 512
+    p0 = predict(st, dims, 64, bsize, pt, TPU_V5E, 4, n_chips=2,
+                 chip_grid=(2, 1))
+    want0 = 2 * (h * 512) * 4 * st.num_read / TPU_V5E.ici_bw
+    assert p0.t_halo == pytest.approx(want0)
+    # a 2x2 grid on a 3D problem sums one face per sharded axis
+    st3 = STENCILS["diffusion3d"]
+    p3 = predict(st3, (64, 64, 64), 64, (16, 16), 2, TPU_V5E, 4, n_chips=4,
+                 chip_grid=(1, 2, 2))
+    h3 = st3.radius * 2
+    faces = 64 * 32 + 64 * 32          # perp. to y and to x, local (64,32,32)
+    assert p3.t_halo == pytest.approx(2 * h3 * faces * 4 * st3.num_read
+                                      / TPU_V5E.ici_bw)
+
+
 # --- deprecation shim ---------------------------------------------------------
 
 def test_stencil_run_shim_warns_and_matches():

@@ -1,12 +1,17 @@
 """Pallas kernels (interpret mode) vs. pure-jnp oracle — shape/param sweeps,
-driven through the public ``plan()`` API."""
+driven through the public ``plan()`` API; exact DMA-traffic accounting; and
+end-to-end high-order (radius > 1) star and box neighborhoods."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.api import RunConfig, StencilProblem, plan
-from repro.core import STENCILS, default_coeffs
+from repro.core import STENCILS, default_coeffs, make_box, make_star
+from repro.core.blocking import BlockGeometry
+from repro.kernels.ops import dma_traffic_bytes
 from repro.kernels.ref import oracle_run
 
 
@@ -71,3 +76,96 @@ def test_backends_agree():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
                                    rtol=2e-5, atol=2e-5)
+
+
+# --- exact DMA accounting (prefetch stops at the last real row) ---------------
+
+@pytest.mark.parametrize("name,dims,par_time,bsize", [
+    ("diffusion2d", (33, 700), 4, (256,)),
+    ("hotspot3d", (11, 40, 56), 2, (16, 16)),
+])
+def test_dma_traffic_counts_stream_not_nticks_rows(name, dims, par_time,
+                                                   bsize):
+    st = STENCILS[name]
+    geom = BlockGeometry(st.ndim, dims, st.radius, par_time, bsize)
+    n_streams = 2 if st.has_aux else 1
+    got = dma_traffic_bytes(st, geom, 4)
+    reads = geom.num_blocks * geom.stream_dim * math.prod(geom.bsize)
+    writes = geom.num_blocks * geom.stream_dim * math.prod(geom.csize)
+    assert got == (reads * n_streams + writes) * 4
+    # vs. the pre-fix schedule (nticks = stream + size_halo input DMAs per
+    # block): the saving is exactly one halo's worth of rows per stream
+    nticks = geom.stream_dim + geom.size_halo
+    prefix_reads = geom.num_blocks * nticks * math.prod(geom.bsize)
+    prefix_bytes = (prefix_reads * n_streams + writes) * 4
+    assert prefix_bytes - got == (geom.size_halo * math.prod(geom.bsize)
+                                  * geom.num_blocks * n_streams * 4)
+
+
+def test_traffic_report_reflects_lean_schedule():
+    p = plan(StencilProblem("diffusion2d", (512, 1024)),
+             RunConfig(backend="engine", par_time=4, bsize=512))
+    r = p.traffic_report()
+    g = p.geometry
+    assert r["kernel_dma_bytes_per_superstep"] == dma_traffic_bytes(
+        STENCILS["diffusion2d"], g, 4)
+    # the model's clipped reads can now exceed the kernel's lean reads only
+    # via overlap redundancy, not via phantom drain-tick DMAs
+    assert 0 < r["traffic_accuracy"] <= 1.5
+
+
+@pytest.mark.parametrize("name,dims,par_time,bsize", [
+    ("diffusion2d", (17, 40), 2, 24),
+    ("diffusion3d", (7, 19, 23), 2, 12),
+])
+def test_interpret_bit_identical_to_oracle(name, dims, par_time, bsize):
+    """The DMA-schedule fix must not perturb values: same arithmetic per
+    cell => bit-identical interpret-mode output."""
+    st = STENCILS[name]
+    g, aux = _data(st, dims)
+    c = default_coeffs(st)
+    want = oracle_run(st, g, c, 5, aux)
+    got = _plan_run(st, g, c, 5, par_time, bsize, aux)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- high-order (radius > 1) and box neighborhoods end-to-end -----------------
+
+@pytest.mark.parametrize("st,dims,iters,par_time,bsize", [
+    (make_star(2, 2), (15, 37), 5, 2, 24),    # r=2: halo 4/side per block
+    (make_star(2, 3), (11, 41), 4, 1, 16),    # r=3, superstep remainder
+    (make_star(3, 2), (6, 21, 19), 3, 1, 12),
+    (make_box(2, 1), (13, 33), 5, 2, 16),     # diagonals exercised
+    (make_box(2, 2), (12, 44), 3, 1, 14),
+    (make_box(3, 1), (5, 14, 16), 4, 2, 12),
+])
+def test_highorder_and_box_match_oracle(st, dims, iters, par_time, bsize):
+    g, _ = _data(st, dims)
+    c = default_coeffs(st)
+    want = oracle_run(st, g, c, iters)
+    for backend in ("engine", "pallas_interpret"):
+        got = _plan_run(st, g, c, iters, par_time, bsize, backend=backend)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5,
+            err_msg=f"{st.name} via {backend}")
+
+
+def test_box_offsets_include_diagonals():
+    st = make_box(2, 1)
+    assert (1, 1) in st.offsets and (-1, 1) in st.offsets
+    assert len(st.offsets) == 9
+    assert len(make_box(3, 1).offsets) == 27
+    # star offsets stay axis-aligned, builtins included
+    assert set(make_star(2, 2).offsets) == {
+        (0, 0), (0, 1), (0, 2), (0, -1), (0, -2),
+        (1, 0), (2, 0), (-1, 0), (-2, 0)}
+    assert (1, 1) not in STENCILS["diffusion2d"].offsets
+    assert len(STENCILS["hotspot3d"].offsets) == 7
+
+
+def test_offsets_span_must_fit_radius():
+    from repro.core.stencils import Stencil
+    with pytest.raises(ValueError, match="exceeds radius"):
+        Stencil("bad", 2, 1, 1, 1, 1, False, ("c",),
+                lambda get, c, aux=None: get((0, 2)),
+                offsets=((0, 2),))
