@@ -1,0 +1,73 @@
+"""Serving throughput: one plan, many requests, one executable.
+
+A stencil-as-a-service process (the ROADMAP's "heavy traffic" north star)
+sees a stream of requests against a handful of problem shapes.  The naive
+loop — ``plan().run()`` per request — pays a dispatch per request and, before
+this subsystem, a re-trace per distinct iteration count.  This example shows
+the serving pattern:
+
+  1. ``plan()`` once per problem shape (the executable cache makes repeated
+     plans free: same key -> same compiled program, zero re-traces);
+  2. ``run_batch()`` over each arriving batch of requests — one fused
+     executable advances the whole batch (vmapped super-step loop on the
+     engine backend);
+  3. ``iters`` is dynamic: requests asking for different iteration counts
+     share the same executable.
+
+    PYTHONPATH=src python examples/serve_stencil.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (RunConfig, StencilProblem, clear_exec_cache,
+                       exec_cache_stats, plan)
+from repro.core import HOTSPOT2D, default_coeffs
+
+GRID = (256, 512)
+BATCH = 8          # requests per arriving batch
+ROUNDS = 4         # batches served
+ITERS = (10, 25, 10, 50)   # per-round iteration counts (all share one trace)
+
+
+def main():
+    clear_exec_cache()
+    key = jax.random.PRNGKey(0)
+    coeffs = default_coeffs(HOTSPOT2D)
+    # the chip's power map is server state, shared by every request
+    power = jax.random.uniform(jax.random.fold_in(key, 1), GRID,
+                               jnp.float32, 0.0, 0.1)
+    problem = StencilProblem("hotspot2d", GRID)
+
+    # boot: one plan per served shape (autotuned by the perf model)
+    p = plan(problem, RunConfig(backend="engine", autotune=True))
+    print(p.describe())
+    print("predicted batched throughput:",
+          f"{p.predicted(100, batch=BATCH).gcells_s / 1e9:.2f} GCell/s "
+          f"(batch={BATCH}, shared power grid loaded once)")
+
+    # serve: batches of requests, varying iteration counts
+    for r, iters in zip(range(ROUNDS), ITERS):
+        grids = jax.random.uniform(jax.random.fold_in(key, 100 + r),
+                                   (BATCH,) + GRID, jnp.float32, 0.5, 2.0)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            p.run_batch(grids, iters, coeffs, aux=power))
+        dt = time.perf_counter() - t0
+        print(f"round {r}: B={BATCH} iters={iters:3d} -> {dt * 1e3:7.2f} ms "
+              f"({out.shape} out)")
+
+    # a restarted handler re-plans — and hits the executable cache
+    p2 = plan(problem, RunConfig(backend="engine", autotune=True))
+    p2.run_batch(jnp.ones((BATCH,) + GRID, jnp.float32), 10, coeffs,
+                 aux=power)
+    stats = exec_cache_stats()
+    print(f"\nexecutable cache: {stats['size']} programs, "
+          f"{stats['hits']} hits, {stats['misses']} misses, "
+          f"traces={stats['traces']}")
+    assert stats["hits"] >= 1, "re-plan should reuse the compiled program"
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,9 @@ Backends are pluggable via :func:`register_backend`; the built-ins are
 ``reference``, ``engine``, ``pallas``, ``pallas_interpret`` and
 ``distributed`` (a mesh is just config — see ``RunConfig.mesh``).
 """
-from repro.api.backends import (Backend, get_backend, list_backends,
-                                register_backend)
+from repro.api.backends import (Backend, BackendProgram, as_program,
+                                clear_exec_cache, exec_cache_stats,
+                                get_backend, list_backends, register_backend)
 from repro.api.config import RunConfig
 from repro.api.plan import StencilPlan, plan
 from repro.api.problem import StencilProblem
@@ -25,7 +26,8 @@ from repro.api.schedule_cache import ScheduleCache
 from repro.api.tuner import TunedCandidate, tune
 
 __all__ = [
-    "Backend", "RunConfig", "ScheduleCache", "StencilPlan", "StencilProblem",
-    "TunedCandidate", "get_backend", "list_backends", "plan",
+    "Backend", "BackendProgram", "RunConfig", "ScheduleCache", "StencilPlan",
+    "StencilProblem", "TunedCandidate", "as_program", "clear_exec_cache",
+    "exec_cache_stats", "get_backend", "list_backends", "plan",
     "register_backend", "tune",
 ]

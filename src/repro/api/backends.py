@@ -1,16 +1,19 @@
-"""Backend protocol + registry.
+"""Backend protocol + registry + process-level executable cache.
 
 A *backend* is one executable implementation of the combined spatial/temporal
 blocked computation.  It is registered as a factory::
 
     register_backend(name, factory)
     factory(problem: StencilProblem, config: RunConfig,
-            geom: BlockGeometry | None) -> ExecuteFn
+            geom: BlockGeometry | None) -> ExecuteFn | BackendProgram
     ExecuteFn(grid, coeffs, iters, aux) -> grid
 
 ``plan()`` resolves the name through the registry, so adding a backend (GPU
 Pallas, batched ensembles, ...) is one ``register_backend`` call — no
-if/elif dispatch chain to edit.  The built-ins registered below:
+if/elif dispatch chain to edit.  A factory may return a bare ``ExecuteFn``
+(legacy/custom backends) or a :class:`BackendProgram` that additionally
+carries a batched entry point; ``plan()`` normalizes via :func:`as_program`.
+The built-ins registered below:
 
   ``reference``         unblocked oracle (kernels/ref.py) — ground truth
   ``engine``            pure-JAX blocked engine (core/engine.py)
@@ -18,11 +21,54 @@ if/elif dispatch chain to edit.  The built-ins registered below:
   ``pallas_interpret``  same kernels, interpret mode (CPU-correctness)
   ``distributed``       shard_map runtime over ``config.mesh``
                         (core/distributed.py); the mesh is just config
+
+Throughput subsystem (the ROADMAP's serving path)
+-------------------------------------------------
+Every built-in compiles through a **process-level executable cache**: one
+compiled program per
+
+    (kind, stencil fingerprint, shape, dtype, geometry, iters-shape class,
+     batch size, aux mode, backend specifics)
+
+key, shared by every plan in the process.  ``iters`` is always passed into
+the executable as a *dynamic* scalar (iters class ``"dyn"``): the super-step
+trip count is computed in-trace, so repeated ``plan().run()`` calls with
+different iteration counts — the serving pattern — never re-trace.  This
+generalizes the distributed backend's old per-``iters`` compiled dict to all
+backends.  ``RunConfig.exec_cache=False`` opts a plan out (it gets private
+executables); ``clear_exec_cache()`` resets the process.
+
+Tracing is observable: each cached program bumps ``TRACE_COUNTS[tag]`` when
+its Python body is (re)traced, so tests — and operators — can verify that a
+cache hit really skipped a trace.
+
+Batched execution (``StencilPlan.run_batch``) compiles ONE executable over a
+leading batch axis:
+
+  * reference/engine vmap the fused super-step loop (the blocked update is
+    data-parallel across batch members);
+  * pallas maps the batch *sequentially inside one executable*
+    (``lax.map``) — ``vmap`` over the manual-DMA kernels silently corrupts
+    the per-block DMA offsets (verified), and sequential mapping preserves
+    each kernel instance's exact DMA schedule while still amortizing
+    dispatch and compile across the batch;
+  * distributed replicates the batch axis over the mesh and aggregates all
+    batch members' halos into one exchange per mesh axis per super-step.
+
+Buffer donation (``RunConfig.donate``): the pallas backends stage an
+edge-padded copy of the grid, run the whole super-step loop on it, and slice
+once at the end — the padded carry is backend-owned, so it is donated to XLA
+(``donate_argnums``) and reused in place across the loop.  Caller arrays are
+never donated: a plan stays reusable and ``run``/``run_batch`` never
+invalidate their inputs.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Protocol
+import collections
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockGeometry
@@ -32,13 +78,41 @@ from repro.api.problem import StencilProblem
 #: (grid, coeffs, iters, aux) -> final grid
 ExecuteFn = Callable[..., jnp.ndarray]
 
+#: dtypes the Pallas streaming kernels support (plan-time validation)
+PALLAS_SUPPORTED_DTYPES = ("float32",)
+
 
 class Backend(Protocol):
     """Factory protocol every registered backend implements."""
 
     def __call__(self, problem: StencilProblem, config: RunConfig,
-                 geom: Optional[BlockGeometry]) -> ExecuteFn:
+                 geom: Optional[BlockGeometry]
+                 ) -> Union[ExecuteFn, "BackendProgram"]:
         ...
+
+
+@dataclasses.dataclass
+class BackendProgram:
+    """What a backend factory hands ``plan()``: the unbatched entry point,
+    plus (optionally) a batched one.
+
+    ``execute_batch(grids, coeffs, iters, aux)`` takes grids with a leading
+    batch axis ``(B, *shape)``; ``aux`` may be ``None``, one shared grid of
+    ``shape``, or a batch of ``(B, *shape)``.  Backends that do not provide
+    it (``execute_batch=None``) still serve ``StencilPlan.run_batch`` via a
+    per-element fallback loop."""
+    execute: ExecuteFn
+    execute_batch: Optional[ExecuteFn] = None
+
+
+def as_program(obj: Union[ExecuteFn, BackendProgram]) -> BackendProgram:
+    """Normalize a factory's return value (bare callable or program)."""
+    if isinstance(obj, BackendProgram):
+        return obj
+    if not callable(obj):
+        raise TypeError(f"backend factory returned {type(obj).__name__}; "
+                        "expected a callable or BackendProgram")
+    return BackendProgram(execute=obj)
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -67,40 +141,206 @@ def list_backends() -> list:
     return sorted(_REGISTRY)
 
 
+# --- process-level executable cache ------------------------------------------
+
+_EXEC_CACHE: Dict[tuple, Callable] = {}
+_EXEC_STATS = {"hits": 0, "misses": 0}
+
+#: how many times each cached program's Python body was (re)traced — the
+#: observable proof that an executable-cache hit skipped a re-trace
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def _note_trace(tag: str) -> None:
+    """Called from *inside* a to-be-jitted body: runs once per trace, never
+    per execution, so it counts exactly the re-traces."""
+    TRACE_COUNTS[tag] += 1
+
+
+def exec_cache_stats() -> dict:
+    """Executable-cache observability: entry count, hit/miss totals, and the
+    per-backend trace counts."""
+    return {"size": len(_EXEC_CACHE), "hits": _EXEC_STATS["hits"],
+            "misses": _EXEC_STATS["misses"], "traces": dict(TRACE_COUNTS)}
+
+
+def clear_exec_cache() -> None:
+    """Drop every cached executable and reset the counters (tests; or to
+    release compiled programs in a long-lived process)."""
+    _EXEC_CACHE.clear()
+    _EXEC_STATS["hits"] = 0
+    _EXEC_STATS["misses"] = 0
+    TRACE_COUNTS.clear()
+
+
+def _program_cache(use_cache: bool) -> Callable:
+    """Program lookup for one factory: the process-level cache when enabled,
+    else a private per-plan dict — an opted-out plan gets executables no
+    other plan can see, but must still never rebuild (re-trace) one on every
+    call."""
+    if use_cache:
+        def get(key, build):
+            fn = _EXEC_CACHE.get(key)
+            if fn is None:
+                _EXEC_STATS["misses"] += 1
+                fn = _EXEC_CACHE[key] = build()
+            else:
+                _EXEC_STATS["hits"] += 1
+            return fn
+    else:
+        local: Dict[tuple, Callable] = {}
+
+        def get(key, build):
+            fn = local.get(key)
+            if fn is None:
+                fn = local[key] = build()
+            return fn
+    return get
+
+
+def _exec_key(kind: str, problem: StencilProblem,
+              geom: Optional[BlockGeometry], *,
+              batch=None, aux_mode=None, extra: Tuple = ()) -> tuple:
+    """Cache key: everything that determines the compiled program.
+
+    ``iters`` never appears — every program takes it as a dynamic scalar
+    (iters-shape class ``"dyn"``), which is exactly what makes the cache
+    worth having for serving loops."""
+    from repro.api.schedule_cache import stencil_fingerprint
+    gsig = None if geom is None else (geom.par_time, geom.bsize)
+    return (kind, problem.stencil.name, stencil_fingerprint(problem.stencil),
+            problem.shape, problem.dtype, gsig, "iters=dyn", batch, aux_mode,
+            *extra)
+
+
+def _aux_mode(problem: StencilProblem, aux) -> Optional[str]:
+    """``None`` (no aux) | ``"shared"`` (one grid) | ``"batched"`` (B grids).
+    The plan validates shapes before execution; this only classifies."""
+    if aux is None:
+        return None
+    return "batched" if aux.ndim == problem.ndim + 1 else "shared"
+
+
+def _donate_ok(config: RunConfig) -> bool:
+    """Donation is requested AND the platform implements it (CPU does not —
+    donating there only emits warnings)."""
+    return config.donate and jax.default_backend() in ("tpu", "gpu")
+
+
 # --- built-in backends -------------------------------------------------------
+
+def _vmapped_program(kind: str, problem, config, key_geom,
+                     body: Callable) -> BackendProgram:
+    """Shared scaffolding for backends whose batched form is a vmap of the
+    single-grid ``body(grid, coeffs, iters, aux)``: reference (unblocked
+    oracle) and engine (fused blocked loop)."""
+    get = _program_cache(config.exec_cache)
+    single = get(_exec_key(kind, problem, key_geom), lambda: jax.jit(body))
+
+    def execute(grid, coeffs, iters, aux=None):
+        return single(grid, coeffs, jnp.asarray(iters, jnp.int32), aux)
+
+    def execute_batch(grids, coeffs, iters, aux=None):
+        mode = _aux_mode(problem, aux)
+        key = _exec_key(kind, problem, key_geom,
+                        batch=grids.shape[0], aux_mode=mode)
+        fn = get(key, lambda: jax.jit(jax.vmap(
+            body, in_axes=(0, None, None, 0 if mode == "batched" else None))))
+        return fn(grids, coeffs, jnp.asarray(iters, jnp.int32), aux)
+
+    return BackendProgram(execute, execute_batch)
+
 
 def _reference_backend(problem, config, geom):
     from repro.kernels.ref import oracle_run
     st = problem.stencil
 
-    def execute(grid, coeffs, iters, aux=None):
+    def body(grid, coeffs, iters, aux):
+        _note_trace("reference")
         return oracle_run(st, grid, coeffs, iters, aux)
-    return execute
+
+    # the oracle ignores blocking: key by problem only, not geometry
+    return _vmapped_program("reference", problem, config, None, body)
 
 
 def _engine_backend(problem, config, geom):
-    from repro.core.engine import run_blocked
+    from repro.core.engine import superstep_loop
     st = problem.stencil
-    par_time, bsize = geom.par_time, geom.bsize
 
-    def execute(grid, coeffs, iters, aux=None):
-        return run_blocked(st, grid, coeffs, iters, par_time, bsize, aux)
-    return execute
+    def body(grid, coeffs, iters, aux):
+        _note_trace("engine")
+        return superstep_loop(st, geom, grid, coeffs, iters, aux)
+
+    return _vmapped_program("engine", problem, config, geom, body)
 
 
 def _make_pallas_backend(force_interpret: bool):
     def factory(problem, config, geom):
-        from repro.kernels.ops import pack_coeffs, run_pallas
-        if problem.jnp_dtype != jnp.float32:
-            raise ValueError("the Pallas kernels are f32-only "
-                             f"(problem.dtype={problem.dtype})")
+        from repro.kernels.ops import (fused_superstep_loop, pack_coeffs,
+                                       _pad_blocked)
+        # plan-time validation (satellite bugfix): fail before any execute,
+        # and say what IS supported
+        if problem.dtype not in PALLAS_SUPPORTED_DTYPES:
+            raise ValueError(
+                f"the Pallas kernels support dtypes "
+                f"{list(PALLAS_SUPPORTED_DTYPES)}; "
+                f"got problem.dtype={problem.dtype!r} — use the 'engine' or "
+                f"'reference' backend for other dtypes")
         st = problem.stencil
         interpret = force_interpret or config.interpret
+        tag = "pallas_interpret" if interpret else "pallas"
+        get = _program_cache(config.exec_cache)
+        donate = _donate_ok(config)
+
+        def loop_body(gp, coeffs_packed, iters, aux_p):
+            # gp is the backend-owned padded carry: safe to donate
+            _note_trace(tag)
+            return fused_superstep_loop(st, geom, gp, coeffs_packed, iters,
+                                        aux_p, interpret)
+
+        def build_single():
+            return jax.jit(loop_body,
+                           donate_argnums=(0,) if donate else ())
+
+        single = get(_exec_key(tag, problem, geom, extra=("donate", donate)),
+                     build_single)
 
         def execute(grid, coeffs, iters, aux=None):
-            return run_pallas(st, geom, grid, pack_coeffs(st, coeffs),
-                              iters, aux, interpret)
-        return execute
+            gp = _pad_blocked(grid, geom)
+            aux_p = _pad_blocked(aux, geom) if aux is not None else None
+            return single(gp, pack_coeffs(st, coeffs),
+                          jnp.asarray(iters, jnp.int32), aux_p)
+
+        def build_batch(mode):
+            # vmap over the manual-DMA pallas_call mis-addresses the per-block
+            # DMAs (wrong results, verified empirically) — map the batch
+            # sequentially INSIDE one executable instead: one dispatch, one
+            # compile, exact per-instance DMA schedules.
+            def batched(gps, coeffs_packed, iters, aux_p):
+                _note_trace(tag)
+                if mode == "batched":
+                    return jax.lax.map(
+                        lambda ga: fused_superstep_loop(
+                            st, geom, ga[0], coeffs_packed, iters, ga[1],
+                            interpret),
+                        (gps, aux_p))
+                return jax.lax.map(
+                    lambda g: fused_superstep_loop(
+                        st, geom, g, coeffs_packed, iters, aux_p, interpret),
+                    gps)
+            return jax.jit(batched, donate_argnums=(0,) if donate else ())
+
+        def execute_batch(grids, coeffs, iters, aux=None):
+            mode = _aux_mode(problem, aux)
+            key = _exec_key(tag, problem, geom, batch=grids.shape[0],
+                            aux_mode=mode, extra=("donate", donate))
+            fn = get(key, lambda: build_batch(mode))
+            gps = _pad_blocked(grids, geom)
+            aux_p = _pad_blocked(aux, geom) if aux is not None else None
+            return fn(gps, pack_coeffs(st, coeffs),
+                      jnp.asarray(iters, jnp.int32), aux_p)
+
+        return BackendProgram(execute, execute_batch)
     return factory
 
 
@@ -120,23 +360,47 @@ def resolve_axis_map(problem: StencilProblem, config: RunConfig):
     return (tuple(config.mesh.axis_names),) + (None,) * (problem.ndim - 1)
 
 
+def _mesh_sig(mesh) -> tuple:
+    """Mesh identity for the executable cache.  Structure alone is not enough
+    (two same-shape meshes over different devices need different programs),
+    so the object id is included — at worst an id reuse costs a re-build,
+    never a wrong-mesh program, because the id is paired with structure."""
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape), id(mesh))
+
+
 def _distributed_backend(problem, config, geom):
     from repro.core.distributed import build_distributed_fn
     st = problem.stencil
     mesh = config.mesh
     axis_map = resolve_axis_map(problem, config)
     par_time, bsize = geom.par_time, geom.bsize
-    compiled: Dict[int, Callable] = {}    # one shard_map program per iters
+    get = _program_cache(config.exec_cache)
+    base_key = ("mesh", _mesh_sig(mesh), "amap", axis_map)
+
+    def build(batch, aux_batched):
+        return build_distributed_fn(
+            st, problem.shape, None, par_time, bsize, mesh, axis_map,
+            batch=batch, aux_batched=aux_batched,
+            trace_hook=lambda: _note_trace("distributed"))
 
     def execute(grid, coeffs, iters, aux=None):
-        fn = compiled.get(iters)
-        if fn is None:
-            fn = build_distributed_fn(st, problem.shape, iters, par_time,
-                                      bsize, mesh, axis_map)
-            compiled[iters] = fn
+        # built lazily on first call (not at plan time): plan() must stay
+        # executable-free for the distributed backend so schedulers can plan
+        # against a mesh description without touching real devices
+        single = get(_exec_key("distributed", problem, geom, extra=base_key),
+                     lambda: build(False, False))
         aux_in = aux if aux is not None else jnp.zeros((), jnp.float32)
-        return fn(grid, aux_in, coeffs)
-    return execute
+        return single(grid, aux_in, coeffs, jnp.asarray(iters, jnp.int32))
+
+    def execute_batch(grids, coeffs, iters, aux=None):
+        mode = _aux_mode(problem, aux)
+        key = _exec_key("distributed", problem, geom, batch=grids.shape[0],
+                        aux_mode=mode, extra=base_key)
+        fn = get(key, lambda: build(True, mode == "batched"))
+        aux_in = aux if aux is not None else jnp.zeros((), jnp.float32)
+        return fn(grids, aux_in, coeffs, jnp.asarray(iters, jnp.int32))
+
+    return BackendProgram(execute, execute_batch)
 
 
 register_backend("reference", _reference_backend)

@@ -48,6 +48,17 @@ class RunConfig:
     mesh: Optional[object] = None          # jax.sharding.Mesh (distributed)
     axis_map: Optional[Tuple] = None       # grid axis -> mesh axis names
     interpret: bool = False      # force Pallas interpret mode
+    # --- throughput knobs (serving path) ------------------------------------
+    #: let backends donate the *internal* padded super-step carry to XLA
+    #: (donate_argnums on the padded grid — never on a caller-visible array,
+    #: so plans stay reusable).  Only takes effect on platforms that
+    #: implement donation (TPU/GPU); a no-op on CPU.
+    donate: bool = True
+    #: consult/populate the process-level executable cache
+    #: (``repro.api.backends``): plans with the same (stencil fingerprint,
+    #: geometry, batch, backend) key share one compiled program instead of
+    #: re-tracing.  Disable to force a private executable per plan.
+    exec_cache: bool = True
     # --- measured-tuning knobs (autotune="measure") -------------------------
     cache: Union[None, bool, str] = None   # schedule-cache path / False = off
     tune_top_k: int = 4          # model candidates the tuner times

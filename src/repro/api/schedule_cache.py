@@ -62,9 +62,12 @@ def default_cache_path() -> Path:
     return Path(base) / "repro" / "schedules.json"
 
 
-def _stencil_fingerprint(st) -> str:
+def stencil_fingerprint(st) -> str:
     """Hash of what makes a stencil *itself*: name alone is not identity for
-    user-defined stencils, whose ``apply`` can change under the same name."""
+    user-defined stencils, whose ``apply`` can change under the same name.
+
+    Shared by the persistent schedule cache (this module) and the
+    process-level executable cache (``repro.api.backends``)."""
     h = hashlib.sha1()
     h.update(repr((st.ndim, st.radius, st.flop_pcu, st.num_read,
                    st.num_write, st.has_aux, st.coeff_names,
@@ -97,7 +100,7 @@ def schedule_key(problem, config, device, n_chips: int, chip_grid,
     pin = (f"{config.par_time if config.par_time is not None else '-'}"
            f",{'x'.join(str(b) for b in pin_bs) if pin_bs else '-'}")
     return "|".join([
-        problem.stencil.name, f"st={_stencil_fingerprint(problem.stencil)}",
+        problem.stencil.name, f"st={stencil_fingerprint(problem.stencil)}",
         f"shape={shape}", f"dtype={problem.dtype}",
         f"cb={config.cell_bytes}", f"backend={config.backend}",
         # interpret-mode timings have no relation to compiled ordering:

@@ -29,7 +29,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
-from repro.api.backends import get_backend
+from repro.api.backends import as_program, get_backend
 from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
 from repro.core import perf_model
@@ -76,7 +76,7 @@ def measure_candidate(problem: StencilProblem, config: RunConfig,
     """Time one candidate schedule on the configured backend."""
     geom = prediction.geom
     factory = get_backend(config.backend)
-    execute = factory(problem, config, geom)
+    execute = as_program(factory(problem, config, geom)).execute
     # time whole super-steps: a partial one costs the same as a full one
     # (PE forwarding) and would under-bill deep-par_time candidates
     n_super = math.ceil((config.tune_iters or 1) / geom.par_time)

@@ -124,10 +124,12 @@ def _superstep_stub(stencil: Stencil, geom: BlockGeometry, ext, coeffs,
         aux_in, steps, bounds_arr, *coeff_vals, vmap_method="sequential")
 
 
-def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
-                         bsize, mesh: Mesh,
+def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
+                         par_time: int, bsize, mesh: Mesh,
                          axis_map: Sequence[Optional[Tuple[str, ...]]],
-                         kernel_stub: bool = False):
+                         kernel_stub: bool = False, *,
+                         batch: bool = False, aux_batched: bool = False,
+                         trace_hook=None):
     """Build the jitted multi-device runner ``fn(grid, aux, coeffs) -> grid``.
 
     Used both for real execution (tests/examples) and for the dry-run
@@ -136,6 +138,23 @@ def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
     ``axis_map = (("pod", "data"), ("model",))``. ``kernel_stub=True``
     routes each shard's super-step through the Pallas-kernel stand-in
     (billing/dry-run; see ``_superstep_stub``).
+
+    Throughput extensions (the serving path — see ``repro.api.backends``):
+      * ``iters=None`` builds a *dynamic-iteration* runner
+        ``fn(grid, aux, coeffs, iters)``: the super-step count is computed
+        from the traced ``iters`` scalar, so one shard_map program serves
+        every iteration count (this generalizes the old per-``iters``
+        compiled-program dict).
+      * ``batch=True`` expects a leading batch axis on ``grid`` (replicated
+        over the mesh, sharded only in the grid axes): each super-step
+        exchanges ONE aggregated halo per mesh axis for the whole batch —
+        temporal blocking already divides the number of ICI latency events
+        by ``par_time``; batching divides the per-problem count by ``B``
+        again — then updates all batch members via a vmapped engine
+        super-step.  ``aux_batched`` selects whether the aux (power) grid
+        carries a matching batch axis or is shared by the whole batch.
+      * ``trace_hook`` (if given) is called each time the local program is
+        (re)traced — the executable cache's trace counter.
     """
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
@@ -147,10 +166,16 @@ def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
     geom = BlockGeometry(len(dims), ext_dims, stencil.radius, par_time,
                          tuple(bsize))
     spec = partition_spec(axis_map)
-    n_super = math.ceil(iters / par_time)
     has_aux = stencil.has_aux
+    if kernel_stub and batch:
+        raise NotImplementedError("kernel_stub has no batched variant")
+    # leading batch axis is never sharded; grid axes shift right by one
+    off = 1 if batch else 0
 
-    def local_run(g, aux_l, coeffs_l):
+    def local_impl(g, aux_l, coeffs_l, iters_l):
+        if trace_hook is not None:
+            trace_hook()
+        n_super = (iters_l + par_time - 1) // par_time
         bounds = []
         for names, ld in zip(axis_map, local_dims):
             if names is None:
@@ -163,43 +188,67 @@ def build_distributed_fn(stencil: Stencil, dims, iters: int, par_time: int,
             bounds.append((lo, hi))
         bounds = tuple(bounds)
 
-        keep = tuple(slice(h, h + ld) if names else slice(None)
-                     for names, ld in zip(axis_map, local_dims))
+        keep = (slice(None),) * off + tuple(
+            slice(h, h + ld) if names else slice(None)
+            for names, ld in zip(axis_map, local_dims))
         # aux (power) grid is read-only: exchange its halo once, not per
         # super-step (hoisted out of the fori_loop)
         aux_ext = aux_l
         if has_aux:
+            aux_off = 1 if (batch and aux_batched) else 0
             for ax, names in enumerate(axis_map):
                 if names:
-                    aux_ext = _exchange_halo(aux_ext, ax, names, h)
+                    aux_ext = _exchange_halo(aux_ext, ax + aux_off, names, h)
+
+        def one_superstep(ext, steps):
+            """Per-shard super-step on the halo-extended local grid."""
+            if kernel_stub:
+                return _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
+                                       steps, aux_ext if has_aux else None,
+                                       bounds)
+            if batch:
+                aux_ax = (0 if aux_batched else None) if has_aux else None
+                upd = jax.vmap(
+                    lambda e, a: blocked_superstep(stencil, geom, e, coeffs_l,
+                                                   steps, a, bounds),
+                    in_axes=(0, aux_ax))(ext,
+                                         aux_ext if has_aux else None)
+            else:
+                upd = blocked_superstep(stencil, geom, ext, coeffs_l, steps,
+                                        aux_ext if has_aux else None, bounds)
+            return upd[keep]
 
         def superstep(s, gl):
-            steps = jnp.minimum(par_time, iters - s * par_time)
+            steps = jnp.minimum(par_time, iters_l - s * par_time)
             ext = gl
             for ax, names in enumerate(axis_map):
                 if names:
-                    ext = _exchange_halo(ext, ax, names, h)
-            if kernel_stub:
-                out = _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
-                                      steps, aux_ext if has_aux else None,
-                                      bounds)
-            else:
-                out = blocked_superstep(stencil, geom, ext, coeffs_l, steps,
-                                        aux_ext if has_aux else None, bounds)
-                out = out[keep]
-            return out
+                    # one aggregated exchange per axis for the whole batch
+                    ext = _exchange_halo(ext, ax + off, names, h)
+            return one_superstep(ext, steps)
 
         return jax.lax.fori_loop(0, n_super, superstep, g)
 
-    aux_spec = spec if has_aux else P()
-    shmapped = compat.shard_map(local_run, mesh=mesh,
-                                in_specs=(spec, aux_spec, P()),
-                                out_specs=spec, check_vma=False)
+    aux_spec = P() if not has_aux else (
+        P(None, *spec) if (batch and aux_batched) else spec)
+    grid_spec = P(None, *spec) if batch else spec
+    if iters is None:
+        # dynamic iters: the runner takes the count as a replicated scalar —
+        # fn(grid, aux, coeffs, iters)
+        local_run, in_specs = local_impl, (grid_spec, aux_spec, P(), P())
+    else:
+        # legacy static-iters arity (keeps .lower(grid, aux, coeffs) working
+        # for the dry-run/HLO paths)
+        def local_run(g, aux_l, coeffs_l):
+            return local_impl(g, aux_l, coeffs_l, iters)
+        in_specs = (grid_spec, aux_spec, P())
+    shmapped = compat.shard_map(local_run, mesh=mesh, in_specs=in_specs,
+                                out_specs=grid_spec, check_vma=False)
     return jax.jit(shmapped,
-                   in_shardings=(NamedSharding(mesh, spec),
+                   in_shardings=(NamedSharding(mesh, grid_spec),
                                  NamedSharding(mesh, aux_spec),
-                                 None),
-                   out_shardings=NamedSharding(mesh, spec))
+                                 None) + ((None,) if iters is None else ()),
+                   out_shardings=NamedSharding(mesh, grid_spec))
 
 
 def distributed_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,

@@ -19,7 +19,6 @@ select, exactly like unused PEs passing data down the chain.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax
@@ -142,17 +141,44 @@ def blocked_superstep(stencil: Stencil, geom: BlockGeometry,
     return stitch_blocks(upd, geom)
 
 
-def run_blocked(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
-                par_time: int, bsize, aux: jnp.ndarray | None = None
-                ) -> jnp.ndarray:
-    """Full run: ceil(iters/par_time) super-steps (paper Eq. 8 numerator)."""
-    if isinstance(bsize, int):
-        bsize = (bsize,) * (grid.ndim - 1)
-    geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time, bsize)
-    n_super = math.ceil(iters / par_time)
+def superstep_loop(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
+                   coeffs: dict, iters, aux: jnp.ndarray | None = None,
+                   bounds=None) -> jnp.ndarray:
+    """Fused whole-run driver: ``ceil(iters/par_time)`` super-steps as one
+    traced loop (paper Eq. 8 numerator), so an enclosing ``jit`` lowers the
+    entire iteration count to a single dispatch.
+
+    ``iters`` may be a *traced* scalar: the trip count is computed inside the
+    trace and the loop lowers to a dynamic ``while``, so one compiled
+    executable serves every iteration count — a serving process never
+    re-traces because a request asked for a different ``iters``.  Trailing
+    sub-steps of a partial final super-step are PE-forwarded (paper §3.2)
+    exactly as in :func:`blocked_superstep`.
+    """
+    par_time = geom.par_time
+    n_super = (iters + par_time - 1) // par_time
 
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
-        return blocked_superstep(stencil, geom, g, coeffs, steps, aux)
+        return blocked_superstep(stencil, geom, g, coeffs, steps, aux, bounds)
 
     return jax.lax.fori_loop(0, n_super, body, grid)
+
+
+@partial(jax.jit, static_argnames=("stencil", "geom"))
+def _run_blocked_jit(stencil, geom, grid, coeffs, iters, aux):
+    return superstep_loop(stencil, geom, grid, coeffs, iters, aux)
+
+
+def run_blocked(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
+                par_time: int, bsize, aux: jnp.ndarray | None = None
+                ) -> jnp.ndarray:
+    """Full run: ceil(iters/par_time) super-steps (paper Eq. 8 numerator).
+
+    ``iters`` is passed into the executable as a dynamic scalar, so repeated
+    calls with different iteration counts share one compiled program."""
+    if isinstance(bsize, int):
+        bsize = (bsize,) * (grid.ndim - 1)
+    geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time, bsize)
+    return _run_blocked_jit(stencil, geom, grid, coeffs,
+                            jnp.asarray(iters, jnp.int32), aux)

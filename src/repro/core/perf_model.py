@@ -66,6 +66,7 @@ class Prediction:
     gflops: float
     vmem_bytes: int
     bound: str                   # "memory" | "compute" | "collective"
+    batch: int = 1               # problems advanced per batched super-step
 
     def describe(self) -> str:
         return (f"bsize={self.geom.bsize} par_time={self.geom.par_time} "
@@ -76,14 +77,25 @@ class Prediction:
 def predict(stencil: Stencil, dims: Sequence[int], iters: int,
             bsize, par_time: int, device: Device = TPU_V5E,
             cell_bytes: int = 4, n_chips: int = 1,
-            chip_grid: Sequence[int] | None = None) -> Prediction:
+            chip_grid: Sequence[int] | None = None,
+            batch: int = 1) -> Prediction:
     """Paper Eqs. (3)-(9) + compute/collective terms.
 
     ``n_chips``: spatial distribution (core/distributed.py) — the grid is
     split over chips along the streaming axis (+x for 2D), each chip runs
     the same blocking locally and exchanges a halo of width rad*par_time
     per super-step over ICI.
+
+    ``batch``: ``StencilPlan.run_batch`` advances ``batch`` problems per
+    super-step through one executable.  Grid traffic, compute, and halo
+    bytes scale with the batch; the read-only aux stream (Hotspot's power
+    grid, shared by the batch) and the scalar coefficients are loaded once
+    — so batched Hotspot moves fewer bytes per problem than ``batch``
+    separate runs.  Per-problem metrics (``gcells_s`` etc.) are reported
+    for the whole batch.
     """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
     local_dims = tuple(dims)
@@ -96,10 +108,16 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     # --- memory term (paper Eq. 3: th_mem saturates at th_max = HBM bw) ----
     step_bytes = superstep_traffic_bytes(geom, stencil.num_read,
                                          stencil.num_write, cell_bytes)
+    if batch > 1:
+        # batched super-steps share the read-only aux stream: bill it once,
+        # not `batch` times (coefficients are scalars — free either way)
+        aux_bytes = (superstep_traffic_bytes(geom, 1, 0, cell_bytes)
+                     if stencil.has_aux else 0)
+        step_bytes = batch * step_bytes - (batch - 1) * aux_bytes
     t_mem = step_bytes / device.mem_bw
 
     # --- compute term: every traversed cell is updated par_time times ------
-    cells_per_super = geom.stream_dim * math.prod(
+    cells_per_super = batch * geom.stream_dim * math.prod(
         n * b for n, b in zip(geom.bnum, geom.bsize))
     flops_per_super = cells_per_super * par_time * stencil.flop_pcu
     t_compute = flops_per_super / device.vpu_flops
@@ -108,19 +126,21 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     # Each grid axis actually sharded by the chip grid exchanges two strips
     # of width size_halo whose face area is the shard's cross-section
     # *perpendicular to that axis* — not always the streaming-axis face the
-    # 2D paper setup suggests.
+    # 2D paper setup suggests.  A batch aggregates its members' halos into
+    # one exchange (bytes scale with the batch; the per-super-step latency
+    # events do not).
     t_halo = 0.0
     if n_chips > 1:
         local_cells = math.prod(local_dims)
         halo_cells = sum(geom.size_halo * local_cells // local_dims[ax]
                          for ax, c in enumerate(cg) if c > 1)
-        halo_bytes = 2 * halo_cells * cell_bytes * max(stencil.num_read, 1)
+        halo_bytes = 2 * batch * halo_cells * cell_bytes * max(stencil.num_read, 1)
         t_halo = halo_bytes / device.ici_bw
 
     n_super = math.ceil(iters / par_time)
     t_step = max(t_mem, t_compute, t_halo)
     run_time = n_super * t_step
-    total_cells = math.prod(dims) * iters   # whole-problem cells (all chips)
+    total_cells = batch * math.prod(dims) * iters   # all problems, all chips
     bound = ("memory" if t_mem >= max(t_compute, t_halo)
              else "compute" if t_compute >= t_halo else "collective")
     return Prediction(
@@ -130,7 +150,7 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
         gcells_s=total_cells / run_time,
         gflops=total_cells * stencil.flop_pcu / run_time,
         vmem_bytes=geom.vmem_bytes(cell_bytes, stencil.has_aux),
-        bound=bound)
+        bound=bound, batch=batch)
 
 
 def autotune(stencil: Stencil, dims: Sequence[int], iters: int,

@@ -32,8 +32,10 @@ def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
 
 
 def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    """Edge-pad the blocked (trailing) dims; leading axes (stream, and an
+    optional batch axis in front of it) are left untouched."""
     h = geom.size_halo
-    pads = [(0, 0)]
+    pads = [(0, 0)] * (grid.ndim - (geom.ndim - 1))
     for d, p in zip(geom.blocked_dims, geom.padded_dims):
         pads.append((h, p - d - h))
     return jnp.pad(grid, pads, mode="edge")
@@ -41,28 +43,67 @@ def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
 
 def _slice_blocked(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
     h = geom.size_halo
-    idx = (slice(None),) + tuple(slice(h, h + d) for d in geom.blocked_dims)
+    idx = (Ellipsis,) + tuple(slice(h, h + d) for d in geom.blocked_dims)
     return gp[idx]
 
 
-@partial(jax.jit,
-         static_argnames=("stencil", "geom", "iters", "interpret"))
-def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
-               coeffs_packed: jnp.ndarray, iters: int,
-               aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
-    """``iters`` time-steps via the streaming Pallas kernels."""
+def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+    """Refresh the halo + out-of-bound columns of a padded grid from its real
+    columns.  Bit-identical to ``_pad_blocked(_slice_blocked(gp))`` (both
+    replicate the grid-edge value), but keeps the array in the padded layout
+    so a fused super-step loop can carry it — and an enclosing ``jit`` can
+    donate it — without leaving the padded representation."""
+    h = geom.size_halo
+    for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
+        axis = gp.ndim - (geom.ndim - 1) + i
+        idx = jnp.clip(jnp.arange(p) - h, 0, d - 1) + h
+        gp = jnp.take(gp, idx, axis=axis)
+    return gp
+
+
+def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
+                         gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
+                         aux_p: jnp.ndarray | None, interpret: bool
+                         ) -> jnp.ndarray:
+    """The throughput subsystem's fused driver: the whole ``iters`` loop over
+    the *pre-padded* grid ``gp``, returning the unpadded result.
+
+    Why this shape:
+      * ``iters`` may be a traced scalar — the super-step trip count is
+        computed in-trace and the loop lowers to a dynamic ``while``, so one
+        compiled executable serves every iteration count (no per-``iters``
+        re-trace in a serving loop).
+      * The carry stays in the padded layout: halos are refreshed in place
+        (``_reclamp_padded``) instead of slice+re-pad round-trips, and a
+        caller that jits this function with ``donate_argnums`` on ``gp`` lets
+        XLA reuse the padded buffer for the loop carry (no copy-on-update) —
+        ``gp`` is an intermediate the backend owns, so donation never
+        invalidates a caller-visible array.
+    """
     superstep = superstep_2d if geom.ndim == 2 else superstep_3d
-    n_super = math.ceil(iters / geom.par_time)
-    aux_p = _pad_blocked(aux, geom) if aux is not None else None
+    par_time = geom.par_time
+    n_super = (iters + par_time - 1) // par_time
 
     def body(s, g):
-        steps = jnp.minimum(geom.par_time, iters - s * geom.par_time)
-        gp = _pad_blocked(g, geom)
-        op = superstep(stencil, geom, gp, coeffs_packed, steps, aux_p,
+        steps = jnp.minimum(par_time, iters - s * par_time)
+        op = superstep(stencil, geom, g, coeffs_packed, steps, aux_p,
                        interpret=interpret)
-        return _slice_blocked(op, geom)
+        return _reclamp_padded(op, geom)
 
-    return jax.lax.fori_loop(0, n_super, body, grid)
+    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom)
+
+
+@partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
+               coeffs_packed: jnp.ndarray, iters,
+               aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
+    """``iters`` time-steps via the streaming Pallas kernels.
+
+    ``iters`` is dynamic (traced): one executable per (stencil, geom) serves
+    all iteration counts — see :func:`fused_superstep_loop`."""
+    aux_p = _pad_blocked(aux, geom) if aux is not None else None
+    return fused_superstep_loop(stencil, geom, _pad_blocked(grid, geom),
+                                coeffs_packed, iters, aux_p, interpret)
 
 
 def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
