@@ -20,13 +20,15 @@ from repro.api.backends import (Backend, BackendProgram, as_program,
                                 clear_exec_cache, exec_cache_stats,
                                 get_backend, list_backends, register_backend)
 from repro.api.config import RunConfig
+from repro.core.boundary import BoundaryCondition
 from repro.api.plan import StencilPlan, plan
 from repro.api.problem import StencilProblem
 from repro.api.schedule_cache import ScheduleCache
 from repro.api.tuner import TunedCandidate, tune
 
 __all__ = [
-    "Backend", "BackendProgram", "RunConfig", "ScheduleCache", "StencilPlan",
+    "Backend", "BackendProgram", "BoundaryCondition", "RunConfig",
+    "ScheduleCache", "StencilPlan",
     "StencilProblem", "TunedCandidate", "as_program", "clear_exec_cache",
     "exec_cache_stats", "get_backend", "list_backends", "plan",
     "register_backend", "tune",

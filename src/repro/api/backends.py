@@ -208,9 +208,12 @@ def _exec_key(kind: str, problem: StencilProblem,
     worth having for serving loops."""
     from repro.api.schedule_cache import stencil_fingerprint
     gsig = None if geom is None else (geom.par_time, geom.bsize)
+    # the BC changes the compiled program (pad modes, re-imposition tables,
+    # the periodic stream extension): it MUST split the cache key, or a
+    # clamp-compiled program would serve a periodic plan
     return (kind, problem.stencil.name, stencil_fingerprint(problem.stencil),
-            problem.shape, problem.dtype, gsig, "iters=dyn", batch, aux_mode,
-            *extra)
+            problem.shape, problem.dtype, f"bc={problem.bc.token()}", gsig,
+            "iters=dyn", batch, aux_mode, *extra)
 
 
 def _aux_mode(problem: StencilProblem, aux) -> Optional[str]:
@@ -254,10 +257,11 @@ def _vmapped_program(kind: str, problem, config, key_geom,
 def _reference_backend(problem, config, geom):
     from repro.kernels.ref import oracle_run
     st = problem.stencil
+    bc = problem.bc
 
     def body(grid, coeffs, iters, aux):
         _note_trace("reference")
-        return oracle_run(st, grid, coeffs, iters, aux)
+        return oracle_run(st, grid, coeffs, iters, aux, bc=bc)
 
     # the oracle ignores blocking: key by problem only, not geometry
     return _vmapped_program("reference", problem, config, None, body)
@@ -266,10 +270,11 @@ def _reference_backend(problem, config, geom):
 def _engine_backend(problem, config, geom):
     from repro.core.engine import superstep_loop
     st = problem.stencil
+    bc = problem.bc
 
     def body(grid, coeffs, iters, aux):
         _note_trace("engine")
-        return superstep_loop(st, geom, grid, coeffs, iters, aux)
+        return superstep_loop(st, geom, grid, coeffs, iters, aux, bc=bc)
 
     return _vmapped_program("engine", problem, config, geom, body)
 
@@ -287,6 +292,7 @@ def _make_pallas_backend(force_interpret: bool):
                 f"got problem.dtype={problem.dtype!r} — use the 'engine' or "
                 f"'reference' backend for other dtypes")
         st = problem.stencil
+        bc = problem.bc
         interpret = force_interpret or config.interpret
         tag = "pallas_interpret" if interpret else "pallas"
         get = _program_cache(config.exec_cache)
@@ -296,7 +302,7 @@ def _make_pallas_backend(force_interpret: bool):
             # gp is the backend-owned padded carry: safe to donate
             _note_trace(tag)
             return fused_superstep_loop(st, geom, gp, coeffs_packed, iters,
-                                        aux_p, interpret)
+                                        aux_p, interpret, bc)
 
         def build_single():
             return jax.jit(loop_body,
@@ -306,8 +312,8 @@ def _make_pallas_backend(force_interpret: bool):
                      build_single)
 
         def execute(grid, coeffs, iters, aux=None):
-            gp = _pad_blocked(grid, geom)
-            aux_p = _pad_blocked(aux, geom) if aux is not None else None
+            gp = _pad_blocked(grid, geom, bc)
+            aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
             return single(gp, pack_coeffs(st, coeffs),
                           jnp.asarray(iters, jnp.int32), aux_p)
 
@@ -322,11 +328,12 @@ def _make_pallas_backend(force_interpret: bool):
                     return jax.lax.map(
                         lambda ga: fused_superstep_loop(
                             st, geom, ga[0], coeffs_packed, iters, ga[1],
-                            interpret),
+                            interpret, bc),
                         (gps, aux_p))
                 return jax.lax.map(
                     lambda g: fused_superstep_loop(
-                        st, geom, g, coeffs_packed, iters, aux_p, interpret),
+                        st, geom, g, coeffs_packed, iters, aux_p, interpret,
+                        bc),
                     gps)
             return jax.jit(batched, donate_argnums=(0,) if donate else ())
 
@@ -335,8 +342,8 @@ def _make_pallas_backend(force_interpret: bool):
             key = _exec_key(tag, problem, geom, batch=grids.shape[0],
                             aux_mode=mode, extra=("donate", donate))
             fn = get(key, lambda: build_batch(mode))
-            gps = _pad_blocked(grids, geom)
-            aux_p = _pad_blocked(aux, geom) if aux is not None else None
+            gps = _pad_blocked(grids, geom, bc)
+            aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
             return fn(gps, pack_coeffs(st, coeffs),
                       jnp.asarray(iters, jnp.int32), aux_p)
 
@@ -381,7 +388,7 @@ def _distributed_backend(problem, config, geom):
         return build_distributed_fn(
             st, problem.shape, None, par_time, bsize, mesh, axis_map,
             batch=batch, aux_batched=aux_batched,
-            trace_hook=lambda: _note_trace("distributed"))
+            trace_hook=lambda: _note_trace("distributed"), bc=problem.bc)
 
     def execute(grid, coeffs, iters, aux=None):
         # built lazily on first call (not at plan time): plan() must stay

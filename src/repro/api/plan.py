@@ -21,7 +21,8 @@ from repro.api.backends import (ExecuteFn, as_program, get_backend,
 from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
 from repro.core import perf_model
-from repro.core.blocking import BlockGeometry, superstep_traffic_bytes
+from repro.core.blocking import (BlockGeometry, extended_geometry,
+                                 superstep_traffic_bytes)
 from repro.core.stencils import default_coeffs
 from repro.core.perf_model import Device, Prediction
 
@@ -53,7 +54,8 @@ def _candidate_shortlist(problem: StencilProblem, config: RunConfig,
         problem.stencil, problem.shape, config.iters_hint, device,
         config.cell_bytes, config.par_time_max, n_chips, chip_grid,
         par_time=config.par_time,
-        bsize=config.normalized_bsize(problem.ndim), top_k=top_k)
+        bsize=config.normalized_bsize(problem.ndim), top_k=top_k,
+        bc=problem.bc)
     if not cands:
         raise ValueError(
             f"no VMEM-feasible (bsize, par_time) for {problem.stencil.name} "
@@ -100,7 +102,8 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
                     raise ValueError("mangled schedule-cache entry")
                 pred = perf_model.predict(
                     problem.stencil, problem.shape, config.iters_hint, bsize,
-                    par_time, device, config.cell_bytes, n_chips, chip_grid)
+                    par_time, device, config.cell_bytes, n_chips, chip_grid,
+                    bc=problem.bc)
             except (KeyError, TypeError, ValueError):
                 entry = None
             else:
@@ -292,7 +295,7 @@ class StencilPlan:
             iters if iters is not None else self.config.iters_hint,
             geom.bsize, geom.par_time, device or self.device,
             self.config.cell_bytes, self.n_chips, self.chip_grid,
-            batch=batch)
+            batch=batch, bc=self.problem.bc)
 
     def traffic_report(self, iters: Optional[int] = None) -> dict:
         """Model traffic (paper Eq. 7/8) vs. the Pallas kernels' exact DMA
@@ -301,8 +304,12 @@ class StencilPlan:
         geom = self._require_geometry("traffic_report()")
         st = self.problem.stencil
         cb = self.config.cell_bytes
-        model = superstep_traffic_bytes(geom, st.num_read, st.num_write, cb)
-        kernel = dma_traffic_bytes(st, geom, cb)
+        bc = self.problem.bc
+        # a periodic streaming axis is billed on the extended stream the
+        # kernels actually move (the materialized wrap), matching predict()
+        geom_t = extended_geometry(geom, bc)
+        model = superstep_traffic_bytes(geom_t, st.num_read, st.num_write, cb)
+        kernel = dma_traffic_bytes(st, geom, cb, bc=bc)
         report = {
             "model_bytes_per_superstep": model,
             "kernel_dma_bytes_per_superstep": kernel,
@@ -320,7 +327,8 @@ class StencilPlan:
     def describe(self) -> str:
         st = self.problem.stencil
         lines = [f"StencilPlan[{self.backend}] {st.name} "
-                 f"{self.problem.shape} {self.problem.dtype}"]
+                 f"{self.problem.shape} {self.problem.dtype} "
+                 f"bc={self.problem.bc.token()}"]
         if self.geometry is not None:
             g = self.geometry
             lines.append(f"  schedule: bsize={g.bsize} par_time={g.par_time} "

@@ -12,12 +12,14 @@ from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core.boundary import BCSpec, BoundaryCondition
 from repro.core.stencils import STENCILS, Stencil
 
-#: Supported boundary conditions.  The paper (§5.1) clamps every out-of-bound
-#: neighbor to the boundary cell (edge replication); that is the only BC the
-#: engine/kernels implement today.
-BOUNDARIES = ("clamp",)
+#: Supported boundary-condition kinds (per axis, mixable).  The paper (§5.1)
+#: clamps every out-of-bound neighbor to the boundary cell (edge
+#: replication); the other kinds open the ROADMAP's PDE/wave/periodic-domain
+#: workloads — see ``repro.core.boundary``.
+BOUNDARIES = ("clamp", "periodic", "reflect", "constant")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +36,13 @@ class StencilProblem:
     dtype:
         Cell dtype (normalized to a canonical string; f32 is the paper's).
     boundary:
-        Boundary condition; only ``"clamp"`` (paper §5.1) is supported.
+        Boundary condition: a kind name applied to every axis (``"clamp"``,
+        ``"periodic"``, ``"reflect"``, ``"constant"`` / ``"constant:VALUE"``),
+        a per-axis sequence mixing kinds (streaming axis first, e.g.
+        ``("clamp", "periodic")``), or a
+        :class:`~repro.core.boundary.BoundaryCondition`.  Normalized to a
+        ``BoundaryCondition`` (also exposed as :attr:`bc`).  Default: the
+        paper's clamp (§5.1).
     aux:
         Auxiliary-input spec: ``None`` inherits ``stencil.has_aux`` (Hotspot's
         ``power`` grid); an explicit bool must agree with the stencil.
@@ -42,7 +50,7 @@ class StencilProblem:
     stencil: Union[Stencil, str]
     shape: Tuple[int, ...]
     dtype: str = "float32"
-    boundary: str = "clamp"
+    boundary: BCSpec = "clamp"
     aux: Optional[bool] = None
 
     def __post_init__(self):
@@ -59,14 +67,19 @@ class StencilProblem:
             raise ValueError(f"{st.name} is {st.ndim}D but shape={shape}")
         if any(d < 1 for d in shape):
             raise ValueError(f"non-positive grid extent in {shape}")
-        if self.boundary not in BOUNDARIES:
-            raise ValueError(f"boundary {self.boundary!r} not supported "
-                             f"(have: {BOUNDARIES})")
+        bc = BoundaryCondition.make(self.boundary, st.ndim)
+        bc.validate_shape(shape)
+        object.__setattr__(self, "boundary", bc)
         object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
         if self.aux is not None and bool(self.aux) != st.has_aux:
             raise ValueError(
                 f"aux={self.aux} conflicts with {st.name} "
                 f"(stencil.has_aux={st.has_aux})")
+
+    @property
+    def bc(self) -> BoundaryCondition:
+        """The normalized per-axis boundary condition."""
+        return self.boundary
 
     @property
     def ndim(self) -> int:

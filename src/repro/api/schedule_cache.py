@@ -7,8 +7,8 @@ serving north-star) cannot afford that on every boot, so winners are
 persisted to a small JSON file keyed by everything that determines the
 optimum:
 
-    (stencil, shape, dtype, cell_bytes, backend, interpret flag,
-     execution platform, device, n_chips / chip_grid,
+    (stencil, shape, dtype, boundary condition, cell_bytes, backend,
+     interpret flag, execution platform, device, n_chips / chip_grid,
      pinned par_time/bsize, code-version salt)
 
 The *code-version salt* is a content hash of the stencil/kernel/engine/
@@ -102,6 +102,10 @@ def schedule_key(problem, config, device, n_chips: int, chip_grid,
     return "|".join([
         problem.stencil.name, f"st={stencil_fingerprint(problem.stencil)}",
         f"shape={shape}", f"dtype={problem.dtype}",
+        # the BC shapes the compiled program and its traffic (periodic adds
+        # a stream extension): a winner tuned under clamp must never be
+        # served to a periodic plan
+        f"bc={problem.bc.token()}",
         f"cb={config.cell_bytes}", f"backend={config.backend}",
         # interpret-mode timings have no relation to compiled ordering:
         # never let one serve the other from the cache

@@ -126,6 +126,30 @@ class BlockGeometry:
         return win + stream + out + aux
 
 
+def stream_extension(geom: BlockGeometry, bc) -> int:
+    """Streaming-axis cells *per side* the Pallas path materializes for a
+    periodic stream BC (0 otherwise): the rolling VMEM window cannot reach
+    the far end of the stream, so the wrap is staged in HBM as ``size_halo``
+    extra rows/planes, exact up to garbage creep and refreshed per
+    super-step.  The single definition shared by the kernels' padding/DMA
+    accounting (``kernels.ops``), the perf model (``predict``) and
+    ``StencilPlan.traffic_report`` — these must never drift apart, or the
+    model-vs-kernel traffic-accuracy ratio silently lies."""
+    if bc is not None and bc.kinds[0] == "periodic":
+        return geom.size_halo
+    return 0
+
+
+def extended_geometry(geom: BlockGeometry, bc) -> BlockGeometry:
+    """``geom`` with the periodic stream extension applied — the extents the
+    kernels actually stream (and the ones traffic/compute are billed on)."""
+    ext = stream_extension(geom, bc)
+    if not ext:
+        return geom
+    return dataclasses.replace(
+        geom, dims=(geom.stream_dim + 2 * ext,) + geom.blocked_dims)
+
+
 def bsize_feasible(rad: int, par_time: int, bsize: Sequence[int]) -> bool:
     """True iff ``bsize`` yields a valid geometry after halo widening.
 

@@ -13,16 +13,25 @@ Key correctness points:
   * Received halos make a shard's local run exact up to ``rad*par_time``
     cells from its extended edge — exactly the overlapped-blocking argument
     one level up; the polluted rim is discarded at write-back.
-  * Shards at true grid boundaries pass clamp ``bounds`` to the engine so the
-    clamp BC is re-imposed at the *global* edge (not the shard edge) every
-    fused sub-step (DESIGN.md §2.1). Edge shards receive zero-filled halos
-    from ``ppermute`` (non-wrapping) — harmless, as bounds-clamping makes
-    those positions unread.
+  * Shards at true grid boundaries pass ``bounds`` to the engine so the
+    boundary condition is re-imposed at the *global* edge (not the shard
+    edge) every fused sub-step (DESIGN.md §2.1, ``core.boundary``): clamp/
+    reflect gather from the mapped in-shard coordinate, constant fills the
+    scalar.  Edge shards receive zero-filled halos from ``ppermute``
+    (non-wrapping) — harmless, as bounds re-imposition makes those
+    positions unread.
+  * A **periodic** axis has no physical edge: its halo exchange runs on a
+    wrap-around ``ppermute`` ring (the last shard's trailing strip is the
+    first shard's leading halo and vice versa), every shard's bounds span
+    the whole extended shard, and the local engine treats the axis as an
+    internal seam (no re-imposition; the wrapped halo is an exact
+    translated copy covered by garbage creep).
   * Elasticity: the decomposition is a pure function of (mesh, grid shape);
     restarting on a different mesh re-shards automatically.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -52,20 +61,26 @@ def _axis_total(axis_names: Tuple[str, ...]) -> int:
 
 
 def _exchange_halo(x: jnp.ndarray, grid_axis: int,
-                   axis_names: Tuple[str, ...], h: int) -> jnp.ndarray:
+                   axis_names: Tuple[str, ...], h: int,
+                   periodic: bool = False) -> jnp.ndarray:
     """Extend ``x`` with h-wide neighbor strips along ``grid_axis``.
 
     Neighbor ``i-1``'s trailing strip becomes our leading halo and vice
-    versa; the outermost shards receive zeros (cleaned up by bounds-clamp).
+    versa.  Non-periodic: the outermost shards receive zeros (cleaned up by
+    the bounds re-imposition).  Periodic: the ring wraps around the mesh —
+    shard 0's leading halo is shard n-1's trailing strip, which IS the
+    global periodic neighbor (no true-edge handling left to do locally).
     """
     n = _axis_total(axis_names)
     lead = jax.lax.slice_in_dim(x, 0, h, axis=grid_axis)
     trail = jax.lax.slice_in_dim(x, x.shape[grid_axis] - h,
                                  x.shape[grid_axis], axis=grid_axis)
-    halo_lo = jax.lax.ppermute(trail, axis_names,
-                               [(j, j + 1) for j in range(n - 1)])
-    halo_hi = jax.lax.ppermute(lead, axis_names,
-                               [(j, j - 1) for j in range(1, n)])
+    perm_lo = [(j, (j + 1) % n) for j in range(n)] if periodic else \
+        [(j, j + 1) for j in range(n - 1)]
+    perm_hi = [(j, (j - 1) % n) for j in range(n)] if periodic else \
+        [(j, j - 1) for j in range(1, n)]
+    halo_lo = jax.lax.ppermute(trail, axis_names, perm_lo)
+    halo_hi = jax.lax.ppermute(lead, axis_names, perm_hi)
     return jnp.concatenate([halo_lo, x, halo_hi], axis=grid_axis)
 
 
@@ -78,16 +93,17 @@ def shard_extents(dims, axis_map, mesh: Mesh):
     pads the grid to make it so)."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     out = []
-    for d, names in zip(dims, axis_map):
+    for ax, (d, names) in enumerate(zip(dims, axis_map)):
         n = math.prod(sizes[a] for a in names) if names else 1
         if d % n:
-            raise ValueError(f"grid dim {d} not divisible by {n} shards")
+            raise ValueError(f"grid axis {ax} (extent {d}) not divisible by "
+                             f"its {n} mesh shards")
         out.append(d // n)
     return tuple(out)
 
 
 def _superstep_stub(stencil: Stencil, geom: BlockGeometry, ext, coeffs,
-                    steps, aux_ext, bounds):
+                    steps, aux_ext, bounds, bc=None):
     """Custom-call stand-in for the Pallas streaming kernel (dry-run billing).
 
     Per-shard (already inside shard_map, so GSPMD sees sharded operands):
@@ -109,7 +125,7 @@ def _superstep_stub(stencil: Stencil, geom: BlockGeometry, ext, coeffs,
         out = blocked_superstep(stencil, geom, jnp.asarray(ext_h), cf,
                                 jnp.asarray(steps_h),
                                 jnp.asarray(aux_h) if stencil.has_aux
-                                else None, bounds=bd)
+                                else None, bounds=bd, bc=bc)
         return np.asarray(out[keep])
 
     bounds_arr = jnp.stack([jnp.stack([jnp.asarray(lo, jnp.int32),
@@ -129,7 +145,7 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
                          axis_map: Sequence[Optional[Tuple[str, ...]]],
                          kernel_stub: bool = False, *,
                          batch: bool = False, aux_batched: bool = False,
-                         trace_hook=None):
+                         trace_hook=None, bc=None):
     """Build the jitted multi-device runner ``fn(grid, aux, coeffs) -> grid``.
 
     Used both for real execution (tests/examples) and for the dry-run
@@ -155,10 +171,27 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
         carries a matching batch axis or is shared by the whole batch.
       * ``trace_hook`` (if given) is called each time the local program is
         (re)traced — the executable cache's trace counter.
+      * ``bc`` (``core.boundary.BoundaryCondition``; None = clamp): per-axis
+        boundary condition.  Periodic axes that are mesh-sharded exchange
+        halos on a wrap-around ring and are *localized* to no-op bounds (a
+        shard never sees a physical edge there); every other kind keeps its
+        rule and ``bounds`` distinguishes internal from physical edges.
     """
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
     axis_map = tuple(tuple(a) if a else None for a in axis_map)
+    from repro.core import boundary
+    kinds = boundary.kinds_of(bc, len(dims))
+    # Localize the BC for the per-shard engine: a sharded periodic axis has
+    # no physical edge locally (the wrapped halo arrives by ppermute), so its
+    # local kind degrades to clamp under full-extent bounds (a no-op) — a
+    # local wrap-pad would wrap the *shard*, not the grid.  Unsharded axes
+    # keep their kind: the shard owns the full global extent there.
+    local_kinds = tuple(
+        "clamp" if (names and kind == "periodic") else kind
+        for names, kind in zip(axis_map, kinds))
+    bc_local = None if bc is None else dataclasses.replace(
+        bc, kinds=local_kinds)
     h = stencil.radius * par_time
     local_dims = shard_extents(dims, axis_map, mesh)
     ext_dims = tuple(ld + (2 * h if names else 0)
@@ -177,9 +210,14 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
             trace_hook()
         n_super = (iters_l + par_time - 1) // par_time
         bounds = []
-        for names, ld in zip(axis_map, local_dims):
+        for names, ld, kind in zip(axis_map, local_dims, kinds):
             if names is None:
                 bounds.append((0, ld - 1))
+                continue
+            if kind == "periodic":
+                # wrap-around ring: every shard edge is internal — bounds
+                # span the whole halo-extended shard (re-imposition no-op)
+                bounds.append((0, ld + 2 * h - 1))
                 continue
             i = _linear_index(names)
             n = _axis_total(names)
@@ -198,24 +236,27 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
             aux_off = 1 if (batch and aux_batched) else 0
             for ax, names in enumerate(axis_map):
                 if names:
-                    aux_ext = _exchange_halo(aux_ext, ax + aux_off, names, h)
+                    aux_ext = _exchange_halo(aux_ext, ax + aux_off, names, h,
+                                             periodic=kinds[ax] == "periodic")
 
         def one_superstep(ext, steps):
             """Per-shard super-step on the halo-extended local grid."""
             if kernel_stub:
                 return _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
                                        steps, aux_ext if has_aux else None,
-                                       bounds)
+                                       bounds, bc_local)
             if batch:
                 aux_ax = (0 if aux_batched else None) if has_aux else None
                 upd = jax.vmap(
                     lambda e, a: blocked_superstep(stencil, geom, e, coeffs_l,
-                                                   steps, a, bounds),
+                                                   steps, a, bounds,
+                                                   bc_local),
                     in_axes=(0, aux_ax))(ext,
                                          aux_ext if has_aux else None)
             else:
                 upd = blocked_superstep(stencil, geom, ext, coeffs_l, steps,
-                                        aux_ext if has_aux else None, bounds)
+                                        aux_ext if has_aux else None, bounds,
+                                        bc_local)
             return upd[keep]
 
         def superstep(s, gl):
@@ -224,7 +265,8 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
             for ax, names in enumerate(axis_map):
                 if names:
                     # one aggregated exchange per axis for the whole batch
-                    ext = _exchange_halo(ext, ax + off, names, h)
+                    ext = _exchange_halo(ext, ax + off, names, h,
+                                         periodic=kinds[ax] == "periodic")
             return one_superstep(ext, steps)
 
         return jax.lax.fori_loop(0, n_super, superstep, g)
@@ -253,9 +295,10 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
 
 def distributed_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
                     iters: int, par_time: int, bsize, mesh: Mesh,
-                    axis_map, aux: jnp.ndarray | None = None) -> jnp.ndarray:
+                    axis_map, aux: jnp.ndarray | None = None, *,
+                    bc=None) -> jnp.ndarray:
     """Run ``iters`` steps of ``stencil`` on a grid sharded over ``mesh``."""
     fn = build_distributed_fn(stencil, grid.shape, iters, par_time, bsize,
-                              mesh, axis_map)
+                              mesh, axis_map, bc=bc)
     aux_in = aux if aux is not None else jnp.zeros((), jnp.float32)
     return fn(grid, aux_in, coeffs)

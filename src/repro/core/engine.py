@@ -8,10 +8,15 @@ the flow of writes").  The Pallas kernels in ``repro.kernels`` implement the
 same math with explicit VMEM streaming; this module is their semantic spec
 and the multi-device distribution's local worker.
 
-Boundary-condition handling across fused steps: see DESIGN.md §2.1 — the
-clamp is re-imposed on out-of-grid positions before every sub-step
-(``_reclamp``), and the streaming axis uses edge-mode padding re-derived per
-sub-step (exact, because it is re-computed from current values).
+Boundary-condition handling across fused steps: see DESIGN.md §2.1 and
+``core.boundary`` — local BCs (clamp/reflect/constant) are re-imposed on
+out-of-grid positions before every sub-step (``_reclamp``, now a BC-dispatch
+table), and the streaming axis uses BC-mode padding re-derived per sub-step
+(exact, because it is re-computed from current values).  Periodic axes need
+no re-imposition at all: the super-step padding wraps (``mode="wrap"``), and
+a wrapped halo is an exact translated copy that stays exact up to the
+standard ``rad``-per-sub-step garbage creep — the same argument that makes
+interior block seams correct.
 
 PE forwarding (paper §3.2): when ``iters % par_time != 0`` the trailing
 sub-steps forward data unchanged — implemented as a ``where(t < steps)``
@@ -24,18 +29,25 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import boundary
 from repro.core.blocking import BlockGeometry
 from repro.core.stencils import Stencil
 
 
-def _pad_blocked_dims(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
-    """Edge-pad trailing (blocked) dims: halo on the left, halo + out-of-bound
-    overhang on the right, so every block slice is in-bounds."""
+def _pad_blocked_dims(grid: jnp.ndarray, geom: BlockGeometry,
+                      bc=None) -> jnp.ndarray:
+    """BC-pad trailing (blocked) dims: halo on the left, halo + out-of-bound
+    overhang on the right, so every block slice is in-bounds.  Periodic axes
+    wrap (their only materialization — no per-sub-step re-imposition); other
+    kinds pad per their rule and are refreshed by ``_reclamp`` each sub-step.
+    """
     h = geom.size_halo
-    pads = [(0, 0)]
-    for d, p in zip(geom.blocked_dims, geom.padded_dims):
-        pads.append((h, p - d - h))
-    return jnp.pad(grid, pads, mode="edge")
+    kinds = boundary.kinds_of(bc, geom.ndim)
+    out = grid
+    for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
+        out = boundary.pad_axis(out, i + 1, h, p - d - h, kinds[i + 1],
+                                boundary.fill_of(bc))
+    return out
 
 
 def _block_index(geom: BlockGeometry, dim_i: int) -> jnp.ndarray:
@@ -44,9 +56,10 @@ def _block_index(geom: BlockGeometry, dim_i: int) -> jnp.ndarray:
     return (jnp.arange(n)[:, None] * c + jnp.arange(b)[None, :])
 
 
-def extract_blocks(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+def extract_blocks(grid: jnp.ndarray, geom: BlockGeometry,
+                   bc=None) -> jnp.ndarray:
     """-> (num_blocks..., stream_dim, *bsize) overlapped blocks."""
-    gp = _pad_blocked_dims(grid, geom)
+    gp = _pad_blocked_dims(grid, geom, bc)
     if geom.ndim == 2:
         blk = jnp.take(gp, _block_index(geom, 0), axis=1)   # (ny, bnx, bsx)
         return jnp.moveaxis(blk, 1, 0)                      # (bnx, ny, bsx)
@@ -70,39 +83,70 @@ def stitch_blocks(blocks: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
     return out[:, :geom.blocked_dims[0], :geom.blocked_dims[1]]
 
 
-def _reclamp(block: jnp.ndarray, bidx, geom: BlockGeometry,
-             bounds=None) -> jnp.ndarray:
-    """Re-impose the clamp BC: overwrite out-of-grid positions with the value
-    at the clamped global coordinate. No-op for interior blocks.
+def _mask_fill(arr: jnp.ndarray, mask1d: jnp.ndarray, axis: int,
+               value: float) -> jnp.ndarray:
+    """Overwrite positions selected by a 1-D mask along ``axis`` with
+    ``value`` (the 'constant' BC's re-imposition)."""
+    shape = [1] * arr.ndim
+    shape[axis] = mask1d.shape[0]
+    return jnp.where(mask1d.reshape(shape), jnp.asarray(value, arr.dtype),
+                     arr)
 
-    ``bounds``: optional (ndim, 2) clamp range per grid axis, in grid
-    coordinates — used by the multi-device runtime, where a shard's local
-    edge may be an *internal* boundary (no clamp: bounds cover the whole
-    halo-extended shard) or a *true* grid boundary (clamp at the halo
-    offset). Entries may be traced. None = clamp at the grid edges.
+
+def _reclamp(block: jnp.ndarray, bidx, geom: BlockGeometry,
+             bounds=None, bc=None) -> jnp.ndarray:
+    """Re-impose the (local) BC: overwrite out-of-grid positions per each
+    axis' rule — clamp/reflect gather from the mapped in-grid coordinate,
+    constant fills the scalar.  No-op for interior blocks; periodic axes are
+    skipped entirely (their wrap-padded halos stay exact up to garbage
+    creep — see ``core.boundary``).
+
+    ``bounds``: optional (ndim, 2) physical-edge range per grid axis, in
+    grid coordinates — used by the multi-device runtime, where a shard's
+    local edge may be an *internal* boundary (no re-imposition: bounds cover
+    the whole halo-extended shard) or a *true* grid boundary (BC at the halo
+    offset). Entries may be traced. None = BC at the grid edges.
     """
     h = geom.size_halo
-    if bounds is not None:
+    kinds = boundary.kinds_of(bc, geom.ndim)
+    value = boundary.fill_of(bc)
+    if bounds is not None and kinds[0] != "periodic":
         # streaming axis (axis 0 of the block)
-        idx = jnp.clip(jnp.arange(block.shape[0]), bounds[0][0], bounds[0][1])
-        block = jnp.take(block, idx, axis=0)
+        idx = jnp.arange(block.shape[0])
+        lo, hi = bounds[0]
+        if kinds[0] == "constant":
+            block = _mask_fill(block, boundary.out_of_range(idx, lo, hi),
+                               0, value)
+        else:
+            block = jnp.take(block, boundary.map_index(idx, lo, hi, kinds[0]),
+                             axis=0)
     for i, (dim, b, c) in enumerate(zip(geom.blocked_dims, geom.bsize,
                                         geom.csize)):
+        kind = kinds[i + 1]
+        if kind == "periodic":
+            continue
         axis = block.ndim - (geom.ndim - 1) + i
         lo, hi = (0, dim - 1) if bounds is None else bounds[i + 1]
         gx = bidx[i] * c + jnp.arange(b) - h
-        jc = jnp.clip(gx, lo, hi) + h - bidx[i] * c
-        block = jnp.take(block, jnp.clip(jc, 0, b - 1), axis=axis)
+        if kind == "constant":
+            block = _mask_fill(block, boundary.out_of_range(gx, lo, hi),
+                               axis, value)
+        else:
+            jc = boundary.map_index(gx, lo, hi, kind) + h - bidx[i] * c
+            block = jnp.take(block, jnp.clip(jc, 0, b - 1), axis=axis)
     return block
 
 
 def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
-                   aux_block) -> jnp.ndarray:
-    """One plain stencil step on a block: exact edge-pad BC on the streaming
-    axis, garbage-tolerant edge-pad on blocked axes (halo shrinkage covers
-    it)."""
+                   aux_block, bc=None) -> jnp.ndarray:
+    """One plain stencil step on a block: exact BC-mode pad on the streaming
+    axis (the block carries the full stream extent, so wrap/reflect/constant
+    padding IS the boundary condition there), garbage-tolerant edge-pad on
+    blocked axes (halo shrinkage covers it)."""
     r = stencil.radius
-    p = jnp.pad(block, r, mode="edge")
+    p = boundary.pad_axis(block, 0, r, r, boundary.kinds_of(bc, 1)[0],
+                          boundary.fill_of(bc))
+    p = jnp.pad(p, [(0, 0)] + [(r, r)] * (block.ndim - 1), mode="edge")
 
     def get(off):
         idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, block.shape))
@@ -111,21 +155,22 @@ def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
     return stencil.apply(get, coeffs, aux_block)
 
 
-@partial(jax.jit, static_argnames=("stencil", "geom"))
+@partial(jax.jit, static_argnames=("stencil", "geom", "bc"))
 def blocked_superstep(stencil: Stencil, geom: BlockGeometry,
                       grid: jnp.ndarray, coeffs: dict, steps,
                       aux: jnp.ndarray | None = None,
-                      bounds=None) -> jnp.ndarray:
+                      bounds=None, bc=None) -> jnp.ndarray:
     """Apply ``steps`` (<= par_time) fused time-steps via one HBM round-trip
     worth of overlapped blocks. ``steps`` may be a traced scalar; ``bounds``
-    is the optional per-axis clamp range (see ``_reclamp``)."""
-    blocks = extract_blocks(grid, geom)
-    aux_blocks = extract_blocks(aux, geom) if stencil.has_aux else None
+    is the optional per-axis physical-edge range and ``bc`` the per-axis
+    boundary condition (None = the paper's clamp; see ``_reclamp``)."""
+    blocks = extract_blocks(grid, geom, bc)
+    aux_blocks = extract_blocks(aux, geom, bc) if stencil.has_aux else None
 
     def one_block(block, aux_block, *bidx):
         def substep(t, blk):
-            blk = _reclamp(blk, bidx, geom, bounds)
-            new = _block_substep(stencil, blk, coeffs, aux_block)
+            blk = _reclamp(blk, bidx, geom, bounds, bc)
+            new = _block_substep(stencil, blk, coeffs, aux_block, bc)
             return jnp.where(t < steps, new, blk)   # PE forwarding
         return jax.lax.fori_loop(0, geom.par_time, substep, block)
 
@@ -143,7 +188,7 @@ def blocked_superstep(stencil: Stencil, geom: BlockGeometry,
 
 def superstep_loop(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
                    coeffs: dict, iters, aux: jnp.ndarray | None = None,
-                   bounds=None) -> jnp.ndarray:
+                   bounds=None, bc=None) -> jnp.ndarray:
     """Fused whole-run driver: ``ceil(iters/par_time)`` super-steps as one
     traced loop (paper Eq. 8 numerator), so an enclosing ``jit`` lowers the
     entire iteration count to a single dispatch.
@@ -160,19 +205,20 @@ def superstep_loop(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
 
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
-        return blocked_superstep(stencil, geom, g, coeffs, steps, aux, bounds)
+        return blocked_superstep(stencil, geom, g, coeffs, steps, aux,
+                                 bounds, bc)
 
     return jax.lax.fori_loop(0, n_super, body, grid)
 
 
-@partial(jax.jit, static_argnames=("stencil", "geom"))
-def _run_blocked_jit(stencil, geom, grid, coeffs, iters, aux):
-    return superstep_loop(stencil, geom, grid, coeffs, iters, aux)
+@partial(jax.jit, static_argnames=("stencil", "geom", "bc"))
+def _run_blocked_jit(stencil, geom, grid, coeffs, iters, aux, bc=None):
+    return superstep_loop(stencil, geom, grid, coeffs, iters, aux, bc=bc)
 
 
 def run_blocked(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
-                par_time: int, bsize, aux: jnp.ndarray | None = None
-                ) -> jnp.ndarray:
+                par_time: int, bsize, aux: jnp.ndarray | None = None, *,
+                bc=None) -> jnp.ndarray:
     """Full run: ceil(iters/par_time) super-steps (paper Eq. 8 numerator).
 
     ``iters`` is passed into the executable as a dynamic scalar, so repeated
@@ -181,4 +227,4 @@ def run_blocked(stencil: Stencil, grid: jnp.ndarray, coeffs: dict, iters: int,
         bsize = (bsize,) * (grid.ndim - 1)
     geom = BlockGeometry(grid.ndim, grid.shape, stencil.radius, par_time, bsize)
     return _run_blocked_jit(stencil, geom, grid, coeffs,
-                            jnp.asarray(iters, jnp.int32), aux)
+                            jnp.asarray(iters, jnp.int32), aux, bc)

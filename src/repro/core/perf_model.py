@@ -21,7 +21,7 @@ import math
 from typing import Sequence
 
 from repro.core.blocking import (BlockGeometry, LANE, bsize_feasible,
-                                 choose_bsize_candidates,
+                                 choose_bsize_candidates, extended_geometry,
                                  superstep_traffic_bytes)
 from repro.core.stencils import Stencil
 
@@ -78,7 +78,7 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
             bsize, par_time: int, device: Device = TPU_V5E,
             cell_bytes: int = 4, n_chips: int = 1,
             chip_grid: Sequence[int] | None = None,
-            batch: int = 1) -> Prediction:
+            batch: int = 1, bc=None) -> Prediction:
     """Paper Eqs. (3)-(9) + compute/collective terms.
 
     ``n_chips``: spatial distribution (core/distributed.py) — the grid is
@@ -93,6 +93,14 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     — so batched Hotspot moves fewer bytes per problem than ``batch``
     separate runs.  Per-problem metrics (``gcells_s`` etc.) are reported
     for the whole batch.
+
+    ``bc``: the boundary condition prices into the model two ways.  A
+    periodic *streaming* axis adds a ``2 * rad * par_time`` stream extension
+    per super-step (the kernels materialize the wrap in HBM — extra rows
+    both read and traversed).  Periodic *sharded* axes exchange on a full
+    wrap-around ring: per-chip halo bytes are unchanged (interior shards
+    already sent both strips, which is what ``t_halo`` prices as the
+    critical path), so only the memory/compute terms move.
     """
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
@@ -104,20 +112,24 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
         cg = tuple(chip_grid) if chip_grid else (n_chips,) + (1,) * (len(dims) - 1)
         local_dims = tuple(math.ceil(d / c) for d, c in zip(dims, cg))
     geom = BlockGeometry(len(dims), local_dims, stencil.radius, par_time, bsize)
+    # periodic stream BC: the kernels stream 2*size_halo extra rows/planes
+    # per super-step (the materialized wrap) — bill traffic/compute on the
+    # extended geometry, report the caller-visible one
+    geom_t = extended_geometry(geom, bc)
 
     # --- memory term (paper Eq. 3: th_mem saturates at th_max = HBM bw) ----
-    step_bytes = superstep_traffic_bytes(geom, stencil.num_read,
+    step_bytes = superstep_traffic_bytes(geom_t, stencil.num_read,
                                          stencil.num_write, cell_bytes)
     if batch > 1:
         # batched super-steps share the read-only aux stream: bill it once,
         # not `batch` times (coefficients are scalars — free either way)
-        aux_bytes = (superstep_traffic_bytes(geom, 1, 0, cell_bytes)
+        aux_bytes = (superstep_traffic_bytes(geom_t, 1, 0, cell_bytes)
                      if stencil.has_aux else 0)
         step_bytes = batch * step_bytes - (batch - 1) * aux_bytes
     t_mem = step_bytes / device.mem_bw
 
     # --- compute term: every traversed cell is updated par_time times ------
-    cells_per_super = batch * geom.stream_dim * math.prod(
+    cells_per_super = batch * geom_t.stream_dim * math.prod(
         n * b for n, b in zip(geom.bnum, geom.bsize))
     flops_per_super = cells_per_super * par_time * stencil.flop_pcu
     t_compute = flops_per_super / device.vpu_flops
@@ -159,7 +171,7 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
              chip_grid: Sequence[int] | None = None, *,
              par_time: int | None = None,
              bsize: Sequence[int] | None = None,
-             top_k: int | None = None) -> list:
+             top_k: int | None = None, bc=None) -> list:
     """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
     par_time, drop configs whose working set exceeds the VMEM budget, rank by
     predicted run time. Returns predictions sorted best-first.
@@ -187,7 +199,7 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
             bss = choose_bsize_candidates(len(dims), dims, stencil.radius, pt)
         for bs in bss:
             p = predict(stencil, dims, iters, bs, pt, device,
-                        cell_bytes, n_chips, chip_grid)
+                        cell_bytes, n_chips, chip_grid, bc=bc)
             if p.vmem_bytes <= device.vmem_budget:
                 cands.append(p)
     cands.sort(key=lambda p: p.run_time)

@@ -11,7 +11,9 @@ A stencil is described by:
 
 Boundary condition (paper §5.1): "all out-of-bound neighbors of grid cells on
 the grid boundaries fall back on the boundary cell itself" — i.e. index clamp
-/ edge replication, re-imposed at *every* time-step.
+/ edge replication, re-imposed at *every* time-step.  That clamp is only the
+*default* here: ``repro.core.boundary`` makes the BC a per-axis parameter
+(clamp / periodic / reflect / constant) honored by every backend.
 """
 from __future__ import annotations
 

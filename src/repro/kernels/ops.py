@@ -20,7 +20,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockGeometry
+from repro.core import boundary
+from repro.core.blocking import BlockGeometry, stream_extension as _stream_ext
 from repro.core.stencils import Stencil
 from repro.kernels.stencil2d import superstep_2d
 from repro.kernels.stencil3d import superstep_3d
@@ -31,40 +32,78 @@ def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
                       for n in stencil.coeff_names])
 
 
-def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
-    """Edge-pad the blocked (trailing) dims; leading axes (stream, and an
-    optional batch axis in front of it) are left untouched."""
+def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry,
+                 bc=None) -> jnp.ndarray:
+    """BC-pad the blocked (trailing) dims — halo left, halo + out-of-bound
+    overhang right — plus the periodic stream extension (``_stream_ext``).
+    Leading batch axes (in front of the streaming axis) are left untouched.
+    """
     h = geom.size_halo
-    pads = [(0, 0)] * (grid.ndim - (geom.ndim - 1))
-    for d, p in zip(geom.blocked_dims, geom.padded_dims):
-        pads.append((h, p - d - h))
-    return jnp.pad(grid, pads, mode="edge")
+    kinds = boundary.kinds_of(bc, geom.ndim)
+    fill = boundary.fill_of(bc)
+    lead = grid.ndim - (geom.ndim - 1)       # batch axes + streaming axis
+    out = grid
+    for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
+        out = boundary.pad_axis(out, lead + i, h, p - d - h, kinds[i + 1],
+                                fill)
+    ext = _stream_ext(geom, bc)
+    if ext:
+        out = boundary.pad_axis(out, lead - 1, ext, ext, "periodic")
+    return out
 
 
-def _slice_blocked(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+def _slice_blocked(gp: jnp.ndarray, geom: BlockGeometry,
+                   bc=None) -> jnp.ndarray:
     h = geom.size_halo
-    idx = (Ellipsis,) + tuple(slice(h, h + d) for d in geom.blocked_dims)
+    ext = _stream_ext(geom, bc)
+    idx = ((Ellipsis, slice(ext, ext + geom.stream_dim))
+           + tuple(slice(h, h + d) for d in geom.blocked_dims))
     return gp[idx]
 
 
-def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
+def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry,
+                    bc=None) -> jnp.ndarray:
     """Refresh the halo + out-of-bound columns of a padded grid from its real
-    columns.  Bit-identical to ``_pad_blocked(_slice_blocked(gp))`` (both
-    replicate the grid-edge value), but keeps the array in the padded layout
-    so a fused super-step loop can carry it — and an enclosing ``jit`` can
-    donate it — without leaving the padded representation."""
+    columns, per each axis' BC rule.  Bit-identical to
+    ``_pad_blocked(_slice_blocked(gp))``, but keeps the array in the padded
+    layout so a fused super-step loop can carry it — and an enclosing ``jit``
+    can donate it — without leaving the padded representation.
+
+    Axes whose pad is zero are skipped outright: a degenerate gather there
+    is wasted work and, for the constant BC, would wrongly treat real edge
+    columns as ghost positions (the zero-pad seam case — e.g. a stream-only
+    stencil embedded in a higher-rank grid)."""
     h = geom.size_halo
-    for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
-        axis = gp.ndim - (geom.ndim - 1) + i
-        idx = jnp.clip(jnp.arange(p) - h, 0, d - 1) + h
+    kinds = boundary.kinds_of(bc, geom.ndim)
+    fill = boundary.fill_of(bc)
+    ext = _stream_ext(geom, bc)
+    if ext:
+        axis = gp.ndim - geom.ndim
+        d = geom.stream_dim
+        idx = jnp.mod(jnp.arange(d + 2 * ext) - ext, d) + ext
         gp = jnp.take(gp, idx, axis=axis)
+    for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
+        if p == d:
+            continue
+        axis = gp.ndim - (geom.ndim - 1) + i
+        kind = kinds[i + 1]
+        if kind == "constant":
+            pos = jnp.arange(p) - h
+            mask = boundary.out_of_range(pos, 0, d - 1)
+            shape = [1] * gp.ndim
+            shape[axis] = p
+            gp = jnp.where(mask.reshape(shape),
+                           jnp.asarray(fill, gp.dtype), gp)
+        else:
+            idx = boundary.map_index(jnp.arange(p) - h, 0, d - 1, kind) + h
+            gp = jnp.take(gp, idx, axis=axis)
     return gp
 
 
 def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
                          gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
-                         aux_p: jnp.ndarray | None, interpret: bool
-                         ) -> jnp.ndarray:
+                         aux_p: jnp.ndarray | None, interpret: bool,
+                         bc=None) -> jnp.ndarray:
     """The throughput subsystem's fused driver: the whole ``iters`` loop over
     the *pre-padded* grid ``gp``, returning the unpadded result.
 
@@ -87,27 +126,28 @@ def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
         op = superstep(stencil, geom, g, coeffs_packed, steps, aux_p,
-                       interpret=interpret)
-        return _reclamp_padded(op, geom)
+                       interpret=interpret, bc=bc)
+        return _reclamp_padded(op, geom, bc)
 
-    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom)
+    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc)
 
 
-@partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+@partial(jax.jit, static_argnames=("stencil", "geom", "interpret", "bc"))
 def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
                coeffs_packed: jnp.ndarray, iters,
-               aux: jnp.ndarray | None, interpret: bool) -> jnp.ndarray:
+               aux: jnp.ndarray | None, interpret: bool,
+               bc=None) -> jnp.ndarray:
     """``iters`` time-steps via the streaming Pallas kernels.
 
-    ``iters`` is dynamic (traced): one executable per (stencil, geom) serves
-    all iteration counts — see :func:`fused_superstep_loop`."""
-    aux_p = _pad_blocked(aux, geom) if aux is not None else None
-    return fused_superstep_loop(stencil, geom, _pad_blocked(grid, geom),
-                                coeffs_packed, iters, aux_p, interpret)
+    ``iters`` is dynamic (traced): one executable per (stencil, geom, bc)
+    serves all iteration counts — see :func:`fused_superstep_loop`."""
+    aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
+    return fused_superstep_loop(stencil, geom, _pad_blocked(grid, geom, bc),
+                                coeffs_packed, iters, aux_p, interpret, bc)
 
 
 def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
-                      cell_bytes: int = 4) -> int:
+                      cell_bytes: int = 4, bc=None) -> int:
     """Exact HBM traffic of one Pallas super-step, from its DMA schedule.
 
     The kernels' HBM accesses are fully explicit (manual async copies), so
@@ -127,7 +167,7 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
     ``superstep_traffic_bytes / dma_traffic_bytes`` is the model's traffic
     accuracy for the kernel implementation.
     """
-    stream = geom.stream_dim
+    stream = geom.stream_dim + 2 * _stream_ext(geom, bc)
     block_in = math.prod(geom.bsize)
     block_out = math.prod(geom.csize)
     n_blocks = geom.num_blocks

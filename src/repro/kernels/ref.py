@@ -1,22 +1,31 @@
 """Pure-jnp oracle: unblocked iterated stencil (ground truth for everything).
 
 No spatial or temporal blocking — each time-step reads the whole grid and
-writes the whole grid, with the paper's clamp boundary condition re-imposed
-every step via edge-mode padding.
+writes the whole grid, with the boundary condition re-imposed every step via
+per-axis padding.  The default BC is the paper's clamp (edge replication,
+§5.1); any :class:`~repro.core.boundary.BoundaryCondition` is honored by
+padding each axis with that axis' kind, which *defines* the mixed-BC corner
+semantics every other backend is conformance-tested against.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import boundary
 from repro.core.stencils import Stencil
 
 
 def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
-                aux: jnp.ndarray | None = None) -> jnp.ndarray:
-    """One time-step over the full grid (edge-replicated = clamped BC)."""
+                aux: jnp.ndarray | None = None, *, bc=None) -> jnp.ndarray:
+    """One time-step over the full grid under ``bc`` (default: clamp)."""
     r = stencil.radius
-    p = jnp.pad(grid, r, mode="edge")
+    if bc is None or bc.is_clamp:
+        p = jnp.pad(grid, r, mode="edge")
+    else:
+        p = grid
+        for ax, kind in enumerate(bc.kinds):
+            p = boundary.pad_axis(p, ax, r, r, kind, bc.value)
 
     def get(off):
         idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, grid.shape))
@@ -26,9 +35,10 @@ def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
 
 
 def oracle_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
-               iters: int, aux: jnp.ndarray | None = None) -> jnp.ndarray:
+               iters: int, aux: jnp.ndarray | None = None, *,
+               bc=None) -> jnp.ndarray:
     """``iters`` time-steps (double-buffered in the caller's imagination —
     functionally pure here)."""
     def body(_, g):
-        return oracle_step(stencil, g, coeffs, aux)
+        return oracle_step(stencil, g, coeffs, aux, bc=bc)
     return jax.lax.fori_loop(0, iters, body, grid)

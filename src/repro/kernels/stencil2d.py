@@ -20,10 +20,16 @@ Faithful TPU re-architecture of the paper's accelerator (see DESIGN.md §2):
     trailing stages forward their input row unchanged (runtime ``steps``
     scalar in SMEM).
 
-Boundary handling (DESIGN.md §2.1): the streaming-axis clamp is exact via
-clamped DMA source rows + clamped window reads; the blocked-axis clamp is
-re-imposed on every pushed row (prefix/suffix overwrite with the boundary
-value — only the first/last block ever does real work here).
+Boundary handling (DESIGN.md §2.1, generalized by ``core.boundary``): the
+streaming-axis BC is exact via BC-mapped window reads (clamp clips, reflect
+mirrors — both targets provably live inside the rolling window — constant
+overrides with the fill scalar); the blocked-axis BC is re-imposed on every
+pushed row (prefix/suffix overwrite from the mapped in-row position — only
+the first/last block ever does real work here).  Periodic axes take neither
+path: the wrapper materializes the wrap in HBM (wrap-mode padding; for the
+streaming axis an explicit 2*halo stream extension, since the rolling window
+cannot reach the far end of the stream) and the wrapped halos stay exact up
+to the standard garbage creep, exactly like interior block seams.
 
 TPU-shape notes: rows are ``(1, bsize)`` f32 with ``bsize % 128 == 0``;
 in-row shifts use ``jnp.roll`` (lane rotate; swap for ``pltpu.roll`` on a
@@ -58,7 +64,8 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
             aux_win,                        # VMEM (HA, BX) aux window or None
             aux_buf, aux_sems,              # (2,1,BX) + sems, or None
             out_buf, out_sems,              # VMEM (2,1,CS) + 2 DMA sems
-            *, stencil: Stencil, geom: BlockGeometry, ny: int, dimx: int):
+            *, stencil: Stencil, geom: BlockGeometry, ny: int, dimx: int,
+            bc=None):
     T, rad = geom.par_time, geom.rad
     S = 2 * rad + 1
     BX = geom.bsize[0]
@@ -69,16 +76,34 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
     xs = b * CS                              # block start col in padded grid
     nticks = ny + h
     steps = steps_ref[0, 0]
+    kind_s = "clamp" if bc is None else bc.kinds[0]
+    kind_x = "clamp" if bc is None else bc.kinds[1]
+    fill = 0.0 if bc is None else bc.value
 
     coeffs = {name: coeff_ref[0, i]
               for i, name in enumerate(stencil.coeff_names)}
 
-    # --- x boundary re-clamp (blocked dim): only first/last block act -------
+    # --- x boundary re-imposition (blocked dim): only first/last block act --
     lo = h - xs                              # positions j < lo are left of grid
     hi = (dimx - 1) + h - xs                 # positions j > hi are right of grid
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, BX), 1)
 
     def reclamp_x(row):
+        if kind_x == "periodic":
+            # wrap-padded halos are exact translated copies: no re-imposition
+            # (garbage creep is covered by the halo, as between blocks)
+            return row
+        if kind_x == "constant":
+            row = jnp.where(iota < lo, fill, row)
+            return jnp.where(iota > hi, fill, row)
+        if kind_x == "reflect":
+            # out[j] = row[2*lo - j] for j < lo (mirror about the edge cell);
+            # flip+roll keeps the per-position gather Mosaic-friendly
+            flipped = jnp.flip(row, axis=1)
+            mlo = jnp.roll(flipped, 2 * lo + 1 - BX, axis=1)
+            mhi = jnp.roll(flipped, 2 * hi + 1 - BX, axis=1)
+            row = jnp.where(iota < lo, mlo, row)
+            return jnp.where(iota > hi, mhi, row)
         lo_val = jax.lax.dynamic_slice(row, (0, jnp.clip(lo, 0, BX - 1)), (1, 1))
         hi_val = jax.lax.dynamic_slice(row, (0, jnp.clip(hi, 0, BX - 1)), (1, 1))
         row = jnp.where(iota < lo, lo_val, row)
@@ -108,10 +133,24 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
         aux_copy(0, 0).start()
 
     def read_win(t, row, newest):
-        """Stage-t window row with stream-axis clamp (row may be out of grid).
-        ``newest`` bounds the clip so we never read an unpushed slot."""
-        r = jnp.clip(row, 0, jnp.minimum(newest, ny - 1))
-        return win_ref[t, pl.ds(r % S, 1), :]
+        """Stage-t window row with the stream-axis BC applied (row may be out
+        of grid).  clamp clips; reflect mirrors (the mirror target is within
+        ``rad`` of the edge, hence provably still in the S-deep window);
+        constant reads any in-window row and overrides with the fill;
+        periodic was materialized as a stream extension by the wrapper, so
+        edge reads here are garbage-tolerant clips.  ``newest`` bounds the
+        clip so we never read an unpushed slot."""
+        if kind_s == "reflect":
+            p_ = max(2 * ny - 2, 1)
+            m = jnp.mod(row, p_)
+            row_m = jnp.where(m >= ny, p_ - m, m)
+        else:
+            row_m = row
+        r = jnp.clip(row_m, 0, jnp.minimum(newest, ny - 1))
+        vals = win_ref[t, pl.ds(r % S, 1), :]
+        if kind_s == "constant":
+            vals = jnp.where((row < 0) | (row > ny - 1), fill, vals)
+        return vals
 
     def body(k, _):
         # -- wait input row k; prefetch row k+1 into the other buffer --------
@@ -189,15 +228,18 @@ def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
     out_copy(ny - 1, (ny - 1) % 2).wait()
 
 
-@functools.partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("stencil", "geom", "interpret", "bc"))
 def superstep_2d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
                  coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
                  aux_p: Optional[jnp.ndarray] = None,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, bc=None) -> jnp.ndarray:
     """One super-step (<= par_time fused time-steps) over the padded grid.
 
-    ``gp``/``aux_p``: edge-padded to (ny, bnum*csize + 2*halo).
-    Returns the padded output (only compute columns are meaningful).
+    ``gp``/``aux_p``: BC-padded to (ny, bnum*csize + 2*halo) — plus a
+    2*halo stream extension when the streaming-axis BC is periodic (the
+    wrapper's job; ``ny`` here is whatever streams).  Returns the padded
+    output (only compute columns/rows are meaningful).
     """
     ny, nxp = gp.shape
     T, rad = geom.par_time, geom.rad
@@ -207,7 +249,7 @@ def superstep_2d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
     dimx = geom.blocked_dims[0]
 
     kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
-                               ny=ny, dimx=dimx)
+                               ny=ny, dimx=dimx, bc=bc)
     scratch = [
         pltpu.VMEM((T, S, BX), jnp.float32),      # stage windows
         pltpu.VMEM((2, 1, BX), jnp.float32),      # input double buffer
@@ -227,7 +269,7 @@ def superstep_2d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
             return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
                            win_ref, in_buf, in_sems, None, None, None,
                            out_buf, out_sems, stencil=stencil, geom=geom,
-                           ny=ny, dimx=dimx)
+                           ny=ny, dimx=dimx, bc=bc)
         kernel = kernel_noaux
 
     n_hbm_in = 2 if stencil.has_aux else 1

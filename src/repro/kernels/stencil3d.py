@@ -26,7 +26,7 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
             win_ref, in_buf, in_sems, aux_win, aux_buf, aux_sems,
             out_buf, out_sems,
             *, stencil: Stencil, geom: BlockGeometry, nz: int,
-            dimy: int, dimx: int):
+            dimy: int, dimx: int, bc=None):
     T, rad = geom.par_time, geom.rad
     S = 2 * rad + 1
     BY, BX = geom.bsize
@@ -37,29 +37,48 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
     ys, xs = by * CSY, bx * CSX
     nticks = nz + h
     steps = steps_ref[0, 0]
+    kind_s = "clamp" if bc is None else bc.kinds[0]
+    kind_y = "clamp" if bc is None else bc.kinds[1]
+    kind_x = "clamp" if bc is None else bc.kinds[2]
+    fill = 0.0 if bc is None else bc.value
 
     coeffs = {name: coeff_ref[0, i]
               for i, name in enumerate(stencil.coeff_names)}
 
-    # --- (y, x) boundary re-clamp: only grid-edge blocks act ----------------
+    # --- (y, x) boundary re-imposition: only grid-edge blocks act -----------
+    # Per-axis dispatch mirrors stencil2d.reclamp_x: clamp overwrites the
+    # out-of-grid band with the edge row/col, reflect with the mirrored one
+    # (flip+roll), constant with the fill scalar; periodic skips (wrap-padded
+    # halos are exact translated copies, covered by garbage creep).
     lo_y, hi_y = h - ys, (dimy - 1) + h - ys
     lo_x, hi_x = h - xs, (dimx - 1) + h - xs
     iota_y = jax.lax.broadcasted_iota(jnp.int32, (1, BY, BX), 1)
     iota_x = jax.lax.broadcasted_iota(jnp.int32, (1, BY, BX), 2)
 
+    def _reimpose_axis(plane, kind, axis, n, lo, hi, iota):
+        if kind == "periodic":
+            return plane
+        if kind == "constant":
+            plane = jnp.where(iota < lo, fill, plane)
+            return jnp.where(iota > hi, fill, plane)
+        if kind == "reflect":
+            flipped = jnp.flip(plane, axis=axis)
+            mlo = jnp.roll(flipped, 2 * lo + 1 - n, axis=axis)
+            mhi = jnp.roll(flipped, 2 * hi + 1 - n, axis=axis)
+            plane = jnp.where(iota < lo, mlo, plane)
+            return jnp.where(iota > hi, mhi, plane)
+        sizes = (1, 1, BX) if axis == 1 else (1, BY, 1)
+        at = lambda p: ((0, p, 0) if axis == 1 else (0, 0, p))  # noqa: E731
+        lo_band = jax.lax.dynamic_slice(plane, at(jnp.clip(lo, 0, n - 1)),
+                                        sizes)
+        hi_band = jax.lax.dynamic_slice(plane, at(jnp.clip(hi, 0, n - 1)),
+                                        sizes)
+        plane = jnp.where(iota < lo, lo_band, plane)
+        return jnp.where(iota > hi, hi_band, plane)
+
     def reclamp(plane):
-        lo_row = jax.lax.dynamic_slice(
-            plane, (0, jnp.clip(lo_y, 0, BY - 1), 0), (1, 1, BX))
-        hi_row = jax.lax.dynamic_slice(
-            plane, (0, jnp.clip(hi_y, 0, BY - 1), 0), (1, 1, BX))
-        plane = jnp.where(iota_y < lo_y, lo_row, plane)
-        plane = jnp.where(iota_y > hi_y, hi_row, plane)
-        lo_col = jax.lax.dynamic_slice(
-            plane, (0, 0, jnp.clip(lo_x, 0, BX - 1)), (1, BY, 1))
-        hi_col = jax.lax.dynamic_slice(
-            plane, (0, 0, jnp.clip(hi_x, 0, BX - 1)), (1, BY, 1))
-        plane = jnp.where(iota_x < lo_x, lo_col, plane)
-        return jnp.where(iota_x > hi_x, hi_col, plane)
+        plane = _reimpose_axis(plane, kind_y, 1, BY, lo_y, hi_y, iota_y)
+        return _reimpose_axis(plane, kind_x, 2, BX, lo_x, hi_x, iota_x)
 
     # --- DMA plumbing --------------------------------------------------------
     def in_copy(k, slot):
@@ -86,8 +105,21 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
         aux_copy(0, 0).start()
 
     def read_win(t, plane_i, newest):
-        r = jnp.clip(plane_i, 0, jnp.minimum(newest, nz - 1))
-        return win_ref[t, pl.ds(r % S, 1), :, :]
+        # stream-axis BC: clamp clips, reflect mirrors (target stays within
+        # the S-deep window), constant overrides with the fill; periodic is a
+        # stream extension materialized by the wrapper (edge reads here are
+        # garbage-tolerant clips).  See stencil2d.read_win.
+        if kind_s == "reflect":
+            p_ = max(2 * nz - 2, 1)
+            m = jnp.mod(plane_i, p_)
+            plane_m = jnp.where(m >= nz, p_ - m, m)
+        else:
+            plane_m = plane_i
+        r = jnp.clip(plane_m, 0, jnp.minimum(newest, nz - 1))
+        vals = win_ref[t, pl.ds(r % S, 1), :, :]
+        if kind_s == "constant":
+            vals = jnp.where((plane_i < 0) | (plane_i > nz - 1), fill, vals)
+        return vals
 
     def body(k, _):
         # Planes past nz-1 are never pushed and read_win clamps to the last
@@ -164,11 +196,12 @@ def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
     out_copy(nz - 1, (nz - 1) % 2).wait()
 
 
-@functools.partial(jax.jit, static_argnames=("stencil", "geom", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("stencil", "geom", "interpret", "bc"))
 def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
                  coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
                  aux_p: Optional[jnp.ndarray] = None,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, bc=None) -> jnp.ndarray:
     nz, nyp, nxp = gp.shape
     T, rad = geom.par_time, geom.rad
     S = 2 * rad + 1
@@ -177,7 +210,7 @@ def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
     dimy, dimx = geom.blocked_dims
 
     kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
-                               nz=nz, dimy=dimy, dimx=dimx)
+                               nz=nz, dimy=dimy, dimx=dimx, bc=bc)
     scratch = [
         pltpu.VMEM((T, S, BY, BX), jnp.float32),
         pltpu.VMEM((2, 1, BY, BX), jnp.float32),
@@ -196,7 +229,7 @@ def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
             return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
                            win_ref, in_buf, in_sems, None, None, None,
                            out_buf, out_sems, stencil=stencil, geom=geom,
-                           nz=nz, dimy=dimy, dimx=dimx)
+                           nz=nz, dimy=dimy, dimx=dimx, bc=bc)
         kernel = kernel_noaux
 
     n_hbm_in = 2 if stencil.has_aux else 1

@@ -1,0 +1,113 @@
+"""Distributed boundary-condition conformance check (2-device mesh).
+
+Run in a subprocess with 2 fake CPU devices (tests/test_boundary_conditions.py)
+so the main pytest process keeps its single-device view.  Every BC — including
+per-axis mixes — through ``plan(backend="distributed")`` must match the
+``kernels/ref.py`` oracle, for 2D and 3D, radius 1 and 2, stream-sharded and
+blocked-sharded decompositions, plus ``run_batch`` and the aux (power) stream.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import RunConfig, StencilProblem, plan
+from repro.core import STENCILS, default_coeffs, make_star
+from repro.kernels.ref import oracle_run
+
+
+def _data(st, dims, seed=0):
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.uniform(k, dims, jnp.float32, 0.5, 2.0)
+    aux = (jax.random.uniform(jax.random.fold_in(k, 1), dims,
+                              jnp.float32, 0.0, 0.1)
+           if st.has_aux else None)
+    return g, aux
+
+
+def check(st, dims, bc, axis_map, par_time=2, bsize=16, iters=5):
+    mesh = jax.make_mesh((2,), ("d",))
+    g, aux = _data(st, dims)
+    c = default_coeffs(st)
+    problem = StencilProblem(st, dims, boundary=bc)
+    p = plan(problem, RunConfig(backend="distributed", mesh=mesh,
+                                axis_map=axis_map, par_time=par_time,
+                                bsize=bsize))
+    want = oracle_run(st, g, c, iters, aux, bc=problem.bc)
+    got = p.run(g, iters, c, aux=aux)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5,
+                               err_msg=f"{st.name} bc={bc} map={axis_map}")
+    print(f"ok {st.name} {dims} bc={problem.bc.token()} map={axis_map}")
+
+
+def check_batch():
+    st = STENCILS["hotspot2d"]
+    dims = (16, 32)
+    mesh = jax.make_mesh((2,), ("d",))
+    g, aux = _data(st, dims)
+    gs = jnp.stack([g, g * 1.1, g * 0.9])
+    c = default_coeffs(st)
+    problem = StencilProblem(st, dims, boundary=("periodic", "reflect"))
+    p = plan(problem, RunConfig(backend="distributed", mesh=mesh,
+                                axis_map=(("d",), None), par_time=2,
+                                bsize=16))
+    want = jnp.stack([oracle_run(st, gs[i], c, 4, aux, bc=problem.bc)
+                      for i in range(3)])
+    got = p.run_batch(gs, 4, c, aux=aux)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # batched (per-member) aux too
+    auxs = jnp.stack([aux, aux * 2.0, aux * 0.5])
+    want_b = jnp.stack([oracle_run(st, gs[i], c, 4, auxs[i], bc=problem.bc)
+                        for i in range(3)])
+    got_b = p.run_batch(gs, 4, c, aux=auxs)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(want_b),
+                               rtol=3e-5, atol=3e-5)
+    print("ok run_batch distributed periodic/reflect (shared + batched aux)")
+
+
+def check_indivisible_raises():
+    """plan() must reject a periodic grid axis the mesh cannot shard evenly
+    at plan time, before any execution."""
+    mesh = jax.make_mesh((2,), ("d",))
+    problem = StencilProblem("diffusion2d", (17, 32), boundary="periodic")
+    try:
+        plan(problem, RunConfig(backend="distributed", mesh=mesh,
+                                axis_map=(("d",), None), par_time=1,
+                                bsize=16))
+    except ValueError as e:
+        assert "not divisible" in str(e), e
+        print(f"ok indivisible periodic raises at plan time: {e}")
+        return
+    raise AssertionError("plan() accepted an indivisible periodic axis")
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) == 2, jax.devices()
+    d2 = STENCILS["diffusion2d"]
+    h2 = STENCILS["hotspot2d"]
+    d3 = STENCILS["diffusion3d"]
+    for bc in ["clamp", "periodic", "reflect", "constant:0.7",
+               ("periodic", "clamp"), ("reflect", "periodic"),
+               ("constant:2.0", "periodic")]:
+        check(d2, (16, 32), bc, (("d",), None))      # stream-sharded
+        check(d2, (16, 32), bc, (None, ("d",)))      # blocked-sharded
+    check(h2, (16, 32), "periodic", (("d",), None))
+    check(h2, (16, 32), ("reflect", "periodic"), (None, ("d",)))
+    for bc in ["periodic", ("clamp", "periodic", "reflect"),
+               ("periodic", "constant:1.0", "clamp")]:
+        check(d3, (8, 24, 24), bc, (("d",), None, None), bsize=8)
+        check(d3, (8, 24, 24), bc, (None, ("d",), None), bsize=8)
+    # radius 2 (halo = rad * par_time = 4 wide)
+    check(make_star(2, 2), (16, 48), "periodic", (("d",), None), bsize=24)
+    check(make_star(2, 2), (16, 48), ("reflect", "periodic"), (None, ("d",)),
+          bsize=24)
+    check(make_star(3, 2), (8, 24, 24), ("periodic", "reflect", "periodic"),
+          (("d",), None, None), par_time=1, bsize=12)
+    check_batch()
+    check_indivisible_raises()
+    print("ALL OK")

@@ -293,7 +293,11 @@ def test_problem_validation():
     with pytest.raises(ValueError, match="2D but shape"):
         StencilProblem("diffusion2d", (8, 8, 8))
     with pytest.raises(ValueError, match="boundary"):
-        StencilProblem("diffusion2d", (8, 8), boundary="periodic")
+        StencilProblem("diffusion2d", (8, 8), boundary="bogus")
+    # periodic (and friends) are first-class now — see
+    # tests/test_boundary_conditions.py for the conformance matrix
+    assert StencilProblem("diffusion2d", (8, 8),
+                          boundary="periodic").bc.token() == "periodic"
     with pytest.raises(ValueError, match="aux"):
         StencilProblem("diffusion2d", (8, 8), aux=True)
 

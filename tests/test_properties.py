@@ -18,11 +18,13 @@ from repro.kernels.ref import oracle_run                     # noqa: E402
 
 
 def _plan_run(stencil, g, c, iters, par_time, bsize, aux=None,
-              backend="pallas_interpret"):
-    p = plan(StencilProblem(stencil, tuple(g.shape)),
+              backend="pallas_interpret", boundary="clamp"):
+    p = plan(StencilProblem(stencil, tuple(g.shape), boundary=boundary),
              RunConfig(backend=backend, par_time=par_time, bsize=bsize))
-    return p.run(g, iters, c, aux=aux)
+    return p.run(g, iters, c, aux=aux), p.problem.bc
 
+
+_bc_kind = st.sampled_from(["clamp", "periodic", "reflect", "constant:0.6"])
 
 _geometry2d = st.tuples(
     st.integers(2, 40),            # ny
@@ -31,13 +33,16 @@ _geometry2d = st.tuples(
     st.integers(1, 4),             # par_time
     st.sampled_from([16, 24, 32]), # bsize
     st.sampled_from(["diffusion2d", "hotspot2d"]),
+    st.tuples(_bc_kind, _bc_kind), # per-axis BC mix (stream, blocked)
 )
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=25, deadline=None)
 @given(_geometry2d)
 def test_pallas_equals_oracle_any_geometry(params):
-    ny, nx, iters, par_time, bsize, name = params
+    """Blocking seams can never leak a wrong halo — for ANY per-axis BC mix
+    crossed with ANY (bsize, par_time, grid, iters) combination."""
+    ny, nx, iters, par_time, bsize, name, bc_mix = params
     stencil = STENCILS[name]
     if bsize <= 2 * stencil.radius * par_time:
         return
@@ -47,10 +52,35 @@ def test_pallas_equals_oracle_any_geometry(params):
                               jnp.float32, 0.0, 0.1)
            if stencil.has_aux else None)
     c = default_coeffs(stencil)
-    want = oracle_run(stencil, g, c, iters, aux)
-    got = _plan_run(stencil, g, c, iters, par_time, bsize, aux)
+    got, bc = _plan_run(stencil, g, c, iters, par_time, bsize, aux,
+                        boundary=bc_mix)
+    want = oracle_run(stencil, g, c, iters, aux, bc=bc)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=3e-5, atol=3e-5)
+                               rtol=3e-5, atol=3e-5,
+                               err_msg=f"bc={bc.token()} pt={par_time} "
+                                       f"bs={bsize} {ny}x{nx}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 16), st.integers(3, 24), st.integers(3, 20),
+       st.integers(1, 4), st.integers(1, 3),
+       st.tuples(_bc_kind, _bc_kind, _bc_kind))
+def test_engine_3d_equals_oracle_any_bc(nz, ny, nx, iters, par_time, bc_mix):
+    """3D sweep through the engine backend: three independent per-axis BC
+    draws against random geometry."""
+    stencil = STENCILS["diffusion3d"]
+    bsize = 8
+    if bsize <= 2 * stencil.radius * par_time:
+        return
+    g = jax.random.uniform(jax.random.PRNGKey(nz * 31 + nx), (nz, ny, nx),
+                           jnp.float32, 0.5, 2.0)
+    c = default_coeffs(stencil)
+    got, bc = _plan_run(stencil, g, c, iters, par_time, (bsize, bsize),
+                        backend="engine", boundary=bc_mix)
+    want = oracle_run(stencil, g, c, iters, bc=bc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5,
+                               err_msg=f"bc={bc.token()} pt={par_time}")
 
 
 @settings(max_examples=50, deadline=None)
@@ -84,7 +114,7 @@ def test_diffusion_maximum_principle(ny, nx, seed):
     g = jax.random.uniform(jax.random.PRNGKey(seed), (ny, nx),
                            jnp.float32, -1.0, 1.0)
     c = default_coeffs(stencil)   # convex: coefficients sum to 1
-    out = _plan_run(stencil, g, c, 5, 2, 16)
+    out, _ = _plan_run(stencil, g, c, 5, 2, 16)
     assert float(jnp.max(out)) <= float(jnp.max(g)) + 1e-5
     assert float(jnp.min(out)) >= float(jnp.min(g)) - 1e-5
     assert not bool(jnp.any(jnp.isnan(out)))
@@ -101,6 +131,6 @@ def test_temporal_blocking_is_iteration_invariant(iters):
     c = default_coeffs(stencil)
     ref = oracle_run(stencil, g, c, iters)
     for pt in (1, 2, 4):
-        got = _plan_run(stencil, g, c, iters, pt, 24)
+        got, _ = _plan_run(stencil, g, c, iters, pt, 24)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=3e-5, atol=3e-5)
