@@ -207,7 +207,10 @@ def _exec_key(kind: str, problem: StencilProblem,
     (iters-shape class ``"dyn"``), which is exactly what makes the cache
     worth having for serving loops."""
     from repro.api.schedule_cache import stencil_fingerprint
-    gsig = None if geom is None else (geom.par_time, geom.bsize)
+    # par_vec changes the compiled kernel's window layout, DMA schedule and
+    # stream padding: a V=8 executable must never serve a V=1 plan
+    gsig = (None if geom is None
+            else (geom.par_time, geom.bsize, geom.par_vec))
     # the BC changes the compiled program (pad modes, re-imposition tables,
     # the periodic stream extension): it MUST split the cache key, or a
     # clamp-compiled program would serve a periodic plan
@@ -297,18 +300,23 @@ def _make_pallas_backend(force_interpret: bool):
         tag = "pallas_interpret" if interpret else "pallas"
         get = _program_cache(config.exec_cache)
         donate = _donate_ok(config)
+        # Megacore opt-in recompiles the kernel grid's dimension semantics:
+        # it must split the executable cache alongside donation
+        mc = config.block_parallel
+        extra = ("donate", donate, "mc", mc)
 
         def loop_body(gp, coeffs_packed, iters, aux_p):
             # gp is the backend-owned padded carry: safe to donate
             _note_trace(tag)
             return fused_superstep_loop(st, geom, gp, coeffs_packed, iters,
-                                        aux_p, interpret, bc)
+                                        aux_p, interpret, bc,
+                                        block_parallel=mc)
 
         def build_single():
             return jax.jit(loop_body,
                            donate_argnums=(0,) if donate else ())
 
-        single = get(_exec_key(tag, problem, geom, extra=("donate", donate)),
+        single = get(_exec_key(tag, problem, geom, extra=extra),
                      build_single)
 
         def execute(grid, coeffs, iters, aux=None):
@@ -328,19 +336,19 @@ def _make_pallas_backend(force_interpret: bool):
                     return jax.lax.map(
                         lambda ga: fused_superstep_loop(
                             st, geom, ga[0], coeffs_packed, iters, ga[1],
-                            interpret, bc),
+                            interpret, bc, block_parallel=mc),
                         (gps, aux_p))
                 return jax.lax.map(
                     lambda g: fused_superstep_loop(
                         st, geom, g, coeffs_packed, iters, aux_p, interpret,
-                        bc),
+                        bc, block_parallel=mc),
                     gps)
             return jax.jit(batched, donate_argnums=(0,) if donate else ())
 
         def execute_batch(grids, coeffs, iters, aux=None):
             mode = _aux_mode(problem, aux)
             key = _exec_key(tag, problem, geom, batch=grids.shape[0],
-                            aux_mode=mode, extra=("donate", donate))
+                            aux_mode=mode, extra=extra)
             fn = get(key, lambda: build_batch(mode))
             gps = _pad_blocked(grids, geom, bc)
             aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None

@@ -40,6 +40,10 @@ class RunConfig:
     backend: str = "engine"
     par_time: Optional[int] = None
     bsize: Optional[Union[int, Tuple[int, ...]]] = None
+    #: stream-axis vector width V (rows/planes per kernel tick, paper §3.3).
+    #: ``None`` hands the choice to the tuner (sweeping
+    #: ``perf_model.PAR_VEC_CANDIDATES``) when autotuning, else defaults to 1.
+    par_vec: Optional[int] = None
     autotune: Union[bool, str] = False
     device: Union[Device, str] = "tpu_v5e"
     cell_bytes: int = 4
@@ -59,6 +63,13 @@ class RunConfig:
     #: geometry, batch, backend) key share one compiled program instead of
     #: re-tracing.  Disable to force a private executable per plan.
     exec_cache: bool = True
+    #: opt-in Megacore parallelism (pallas backends): compile the kernel
+    #: grid's block dimension(s) with ``"parallel"`` instead of
+    #: ``"arbitrary"`` semantics.  Blocks are independent by construction
+    #: (halos are redundantly computed; every block writes a disjoint
+    #: compute region), so Mosaic may split them across TensorCores;
+    #: results are bit-identical to the sequential grid.
+    block_parallel: bool = False
     # --- measured-tuning knobs (autotune="measure") -------------------------
     cache: Union[None, bool, str] = None   # schedule-cache path / False = off
     tune_top_k: int = 4          # model candidates the tuner times
@@ -82,6 +93,8 @@ class RunConfig:
             raise ValueError(f"tune_iters must be >= 1, got {self.tune_iters}")
         if self.par_time is not None and self.par_time < 1:
             raise ValueError(f"par_time must be >= 1, got {self.par_time}")
+        if self.par_vec is not None and self.par_vec < 1:
+            raise ValueError(f"par_vec must be >= 1, got {self.par_vec}")
         if self.bsize is not None and not isinstance(self.bsize, int):
             object.__setattr__(self, "bsize",
                                tuple(int(b) for b in self.bsize))

@@ -40,40 +40,64 @@ def _chip_layout(problem: StencilProblem, config: RunConfig):
     return math.prod(chip_grid), chip_grid
 
 
+#: backends whose executables realize ``par_vec`` (the streaming Pallas
+#: kernels).  The others (engine/reference/distributed) run scalar-tick
+#: code, so sweeping V for them would only distort the (bsize, par_time)
+#: ranking and fill measured-tuning shortlists with V-duplicates.
+PAR_VEC_BACKENDS = ("pallas", "pallas_interpret")
+
+#: built-in backends that execute scalar ticks: a *pinned* ``par_vec > 1``
+#: there would silently report (and price) a vector width the executable
+#: never realizes, so ``plan()`` rejects it.  Custom registered backends
+#: are unrestricted — they may well wrap the vectorized kernels.
+SCALAR_TICK_BACKENDS = ("engine", "reference", "distributed")
+
+
 def _candidate_shortlist(problem: StencilProblem, config: RunConfig,
                          device: Device, n_chips: int, chip_grid,
                          top_k: Optional[int] = None):
     """Model-ranked predictions (§5.3 pruning), best first.
 
-    A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
-    value (the paper's tuned depths, e.g. 36, need not be powers of two);
-    the free dimension(s) are enumerated, pruned by the VMEM budget and
-    by geometric feasibility, and ranked by predicted run time.  ``top_k``
+    A pinned ``par_time``, ``bsize`` or ``par_vec`` constrains the sweep to
+    exactly that value (the paper's tuned depths, e.g. 36, need not be
+    powers of two); the free dimension(s) are enumerated, pruned by the
+    VMEM budget and by geometric feasibility, and ranked by predicted run
+    time.  ``par_vec`` is only swept for backends that realize it
+    (:data:`PAR_VEC_BACKENDS`); elsewhere an unpinned V stays 1.  ``top_k``
     truncates to the shortlist the measured tuner times."""
+    par_vec = config.par_vec
+    if par_vec is None and config.backend not in PAR_VEC_BACKENDS:
+        par_vec = 1
     cands = perf_model.autotune(
         problem.stencil, problem.shape, config.iters_hint, device,
         config.cell_bytes, config.par_time_max, n_chips, chip_grid,
         par_time=config.par_time,
-        bsize=config.normalized_bsize(problem.ndim), top_k=top_k,
+        bsize=config.normalized_bsize(problem.ndim),
+        par_vec=par_vec, top_k=top_k,
         bc=problem.bc)
     if not cands:
         raise ValueError(
-            f"no VMEM-feasible (bsize, par_time) for {problem.stencil.name} "
+            f"no VMEM-feasible (bsize, par_time, par_vec) for "
+            f"{problem.stencil.name} "
             f"on {problem.shape} under {device.name} "
             f"(par_time={config.par_time}, bsize={config.bsize}, "
+            f"par_vec={config.par_vec}, "
             f"par_time_max={config.par_time_max})")
     return cands
 
 
 def _resolve_schedule(problem: StencilProblem, config: RunConfig,
                       device: Device, n_chips: int, chip_grid):
-    """Pick (par_time, bsize): explicit, or perf-model autotuned (§5.3)."""
+    """Pick (par_time, bsize, par_vec): explicit, or perf-model autotuned
+    (§5.3).  An unpinned ``par_vec`` on a fully pinned schedule defaults to
+    1 (today's scalar tick) rather than triggering a sweep."""
     par_time = config.par_time
     bsize = config.normalized_bsize(problem.ndim)
     if not config.autotune and par_time is not None and bsize is not None:
-        return par_time, bsize, ()
+        return par_time, bsize, config.par_vec or 1, ()
     cands = _candidate_shortlist(problem, config, device, n_chips, chip_grid)
-    return cands[0].geom.par_time, cands[0].geom.bsize, tuple(cands)
+    best = cands[0].geom
+    return best.par_time, best.bsize, best.par_vec, tuple(cands)
 
 
 def _resolve_measured(problem: StencilProblem, config: RunConfig,
@@ -81,8 +105,9 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
     """autotune="measure": serve the schedule from the persistent cache, or
     time the model's shortlist on the real backend and persist the winner.
 
-    Returns ``(par_time, bsize, candidates, from_cache)`` where candidates
-    are :class:`~repro.api.tuner.TunedCandidate`, measured-best first.
+    Returns ``(par_time, bsize, par_vec, candidates, from_cache)`` where
+    candidates are :class:`~repro.api.tuner.TunedCandidate`, measured-best
+    first.
     """
     cache = schedule_cache.ScheduleCache.resolve(config.cache)
     key = schedule_cache.schedule_key(problem, config, device,
@@ -95,15 +120,18 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
             try:
                 par_time = int(entry["par_time"])
                 bsize = tuple(int(b) for b in entry["bsize"])
+                # pre-par_vec entries (or hand-written ones) mean V=1
+                par_vec = int(entry.get("par_vec", 1))
                 measured_s = float(entry["measured_s"])
                 accuracy = float(entry["model_accuracy"])
-                if (par_time < 1 or len(bsize) != problem.ndim - 1
+                if (par_time < 1 or par_vec < 1
+                        or len(bsize) != problem.ndim - 1
                         or any(b < 1 for b in bsize) or measured_s <= 0):
                     raise ValueError("mangled schedule-cache entry")
                 pred = perf_model.predict(
                     problem.stencil, problem.shape, config.iters_hint, bsize,
                     par_time, device, config.cell_bytes, n_chips, chip_grid,
-                    bc=problem.bc)
+                    bc=problem.bc, par_vec=par_vec)
             except (KeyError, TypeError, ValueError):
                 entry = None
             else:
@@ -111,7 +139,7 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
                     prediction=pred, measured_s=measured_s,
                     measured_run_time=measured_s * pred.n_super,
                     model_accuracy=accuracy, from_cache=True)
-                return par_time, bsize, (cand,), True
+                return par_time, bsize, par_vec, (cand,), True
     shortlist = _candidate_shortlist(problem, config, device,
                                      n_chips, chip_grid,
                                      top_k=config.tune_top_k)
@@ -121,10 +149,11 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
         cache.put(key, {
             "stencil": problem.stencil.name,
             "par_time": best.geom.par_time, "bsize": list(best.geom.bsize),
+            "par_vec": best.geom.par_vec,
             "measured_s": best.measured_s,
             "model_accuracy": best.model_accuracy,
         })
-    return best.geom.par_time, best.geom.bsize, tuned, False
+    return best.geom.par_time, best.geom.bsize, best.geom.par_vec, tuned, False
 
 
 def _validate_distributed(problem: StencilProblem, config: RunConfig) -> None:
@@ -151,14 +180,24 @@ def plan(problem: StencilProblem, config: Optional[RunConfig] = None,
     # of failing (legacy stencil_run never validated the oracle's schedule).
     geom, cands, from_cache = None, (), False
     try:
+        if (config.par_vec is not None and config.par_vec > 1
+                and config.backend in SCALAR_TICK_BACKENDS):
+            # inside the try block: the reference oracle degrades schedule
+            # errors to a geometry-less plan (legacy), the others raise
+            raise ValueError(
+                f"par_vec={config.par_vec} is a Pallas streaming-kernel "
+                f"knob; backend={config.backend!r} executes scalar ticks "
+                f"and cannot honor it — pin par_vec only for "
+                f"{list(PAR_VEC_BACKENDS)} (or leave it unset)")
         if config.autotune == "measure":
-            par_time, bsize, cands, from_cache = _resolve_measured(
+            par_time, bsize, par_vec, cands, from_cache = _resolve_measured(
                 problem, config, device, n_chips, chip_grid)
         else:
-            par_time, bsize, cands = _resolve_schedule(
+            par_time, bsize, par_vec, cands = _resolve_schedule(
                 problem, config, device, n_chips, chip_grid)
         geom = BlockGeometry(problem.ndim, problem.shape,
-                             problem.stencil.radius, par_time, tuple(bsize))
+                             problem.stencil.radius, par_time, tuple(bsize),
+                             par_vec)
     except ValueError:
         if config.backend != "reference":
             raise
@@ -295,7 +334,7 @@ class StencilPlan:
             iters if iters is not None else self.config.iters_hint,
             geom.bsize, geom.par_time, device or self.device,
             self.config.cell_bytes, self.n_chips, self.chip_grid,
-            batch=batch, bc=self.problem.bc)
+            batch=batch, bc=self.problem.bc, par_vec=geom.par_vec)
 
     def traffic_report(self, iters: Optional[int] = None) -> dict:
         """Model traffic (paper Eq. 7/8) vs. the Pallas kernels' exact DMA
@@ -315,6 +354,7 @@ class StencilPlan:
             "kernel_dma_bytes_per_superstep": kernel,
             "traffic_accuracy": model / kernel,
             "redundancy": geom.redundancy,
+            "par_vec": geom.par_vec,
             "vmem_bytes": geom.vmem_bytes(cb, st.has_aux),
         }
         if iters is not None:
@@ -332,6 +372,7 @@ class StencilPlan:
         if self.geometry is not None:
             g = self.geometry
             lines.append(f"  schedule: bsize={g.bsize} par_time={g.par_time} "
+                         f"par_vec={g.par_vec} "
                          f"csize={g.csize} bnum={g.bnum} "
                          f"redundancy={g.redundancy:.3f}")
             lines.append("  predicted: " + self.predicted().describe())

@@ -98,7 +98,8 @@ def schedule_key(problem, config, device, n_chips: int, chip_grid,
     grid = "x".join(str(c) for c in chip_grid) if chip_grid else "-"
     pin_bs = config.normalized_bsize(problem.ndim)
     pin = (f"{config.par_time if config.par_time is not None else '-'}"
-           f",{'x'.join(str(b) for b in pin_bs) if pin_bs else '-'}")
+           f",{'x'.join(str(b) for b in pin_bs) if pin_bs else '-'}"
+           f",{config.par_vec if config.par_vec is not None else '-'}")
     return "|".join([
         problem.stencil.name, f"st={stencil_fingerprint(problem.stencil)}",
         f"shape={shape}", f"dtype={problem.dtype}",

@@ -20,6 +20,14 @@ lane alignment — we require ``csize % lane == 0`` (lane = 128 for f32) for the
 innermost blocked dimension, which makes every block's start offset and every
 compute-block write lane-aligned.  512 bits = 16 f32 on the FPGA; 128 lanes =
 512 bytes on TPU — the same trick, one power of two up.
+
+Stream-axis vectorization (paper §3.3 ``par_vec``): each pipeline tick
+advances ``par_vec`` rows/planes instead of one, so the rolling windows hold
+``win_slots`` slabs of ``par_vec`` rows, every DMA moves a ``(par_vec, ...)``
+slab, and the tick count shrinks ~``par_vec``-fold.  On TPU the natural sweet
+spot is the 8-sublane f32 tile: at V=1 Mosaic pads every window slot and DMA
+landing buffer to 8 sublanes (waste ``vmem_bytes`` now accounts for); at V=8
+each sublane carries a real row.  See DESIGN.md §2.2.
 """
 from __future__ import annotations
 
@@ -39,10 +47,13 @@ class BlockGeometry:
     rad: int
     par_time: int                  # fused time-steps per HBM round-trip
     bsize: Tuple[int, ...]         # block extent per *blocked* dim (trailing axes)
+    par_vec: int = 1               # rows/planes advanced per pipeline tick (V)
 
     def __post_init__(self):
         assert self.ndim == len(self.dims)
         assert len(self.bsize) == self.ndim - 1, "streaming axis is not blocked"
+        if self.par_vec < 1:
+            raise ValueError(f"par_vec must be >= 1, got {self.par_vec}")
         if any(b <= 2 * self.size_halo for b in self.bsize):
             raise ValueError(
                 f"bsize {self.bsize} too small for halo {self.size_halo} "
@@ -67,6 +78,28 @@ class BlockGeometry:
     @property
     def stream_dim(self) -> int:
         return self.dims[0]
+
+    # --- stream-axis vectorization (paper §3.3 par_vec on the TPU) ----------
+    @property
+    def slab_lag(self) -> int:
+        """Slabs of ``par_vec`` rows each PE stage lags its producer by —
+        the vector generalization of the per-stage ``rad``-row lag
+        (``ceil(rad / par_vec)``; equals ``rad`` at V=1)."""
+        return -(-self.rad // self.par_vec)
+
+    @property
+    def win_slots(self) -> int:
+        """Slab slots per rolling stage window.  Stage ``t`` computing slab
+        ``j`` taps rows ``j*V - rad .. (j+1)*V - 1 + rad`` of stage
+        ``t-1``, i.e. slabs ``j - slab_lag .. j + slab_lag`` — the vector
+        form of the ``2*rad + 1``-row window (which it equals at V=1)."""
+        return 2 * self.slab_lag + 1
+
+    def stream_slabs(self, stream: int | None = None) -> int:
+        """Ticks needed to stream ``stream`` rows/planes, ``par_vec`` at a
+        time (kernel wrappers pad the stream axis up to a slab multiple)."""
+        n = self.stream_dim if stream is None else stream
+        return -(-n // self.par_vec)
 
     @property
     def blocked_dims(self) -> Tuple[int, ...]:
@@ -111,19 +144,44 @@ class BlockGeometry:
     # --- VMEM working set of the streaming kernels (bytes) ------------------
     def vmem_bytes(self, cell_bytes: int = 4, has_aux: bool = False,
                    double_buffer: bool = True) -> int:
-        """Rolling-window footprint of the Pallas kernel for this geometry.
+        """Rolling-window footprint of the Pallas kernel for this geometry,
+        **as Mosaic tiles it**: the second-to-last dim of every VMEM buffer
+        is padded to a multiple of 8 sublanes (f32 (8, 128) tiling), so a
+        V=1 2D kernel's ``(2*rad+1, bsize)`` window slots and its
+        ``(1, bsize)`` DMA landing buffers each occupy 8 sublanes no matter
+        how few rows they hold.  That padding is exactly what ``par_vec``
+        reclaims: at V=8 every sublane of the ``(V, bsize)`` slab carries a
+        real row.  Counting it here keeps autotune's VMEM feasibility filter
+        from admitting candidates that OOM on hardware.
 
-        Per temporal stage: a window of (2*rad+1) rows (2D) / planes (3D) of
-        the block extent; plus the input stream buffer (double-buffered DMA)
+        Per temporal stage: a ``win_slots`` slab window of ``par_vec``
+        rows/planes (2D) each; plus double-buffered input/output DMA slabs
         and, for Hotspot, an aux (power) window deep enough to feed the last
-        stage (rad*par_time + 1 rows/planes).
+        stage (``slab_lag * par_time + 1`` slabs).
         """
-        row = math.prod(self.bsize) * cell_bytes  # one row/plane of the block
-        win = self.par_time * (2 * self.rad + 1) * row
-        stream = (2 if double_buffer else 1) * row  # input DMA landing buffers
-        out = (2 if double_buffer else 1) * row
-        aux = (self.size_halo + 1) * row if has_aux else 0
-        return win + stream + out + aux
+        V = self.par_vec
+        db = 2 if double_buffer else 1
+        aux_slabs = self.slab_lag * self.par_time + 1
+
+        def pad8(n: int) -> int:
+            return -(-n // SUBLANE) * SUBLANE
+
+        if self.ndim == 2:
+            # stream rows are the sublane dim of every buffer
+            bx = self.bsize[0]
+            win = self.par_time * pad8(self.win_slots * V) * bx
+            stream = db * pad8(V) * bx
+            out = db * pad8(V) * self.csize[0]
+            # aux = rolling window + its own DMA landing double buffer
+            aux = (pad8(aux_slabs * V) * bx + stream) if has_aux else 0
+        else:
+            # the blocked y extent is the sublane dim; V planes stack above
+            plane = pad8(self.bsize[0]) * self.bsize[1]
+            win = self.par_time * self.win_slots * V * plane
+            stream = db * V * plane
+            out = db * V * pad8(self.csize[0]) * self.csize[1]
+            aux = (aux_slabs * V * plane + stream) if has_aux else 0
+        return (win + stream + out + aux) * cell_bytes
 
 
 def stream_extension(geom: BlockGeometry, bc) -> int:

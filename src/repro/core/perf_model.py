@@ -9,10 +9,16 @@ deep-pipeline overlap assumption carries over (DMA prefetch overlaps VPU
 compute; halo exchange overlaps the interior sweep).
 
 Two roles, mirroring the paper:
-  1. Predict throughput for a given (bsize, par_time) — §4.
-  2. Prune the design space: pick the best (bsize, par_time) subject to the
-     VMEM budget — §5.3's BRAM/DSP pruning, with VMEM as the scarce resource
-     (par_vec is fixed at the 128-lane VPU width on TPU; see DESIGN.md §2).
+  1. Predict throughput for a given (bsize, par_time, par_vec) — §4.
+  2. Prune the design space: pick the best (bsize, par_time, par_vec) subject
+     to the VMEM budget — §5.3's BRAM/DSP pruning, with VMEM as the scarce
+     resource.  ``par_vec`` (paper §3.3, Eq. 6-7) is the stream-axis vector
+     width: the lane dimension is pinned at the 128-lane VPU row, but V
+     rows/planes per tick is a free knob the model prices two ways — 2D
+     sublane utilization (a ``(V, bsize)`` tile wastes ``(8-V)/8`` of the
+     f32 tile's sublanes below V=8) and per-DMA issue cost (V-row slabs cut
+     the descriptor count ~V-fold; thin-row streams are issue-bound, not
+     bandwidth-bound).  See DESIGN.md §2.2.
 """
 from __future__ import annotations
 
@@ -20,10 +26,15 @@ import dataclasses
 import math
 from typing import Sequence
 
-from repro.core.blocking import (BlockGeometry, LANE, bsize_feasible,
+from repro.core.blocking import (BlockGeometry, LANE, SUBLANE, bsize_feasible,
                                  choose_bsize_candidates, extended_geometry,
                                  superstep_traffic_bytes)
 from repro.core.stencils import Stencil
+
+#: ``par_vec`` sweep of :func:`autotune` — powers of two around the 8-sublane
+#: f32 tile (V=8 fills every sublane; V=16 halves the DMA descriptor count
+#: again at 2x the window VMEM).
+PAR_VEC_CANDIDATES = (1, 2, 4, 8, 16)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +47,10 @@ class Device:
     vmem_budget: int = 32 * 2 ** 20  # usable VMEM for kernel working set
     ici_bw: float = 50e9             # bytes/s per ICI link
     hbm_bytes: int = 16 * 2 ** 30
+    #: amortized cost of issuing one DMA descriptor (the reason a
+    #: ``(1, bsize)`` row stream cannot saturate ``mem_bw``: at V=1 the
+    #: kernels issue one descriptor per row per block per stream)
+    dma_issue_s: float = 2e-8
 
     def scaled(self, **kw) -> "Device":
         return dataclasses.replace(self, **kw)
@@ -70,6 +85,7 @@ class Prediction:
 
     def describe(self) -> str:
         return (f"bsize={self.geom.bsize} par_time={self.geom.par_time} "
+                f"par_vec={self.geom.par_vec} "
                 f"-> {self.gflops / 1e9:.1f} GFLOP/s ({self.bound}-bound, "
                 f"{self.gcells_s / 1e9:.2f} GCell/s, red={self.geom.redundancy:.2f})")
 
@@ -78,8 +94,17 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
             bsize, par_time: int, device: Device = TPU_V5E,
             cell_bytes: int = 4, n_chips: int = 1,
             chip_grid: Sequence[int] | None = None,
-            batch: int = 1, bc=None) -> Prediction:
+            batch: int = 1, bc=None, par_vec: int = 1) -> Prediction:
     """Paper Eqs. (3)-(9) + compute/collective terms.
+
+    ``par_vec`` (paper Eq. 7's vector width, V): the kernels stream V
+    rows/planes per tick, so the idealized bytes are unchanged (up to the
+    slab pad of a non-divisible stream) while the tick and DMA-descriptor
+    counts shrink ~V-fold — ``t_mem`` gains a per-descriptor issue term that
+    V amortizes.  For 2D grids the per-tick compute tile is ``(V, bsize)``
+    whose sublane dim is V, so the VPU runs at ``min(V, 8)/8`` utilization
+    below the 8-sublane f32 tile; 3D tiles put the blocked y extent on the
+    sublanes and V only moves the DMA term.
 
     ``n_chips``: spatial distribution (core/distributed.py) — the grid is
     split over chips along the streaming axis (+x for 2D), each chip runs
@@ -111,7 +136,8 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     if n_chips > 1:
         cg = tuple(chip_grid) if chip_grid else (n_chips,) + (1,) * (len(dims) - 1)
         local_dims = tuple(math.ceil(d / c) for d, c in zip(dims, cg))
-    geom = BlockGeometry(len(dims), local_dims, stencil.radius, par_time, bsize)
+    geom = BlockGeometry(len(dims), local_dims, stencil.radius, par_time,
+                         bsize, par_vec)
     # periodic stream BC: the kernels stream 2*size_halo extra rows/planes
     # per super-step (the materialized wrap) — bill traffic/compute on the
     # extended geometry, report the caller-visible one
@@ -120,19 +146,29 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     # --- memory term (paper Eq. 3: th_mem saturates at th_max = HBM bw) ----
     step_bytes = superstep_traffic_bytes(geom_t, stencil.num_read,
                                          stencil.num_write, cell_bytes)
+    # per-descriptor issue cost: each block moves ceil(stream/V) slabs per
+    # input stream and per output per super-step — at V=1 a thin-row stream
+    # is descriptor-bound, which is what par_vec amortizes
+    n_dma = (batch * geom_t.num_blocks * geom_t.stream_slabs()
+             * (stencil.num_read + stencil.num_write))
     if batch > 1:
         # batched super-steps share the read-only aux stream: bill it once,
         # not `batch` times (coefficients are scalars — free either way)
         aux_bytes = (superstep_traffic_bytes(geom_t, 1, 0, cell_bytes)
                      if stencil.has_aux else 0)
         step_bytes = batch * step_bytes - (batch - 1) * aux_bytes
-    t_mem = step_bytes / device.mem_bw
+    t_mem = step_bytes / device.mem_bw + n_dma * device.dma_issue_s
 
     # --- compute term: every traversed cell is updated par_time times ------
+    # sublane utilization of the per-tick compute tile: 2D slabs are
+    # (V, bsize) — V sublanes of the 8-sublane f32 tile; 3D slabs are
+    # (V, bsize_y, bsize_x) — the y extent fills the sublanes
+    sub = par_vec if len(dims) == 2 else bsize[0]
+    sub_eff = min(sub, SUBLANE) / SUBLANE
     cells_per_super = batch * geom_t.stream_dim * math.prod(
         n * b for n, b in zip(geom.bnum, geom.bsize))
     flops_per_super = cells_per_super * par_time * stencil.flop_pcu
-    t_compute = flops_per_super / device.vpu_flops
+    t_compute = flops_per_super / (device.vpu_flops * sub_eff)
 
     # --- collective term: halo exchange once per super-step ----------------
     # Each grid axis actually sharded by the chip grid exchanges two strips
@@ -171,14 +207,17 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
              chip_grid: Sequence[int] | None = None, *,
              par_time: int | None = None,
              bsize: Sequence[int] | None = None,
+             par_vec: int | None = None,
+             par_vecs: Sequence[int] = PAR_VEC_CANDIDATES,
              top_k: int | None = None, bc=None) -> list:
     """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
-    par_time, drop configs whose working set exceeds the VMEM budget, rank by
-    predicted run time. Returns predictions sorted best-first.
+    par_time × par_vec, drop configs whose working set exceeds the VMEM
+    budget, rank by predicted run time. Returns predictions sorted best-first.
 
-    A pinned ``par_time`` or ``bsize`` constrains the sweep to exactly that
-    value (the paper's tuned depths, e.g. 36, need not be powers of two);
-    only the free dimension(s) are enumerated.  ``top_k`` keeps only the
+    A pinned ``par_time``, ``bsize`` or ``par_vec`` constrains the sweep to
+    exactly that value (the paper's tuned depths, e.g. 36, need not be powers
+    of two); only the free dimension(s) are enumerated — ``par_vec`` over
+    :data:`PAR_VEC_CANDIDATES` by default.  ``top_k`` keeps only the
     best-ranked predictions — the shortlist the measured tuner
     (``repro.api.tuner``) times on real hardware.  May return ``[]`` when
     nothing is feasible — callers must not index blindly."""
@@ -189,6 +228,7 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
         while pt <= par_time_max:
             pts.append(pt)
             pt *= 2
+    pvs = [par_vec] if par_vec is not None else list(par_vecs)
     cands = []
     for pt in pts:
         if bsize is not None:
@@ -198,10 +238,12 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
         else:
             bss = choose_bsize_candidates(len(dims), dims, stencil.radius, pt)
         for bs in bss:
-            p = predict(stencil, dims, iters, bs, pt, device,
-                        cell_bytes, n_chips, chip_grid, bc=bc)
-            if p.vmem_bytes <= device.vmem_budget:
-                cands.append(p)
+            for pv in pvs:
+                p = predict(stencil, dims, iters, bs, pt, device,
+                            cell_bytes, n_chips, chip_grid, bc=bc,
+                            par_vec=pv)
+                if p.vmem_bytes <= device.vmem_budget:
+                    cands.append(p)
     cands.sort(key=lambda p: p.run_time)
     return cands if top_k is None else cands[:top_k]
 

@@ -35,8 +35,12 @@ def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
 def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry,
                  bc=None) -> jnp.ndarray:
     """BC-pad the blocked (trailing) dims — halo left, halo + out-of-bound
-    overhang right — plus the periodic stream extension (``_stream_ext``).
-    Leading batch axes (in front of the streaming axis) are left untouched.
+    overhang right — plus the periodic stream extension (``_stream_ext``),
+    plus edge rows padding the stream extent up to a ``par_vec`` multiple
+    (the kernels tick in whole ``(V, ...)`` slabs; pad rows are computed and
+    discarded but never tapped — stream reads are BC-mapped into the true
+    domain first).  Leading batch axes (in front of the streaming axis) are
+    left untouched.
     """
     h = geom.size_halo
     kinds = boundary.kinds_of(bc, geom.ndim)
@@ -49,6 +53,10 @@ def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry,
     ext = _stream_ext(geom, bc)
     if ext:
         out = boundary.pad_axis(out, lead - 1, ext, ext, "periodic")
+    dom = geom.stream_dim + 2 * ext
+    vpad = geom.stream_slabs(dom) * geom.par_vec - dom
+    if vpad:
+        out = boundary.pad_axis(out, lead - 1, 0, vpad, "clamp")
     return out
 
 
@@ -80,8 +88,11 @@ def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry,
     if ext:
         axis = gp.ndim - geom.ndim
         d = geom.stream_dim
-        idx = jnp.mod(jnp.arange(d + 2 * ext) - ext, d) + ext
-        gp = jnp.take(gp, idx, axis=axis)
+        core = jnp.mod(jnp.arange(d + 2 * ext) - ext, d) + ext
+        # par_vec pad rows beyond the wrap live past the domain: map them to
+        # themselves (their values are never tapped, only re-computed)
+        tail = jnp.arange(d + 2 * ext, gp.shape[axis])
+        gp = jnp.take(gp, jnp.concatenate([core, tail]), axis=axis)
     for i, (d, p) in enumerate(zip(geom.blocked_dims, geom.padded_dims)):
         if p == d:
             continue
@@ -103,7 +114,7 @@ def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry,
 def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
                          gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
                          aux_p: jnp.ndarray | None, interpret: bool,
-                         bc=None) -> jnp.ndarray:
+                         bc=None, block_parallel: bool = False) -> jnp.ndarray:
     """The throughput subsystem's fused driver: the whole ``iters`` loop over
     the *pre-padded* grid ``gp``, returning the unpadded result.
 
@@ -126,24 +137,27 @@ def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
         op = superstep(stencil, geom, g, coeffs_packed, steps, aux_p,
-                       interpret=interpret, bc=bc)
+                       interpret=interpret, bc=bc,
+                       block_parallel=block_parallel)
         return _reclamp_padded(op, geom, bc)
 
     return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc)
 
 
-@partial(jax.jit, static_argnames=("stencil", "geom", "interpret", "bc"))
+@partial(jax.jit, static_argnames=("stencil", "geom", "interpret", "bc",
+                                   "block_parallel"))
 def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
                coeffs_packed: jnp.ndarray, iters,
                aux: jnp.ndarray | None, interpret: bool,
-               bc=None) -> jnp.ndarray:
+               bc=None, block_parallel: bool = False) -> jnp.ndarray:
     """``iters`` time-steps via the streaming Pallas kernels.
 
     ``iters`` is dynamic (traced): one executable per (stencil, geom, bc)
     serves all iteration counts — see :func:`fused_superstep_loop`."""
     aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
     return fused_superstep_loop(stencil, geom, _pad_blocked(grid, geom, bc),
-                                coeffs_packed, iters, aux_p, interpret, bc)
+                                coeffs_packed, iters, aux_p, interpret, bc,
+                                block_parallel)
 
 
 def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
@@ -166,8 +180,13 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
     This is what the perf model's Eq. 7/8 idealizes; the ratio
     ``superstep_traffic_bytes / dma_traffic_bytes`` is the model's traffic
     accuracy for the kernel implementation.
+
+    ``par_vec`` rounds the streamed extent up to whole ``(V, ...)`` slabs
+    (the wrapper's stream-axis pad): a non-divisible stream bills the pad
+    rows its DMAs actually move.
     """
-    stream = geom.stream_dim + 2 * _stream_ext(geom, bc)
+    dom = geom.stream_dim + 2 * _stream_ext(geom, bc)
+    stream = geom.stream_slabs(dom) * geom.par_vec
     block_in = math.prod(geom.bsize)
     block_out = math.prod(geom.csize)
     n_blocks = geom.num_blocks

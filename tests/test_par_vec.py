@@ -1,0 +1,385 @@
+"""Stream-axis vectorization (``par_vec``) acceptance surface.
+
+The vectorized kernels must be *observationally invisible*: for every
+(BC mix, rank, radius) the ``par_vec > 1`` Pallas output equals the
+``par_vec = 1`` output bit for bit and matches the reference oracle — for
+divisible and non-divisible stream extents, through ``run`` and
+``run_batch`` alike.  The single documented exception: when an axis is
+periodic the compiled programs for different V may contract FMAs
+differently (XLA codegen, not semantics — the seed kernel already differed
+from the engine at the same ±1-ulp level there), so periodic mixes assert
+ulp-tight closeness instead of bitwise equality.
+
+Also covered: the executable- and schedule-cache keys split on ``par_vec``
+(a V=8 program/winner must never serve a V=1 plan), pre-``par_vec`` cache
+entries default to V=1, ``vmem_bytes`` accounts Mosaic's 8-sublane padding
+(the satellite undercount fix), the perf model prices and sweeps V, the
+exact DMA accounting bills slab padding, and the opt-in Megacore grid
+(``RunConfig.block_parallel``) is bit-identical to the sequential grid.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (RunConfig, StencilProblem, clear_exec_cache,
+                       exec_cache_stats, plan)
+from repro.api import schedule_cache
+from repro.core import STENCILS, default_coeffs, make_star
+from repro.core.blocking import BlockGeometry, SUBLANE
+from repro.core.perf_model import (PAR_VEC_CANDIDATES, TPU_V5E, autotune,
+                                   predict)
+from repro.kernels.ops import dma_traffic_bytes
+from repro.kernels.ref import oracle_run
+
+
+def _data(stencil, dims, seed=0):
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.uniform(k, dims, jnp.float32, 0.5, 2.0)
+    aux = None
+    if stencil.has_aux:
+        aux = jax.random.uniform(jax.random.fold_in(k, 1), dims,
+                                 jnp.float32, 0.0, 0.1)
+    return g, aux
+
+
+def _run(st, g, c, iters, par_time, bsize, par_vec, aux=None, bc="clamp",
+         **cfg):
+    p = plan(StencilProblem(st, tuple(g.shape), boundary=bc),
+             RunConfig(backend="pallas_interpret", par_time=par_time,
+                       bsize=bsize, par_vec=par_vec, **cfg))
+    assert p.geometry.par_vec == par_vec
+    return p.run(g, iters, c, aux=aux)
+
+
+def _assert_v_equal(got, want_v1, bc_mix, msg):
+    """Bitwise V-identity, except periodic mixes: different-V programs may
+    contract FMAs differently there (±1 ulp; pre-existing between the seed
+    kernel and the engine too), so assert ulp-tight closeness instead."""
+    if "periodic" in bc_mix:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want_v1),
+                                   rtol=1e-6, atol=1e-6, err_msg=msg)
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want_v1),
+                                      err_msg=msg)
+
+
+# --- conformance: par_vec x BC x rank x radius (acceptance criterion) --------
+
+CASES = [
+    # (stencil, dims, par_time, bsize) — dims deliberately not multiples of
+    # any swept V (non-divisible stream extents are the common case)
+    ("diffusion2d", (19, 40), 2, 24),
+    ("hotspot2d", (13, 33), 2, 16),
+    ("diffusion3d", (7, 15, 17), 2, 10),
+    ("hotspot3d", (6, 13, 15), 2, 10),
+]
+BCS = ["clamp", "periodic", "reflect", "constant:0.25"]
+
+
+@pytest.mark.parametrize("name,dims,par_time,bsize", CASES)
+@pytest.mark.parametrize("bc", BCS)
+def test_par_vec_matches_v1_and_oracle(name, dims, par_time, bsize, bc):
+    st = STENCILS[name]
+    g, aux = _data(st, dims)
+    c = default_coeffs(st)
+    iters = 5
+    want = oracle_run(st, g, c, iters, aux,
+                      bc=StencilProblem(st, dims, boundary=bc).bc)
+    v1 = _run(name, g, c, iters, par_time, bsize, 1, aux, bc)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(want),
+                               rtol=3e-5, atol=3e-5, err_msg=f"V=1 bc={bc}")
+    for V in (4, 8):
+        got = _run(name, g, c, iters, par_time, bsize, V, aux, bc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5,
+                                   err_msg=f"V={V} bc={bc} vs oracle")
+        _assert_v_equal(got, v1, bc, f"{name} V={V} vs V=1 bc={bc}")
+
+
+@pytest.mark.parametrize("st,dims,par_time,bsize,bc", [
+    (make_star(2, 2), (15, 37), 2, 24, "clamp"),     # rad=2: slab_lag math
+    (make_star(2, 2), (15, 37), 2, 24, "reflect"),
+    (make_star(3, 2), (6, 17, 15), 1, 12, "clamp"),
+    (make_star(3, 2), (6, 17, 15), 1, 12, "periodic"),
+])
+def test_par_vec_high_order(st, dims, par_time, bsize, bc):
+    g, _ = _data(st, dims)
+    c = default_coeffs(st)
+    want = oracle_run(st, g, c, 4, bc=StencilProblem(st, dims, boundary=bc).bc)
+    v1 = _run(st, g, c, 4, par_time, bsize, 1, bc=bc)
+    for V in (3, 4):                      # V > rad and V close to rad
+        got = _run(st, g, c, 4, par_time, bsize, V, bc=bc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5,
+                                   err_msg=f"{st.name} V={V} bc={bc}")
+        _assert_v_equal(got, v1, bc, f"{st.name} V={V} vs V=1 bc={bc}")
+
+
+def test_par_vec_exceeding_stream_extent():
+    """V larger than the whole stream: one slab, mostly pad — still exact."""
+    st = STENCILS["diffusion2d"]
+    g, _ = _data(st, (5, 33))
+    c = default_coeffs(st)
+    want = oracle_run(st, g, c, 3)
+    for V in (8, 16):
+        got = _run("diffusion2d", g, c, 3, 2, 16, V)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"V={V} > ny=5")
+
+
+def test_par_vec_run_batch_matches_sequential():
+    st = STENCILS["hotspot2d"]
+    g, aux = _data(st, (13, 33))
+    c = default_coeffs(st)
+    grids = jnp.stack([g + 0.01 * b for b in range(3)])
+    p = plan(StencilProblem("hotspot2d", (13, 33)),
+             RunConfig(backend="pallas_interpret", par_time=2, bsize=16,
+                       par_vec=8))
+    got = p.run_batch(grids, 4, c, aux=aux)
+    want = jnp.stack([p.run(grids[b], 4, c, aux=aux) for b in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- cache keys split on par_vec (acceptance criterion) -----------------------
+
+def test_exec_cache_splits_on_par_vec():
+    clear_exec_cache()
+    st = STENCILS["diffusion2d"]
+    g, _ = _data(st, (16, 32))
+    c = default_coeffs(st)
+
+    def cfg(V):
+        return RunConfig(backend="pallas_interpret", par_time=2, bsize=16,
+                         par_vec=V)
+
+    plan(StencilProblem(st, (16, 32)), cfg(1)).run(g, 2, c)
+    plan(StencilProblem(st, (16, 32)), cfg(8)).run(g, 2, c)
+    stats = exec_cache_stats()
+    assert stats["misses"] >= 2 and stats["hits"] == 0, stats
+    # same V shares the compiled program
+    plan(StencilProblem(st, (16, 32)), cfg(8)).run(g, 3, c)
+    assert exec_cache_stats()["hits"] >= 1
+
+
+def test_schedule_cache_key_pins_par_vec():
+    problem = StencilProblem("diffusion2d", (64, 512))
+    dev = RunConfig().resolved_device()
+
+    def key(V):
+        return schedule_cache.schedule_key(
+            problem, RunConfig(backend="engine", autotune="measure",
+                               par_time=2, bsize=256, par_vec=V),
+            dev, 1, None)
+
+    assert key(None) != key(1) != key(8)
+
+
+def test_measured_winner_roundtrips_par_vec(tmp_path):
+    cfg = RunConfig(backend="engine", autotune="measure",
+                    cache=str(tmp_path / "s.json"), par_time=2, bsize=256,
+                    tune_top_k=2, tune_warmup=0, tune_repeats=1)
+    problem = StencilProblem("diffusion2d", (64, 512))
+    p1 = plan(problem, cfg)
+    assert not p1.tuned_from_cache
+    p2 = plan(problem, cfg)
+    assert p2.tuned_from_cache
+    assert p2.geometry == p1.geometry           # par_vec included
+    assert p2.geometry.par_vec == p1.candidates[0].geom.par_vec
+
+
+def test_pre_par_vec_cache_entry_defaults_to_v1(tmp_path):
+    """Entries written before the par_vec field (or hand-edited without it)
+    must be served as V=1, not rejected."""
+    cfg = RunConfig(backend="engine", autotune="measure",
+                    cache=str(tmp_path / "s.json"), par_time=2, bsize=256,
+                    tune_top_k=1, tune_warmup=0, tune_repeats=1)
+    problem = StencilProblem("diffusion2d", (64, 512))
+    cache = schedule_cache.ScheduleCache(str(tmp_path / "s.json"))
+    key = schedule_cache.schedule_key(problem, cfg, cfg.resolved_device(),
+                                      1, None)
+    cache.put(key, {"par_time": 2, "bsize": [256], "measured_s": 0.01,
+                    "model_accuracy": 1.0})     # no "par_vec"
+    p = plan(problem, cfg)
+    assert p.tuned_from_cache
+    assert p.geometry.par_vec == 1
+
+
+# --- satellite: opt-in Megacore grid ------------------------------------------
+
+@pytest.mark.parametrize("name,dims,par_time,bsize", [
+    ("diffusion2d", (19, 70), 2, 24),      # several blocks in x
+    ("diffusion3d", (7, 19, 21), 2, 10),   # 2-D grid of blocks
+])
+def test_block_parallel_bit_identical(name, dims, par_time, bsize):
+    st = STENCILS[name]
+    g, aux = _data(st, dims)
+    c = default_coeffs(st)
+    outs = {}
+    for mc in (False, True):
+        p = plan(StencilProblem(name, dims),
+                 RunConfig(backend="pallas_interpret", par_time=par_time,
+                           bsize=bsize, par_vec=4, block_parallel=mc))
+        outs[mc] = p.run(g, 5, c, aux=aux)
+    np.testing.assert_array_equal(np.asarray(outs[True]),
+                                  np.asarray(outs[False]))
+
+
+def test_block_parallel_splits_exec_cache():
+    clear_exec_cache()
+    st = STENCILS["diffusion2d"]
+    g, _ = _data(st, (16, 32))
+    c = default_coeffs(st)
+    for mc in (False, True):
+        plan(StencilProblem(st, (16, 32)),
+             RunConfig(backend="pallas_interpret", par_time=2, bsize=16,
+                       block_parallel=mc)).run(g, 2, c)
+    stats = exec_cache_stats()
+    assert stats["misses"] >= 2 and stats["hits"] == 0, stats
+
+
+# --- satellite: vmem_bytes accounts Mosaic sublane padding --------------------
+
+def _pad8(n):
+    return -(-n // SUBLANE) * SUBLANE
+
+
+def test_vmem_bytes_accounts_sublane_padding_2d():
+    geom = BlockGeometry(2, (64, 512), 1, 2, (256,))    # V=1, W=3 slots
+    # window slots, stream buffers and output buffers all round up to 8
+    # sublanes: the documented (and previously uncounted) Mosaic padding
+    want = 4 * (2 * _pad8(3) * 256          # T * pad8(W*V) * BX
+                + 2 * _pad8(1) * 256        # input double buffer
+                + 2 * _pad8(1) * 252)       # output double buffer (CS=252)
+    assert geom.vmem_bytes(4, False) == want
+    # the old unpadded accounting undercounted by >4x here
+    naive = 4 * (2 * 3 * 256 + 2 * 256 + 2 * 252)
+    assert geom.vmem_bytes(4, False) > 4 * naive
+    # V=8 packs the window slots tight: 24 real rows in 24 sublanes
+    g8 = BlockGeometry(2, (64, 512), 1, 2, (256,), par_vec=8)
+    want8 = 4 * (2 * _pad8(3 * 8) * 256 + 2 * _pad8(8) * 256
+                 + 2 * _pad8(8) * 252)
+    assert g8.vmem_bytes(4, False) == want8
+    # aux = window (slab_lag*T+1 slabs, sublane-padded as one buffer) PLUS
+    # its own DMA landing double buffer — the kernels allocate both
+    ga = BlockGeometry(2, (64, 512), 1, 2, (256,))
+    aux_rows = _pad8((1 * 2 + 1) * 1)
+    assert ga.vmem_bytes(4, True) - ga.vmem_bytes(4, False) \
+        == 4 * (aux_rows * 256 + 2 * _pad8(1) * 256)
+
+
+def test_vmem_bytes_accounts_sublane_padding_3d():
+    geom = BlockGeometry(3, (16, 40, 40), 1, 2, (10, 12))  # BY=10 -> pad 16
+    plane = _pad8(10) * 12
+    want = 4 * (2 * 3 * 1 * plane           # T * W * V * pad8(BY) * BX
+                + 2 * 1 * plane
+                + 2 * 1 * _pad8(6) * 8)     # out: CSY=6 -> 8 sublanes, CSX=8
+    assert geom.vmem_bytes(4, False) == want
+
+
+def test_vmem_feasibility_filter_uses_padded_footprint():
+    """A candidate that only fits VMEM when the 8-sublane padding is ignored
+    must be filtered out by autotune."""
+    st = STENCILS["diffusion2d"]
+    geom = BlockGeometry(2, (1 << 14, 1 << 14), 1, 64, (1 << 14,))
+    need = geom.vmem_bytes(4, st.has_aux)
+    tight = TPU_V5E.scaled(vmem_budget=need - 1)
+    cands = autotune(st, (1 << 14, 1 << 14), 64, tight,
+                     par_time=64, bsize=(1 << 14,), par_vec=1)
+    assert not cands, "padded footprint must trip the feasibility filter"
+    roomy = TPU_V5E.scaled(vmem_budget=need)
+    ok = autotune(st, (1 << 14, 1 << 14), 64, roomy,
+                  par_time=64, bsize=(1 << 14,), par_vec=1)
+    assert len(ok) == 1 and ok[0].vmem_bytes == need
+
+
+# --- perf model: par_vec is priced and swept ----------------------------------
+
+def test_predict_prices_par_vec():
+    st = STENCILS["diffusion2d"]
+    p1 = predict(st, (2048, 2048), 100, (512,), 4, TPU_V5E)
+    p8 = predict(st, (2048, 2048), 100, (512,), 4, TPU_V5E, par_vec=8)
+    # V amortizes both the per-descriptor DMA cost and the 2D sublane waste
+    assert p8.t_mem < p1.t_mem
+    assert p8.t_compute < p1.t_compute
+    assert p8.run_time < p1.run_time
+    assert "par_vec=8" in p8.describe()
+    # idealized bytes are unchanged: the gain is ticks/descriptors, not bytes
+    assert p8.geom.par_vec == 8
+    # 3D: the sublane dim is bsize_y, so V only moves the DMA term
+    st3 = STENCILS["diffusion3d"]
+    q1 = predict(st3, (64, 128, 128), 100, (32, 32), 2, TPU_V5E)
+    q8 = predict(st3, (64, 128, 128), 100, (32, 32), 2, TPU_V5E, par_vec=8)
+    assert q8.t_compute == pytest.approx(q1.t_compute)
+    assert q8.t_mem < q1.t_mem
+
+
+def test_autotune_sweeps_par_vec():
+    st = STENCILS["diffusion2d"]
+    cands = autotune(st, (2048, 2048), 100)
+    assert {c.geom.par_vec for c in cands} >= {1, 8}, \
+        "default sweep must cover PAR_VEC_CANDIDATES"
+    assert cands[0].geom.par_vec > 1, \
+        "the model must prefer a vectorized schedule on a 2D grid"
+    pinned = autotune(st, (2048, 2048), 100, par_vec=2)
+    assert pinned and all(c.geom.par_vec == 2 for c in pinned)
+    assert set(PAR_VEC_CANDIDATES) >= {1, 8}
+
+
+def test_par_vec_swept_only_for_pallas_backends():
+    """Scalar-tick backends (engine/reference/distributed) cannot realize V:
+    sweeping it there would distort the (bsize, par_time) ranking and fill
+    measured shortlists with V-duplicates — an unpinned V stays 1."""
+    prob = StencilProblem("diffusion2d", (2048, 2048))
+    eng = plan(prob, RunConfig(backend="engine", autotune=True))
+    assert eng.geometry.par_vec == 1
+    assert all(c.geom.par_vec == 1 for c in eng.candidates)
+    pal = plan(prob, RunConfig(backend="pallas_interpret", autotune=True))
+    assert pal.geometry.par_vec > 1
+
+
+def test_plan_autotune_respects_pinned_par_vec():
+    p = plan(StencilProblem("diffusion2d", (2048, 2048)),
+             RunConfig(backend="pallas_interpret", autotune=True, par_vec=2))
+    assert p.geometry.par_vec == 2
+    assert "par_vec=2" in p.describe()
+    assert p.traffic_report()["par_vec"] == 2
+
+
+def test_scalar_backend_rejects_pinned_par_vec():
+    """engine/distributed execute scalar ticks: a pinned V>1 would be a
+    silently misreported no-op, so plan() refuses it; the reference oracle
+    keeps its legacy degrade-to-geometry-less semantics."""
+    with pytest.raises(ValueError, match="par_vec"):
+        plan(StencilProblem("diffusion2d", (64, 128)),
+             RunConfig(backend="engine", par_time=2, bsize=32, par_vec=8))
+    p = plan(StencilProblem("diffusion2d", (64, 128)),
+             RunConfig(backend="reference", par_time=2, bsize=32, par_vec=8))
+    assert p.geometry is None
+
+
+def test_config_rejects_bad_par_vec():
+    with pytest.raises(ValueError, match="par_vec"):
+        RunConfig(par_vec=0)
+    with pytest.raises(ValueError, match="par_vec"):
+        BlockGeometry(2, (16, 32), 1, 1, (16,), par_vec=0)
+
+
+# --- exact DMA accounting bills the slab pad ----------------------------------
+
+def test_dma_traffic_bills_slab_padding():
+    st = STENCILS["diffusion2d"]
+    g1 = BlockGeometry(2, (13, 40), 1, 2, (16,), par_vec=1)
+    g8 = dataclasses.replace(g1, par_vec=8)
+    b1 = dma_traffic_bytes(st, g1, 4)
+    b8 = dma_traffic_bytes(st, g8, 4)
+    # V=8 streams ceil(13/8)*8 = 16 rows where V=1 streams 13: 3 pad rows
+    # billed per block, each bsize wide in and csize wide out
+    blocks = g1.num_blocks
+    assert b8 - b1 == blocks * 3 * (16 + 12) * 4
+    # divisible stream: identical traffic
+    gd1 = BlockGeometry(2, (16, 40), 1, 2, (16,), par_vec=1)
+    gd8 = dataclasses.replace(gd1, par_vec=8)
+    assert dma_traffic_bytes(st, gd1, 4) == dma_traffic_bytes(st, gd8, 4)

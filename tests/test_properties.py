@@ -18,9 +18,10 @@ from repro.kernels.ref import oracle_run                     # noqa: E402
 
 
 def _plan_run(stencil, g, c, iters, par_time, bsize, aux=None,
-              backend="pallas_interpret", boundary="clamp"):
+              backend="pallas_interpret", boundary="clamp", par_vec=1):
     p = plan(StencilProblem(stencil, tuple(g.shape), boundary=boundary),
-             RunConfig(backend=backend, par_time=par_time, bsize=bsize))
+             RunConfig(backend=backend, par_time=par_time, bsize=bsize,
+                       par_vec=par_vec))
     return p.run(g, iters, c, aux=aux), p.problem.bc
 
 
@@ -32,6 +33,7 @@ _geometry2d = st.tuples(
     st.integers(1, 6),             # iters
     st.integers(1, 4),             # par_time
     st.sampled_from([16, 24, 32]), # bsize
+    st.sampled_from([1, 2, 4, 8]), # par_vec (stream-axis vector width)
     st.sampled_from(["diffusion2d", "hotspot2d"]),
     st.tuples(_bc_kind, _bc_kind), # per-axis BC mix (stream, blocked)
 )
@@ -41,8 +43,8 @@ _geometry2d = st.tuples(
 @given(_geometry2d)
 def test_pallas_equals_oracle_any_geometry(params):
     """Blocking seams can never leak a wrong halo — for ANY per-axis BC mix
-    crossed with ANY (bsize, par_time, grid, iters) combination."""
-    ny, nx, iters, par_time, bsize, name, bc_mix = params
+    crossed with ANY (bsize, par_time, par_vec, grid, iters) combination."""
+    ny, nx, iters, par_time, bsize, par_vec, name, bc_mix = params
     stencil = STENCILS[name]
     if bsize <= 2 * stencil.radius * par_time:
         return
@@ -53,12 +55,12 @@ def test_pallas_equals_oracle_any_geometry(params):
            if stencil.has_aux else None)
     c = default_coeffs(stencil)
     got, bc = _plan_run(stencil, g, c, iters, par_time, bsize, aux,
-                        boundary=bc_mix)
+                        boundary=bc_mix, par_vec=par_vec)
     want = oracle_run(stencil, g, c, iters, aux, bc=bc)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5,
                                err_msg=f"bc={bc.token()} pt={par_time} "
-                                       f"bs={bsize} {ny}x{nx}")
+                                       f"bs={bsize} V={par_vec} {ny}x{nx}")
 
 
 @settings(max_examples=15, deadline=None)
