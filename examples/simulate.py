@@ -1,6 +1,12 @@
 """Long-running stencil simulation with checkpoint/restart — the paper's
 application wired to the fault-tolerance substrate.
 
+The physics is a *program*: the physical operator chained with a pointwise
+damping stage (``u *= damp`` — a radius-0 stencil), fused into every
+super-step via the ``StencilProgram`` API.  ``--damp 1.0`` degrades the
+chain to the bare legacy stencil (the old single-operator path, kept as
+the comparison baseline).
+
 Builds one autotuned ``StencilPlan`` and advances it in super-steps of
 ``par_time`` fused iterations, checkpointing the grid every N super-steps.
 Kill it mid-run and start it again: it resumes from the latest snapshot
@@ -15,9 +21,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import RunConfig, StencilProblem, plan
+from repro.api import RunConfig, StencilProblem, StencilStage, plan
 from repro.checkpoint import CheckpointManager
 from repro.core import STENCILS
+from repro.core.stencils import make_star
 from repro.data import make_stencil_inputs
 
 
@@ -32,18 +39,28 @@ def main():
                     help="checkpoint every N super-steps")
     ap.add_argument("--inject-failure", type=int, default=None,
                     help="raise at this super-step once (recovers)")
+    ap.add_argument("--damp", type=float, default=0.999,
+                    help="per-step damping factor chained as a pointwise "
+                         "program stage; 1.0 = legacy bare-stencil path")
     args = ap.parse_args()
 
     st = STENCILS[args.stencil]
     dims = (args.dim,) * 2 if st.ndim == 2 else \
         (max(32, args.dim // 8), args.dim // 2, args.dim // 2)
-    sim = plan(StencilProblem(st, dims),
+    if args.damp != 1.0:
+        # program path: operator + pointwise damping, fused per super-step
+        operator = [StencilStage(st),
+                    StencilStage(make_star(st.ndim, 0),
+                                 coeffs={"c0": args.damp}, name="damp")]
+    else:
+        operator = st                # legacy single-operator comparison path
+    sim = plan(StencilProblem(operator, dims),
                RunConfig(backend="engine", autotune=True,
                          iters_hint=args.iters))
     pt, bsize = sim.geometry.par_time, sim.geometry.bsize
     n_super = -(-args.iters // pt)
-    print(f"{st.name} {dims}, {args.iters} iters = {n_super} super-steps "
-          f"of par_time={pt}, bsize={bsize}")
+    print(f"{sim.problem.stencil.name} {dims}, {args.iters} iters = "
+          f"{n_super} super-steps of par_time={pt}, bsize={bsize}")
 
     grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), dims, st.has_aux)
     mgr = CheckpointManager(args.ckpt_dir, keep=2)

@@ -15,6 +15,15 @@ cache, so the timing cost is paid once per (problem, backend, device) key.
 Backends are pluggable via :func:`register_backend`; the built-ins are
 ``reference``, ``engine``, ``pallas``, ``pallas_interpret`` and
 ``distributed`` (a mesh is just config — see ``RunConfig.mesh``).
+
+Multi-stage programs (``repro.programs``) drop in wherever a stencil goes::
+
+    prog = [StencilStage("advect2d", coeffs={...}),
+            StencilStage("diffusion2d")]
+    p = plan(StencilProblem(prog, (4096, 4096)), RunConfig(...))
+
+— each iteration applies the stages in order, fused into one super-step
+executable: intermediates never round-trip through HBM.
 """
 from repro.api.backends import (Backend, BackendProgram, as_program,
                                 clear_exec_cache, exec_cache_stats,
@@ -25,11 +34,12 @@ from repro.api.plan import StencilPlan, plan
 from repro.api.problem import StencilProblem
 from repro.api.schedule_cache import ScheduleCache
 from repro.api.tuner import TunedCandidate, tune
+from repro.programs import StencilProgram, StencilStage
 
 __all__ = [
     "Backend", "BackendProgram", "BoundaryCondition", "RunConfig",
-    "ScheduleCache", "StencilPlan",
-    "StencilProblem", "TunedCandidate", "as_program", "clear_exec_cache",
+    "ScheduleCache", "StencilPlan", "StencilProblem", "StencilProgram",
+    "StencilStage", "TunedCandidate", "as_program", "clear_exec_cache",
     "exec_cache_stats", "get_backend", "list_backends", "plan",
     "register_backend", "tune",
 ]

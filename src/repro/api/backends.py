@@ -258,33 +258,49 @@ def _vmapped_program(kind: str, problem, config, key_geom,
 
 
 def _reference_backend(problem, config, geom):
-    from repro.kernels.ref import oracle_run
-    st = problem.stencil
-    bc = problem.bc
+    if problem.n_stages > 1:
+        from repro.kernels.ref import oracle_program_run
+        stages = problem.exec_stages
 
-    def body(grid, coeffs, iters, aux):
-        _note_trace("reference")
-        return oracle_run(st, grid, coeffs, iters, aux, bc=bc)
+        def body(grid, coeffs, iters, aux):
+            _note_trace("reference")
+            return oracle_program_run(stages, grid, coeffs, iters, aux)
+    else:
+        from repro.kernels.ref import oracle_run
+        st, bc = problem.exec_stages[0]
+
+        def body(grid, coeffs, iters, aux):
+            _note_trace("reference")
+            return oracle_run(st, grid, coeffs, iters, aux, bc=bc)
 
     # the oracle ignores blocking: key by problem only, not geometry
     return _vmapped_program("reference", problem, config, None, body)
 
 
 def _engine_backend(problem, config, geom):
-    from repro.core.engine import superstep_loop
-    st = problem.stencil
-    bc = problem.bc
+    if problem.n_stages > 1:
+        from repro.core.engine import superstep_loop_chain
+        stages = problem.exec_stages
 
-    def body(grid, coeffs, iters, aux):
-        _note_trace("engine")
-        return superstep_loop(st, geom, grid, coeffs, iters, aux, bc=bc)
+        def body(grid, coeffs, iters, aux):
+            _note_trace("engine")
+            return superstep_loop_chain(stages, geom, grid, coeffs, iters,
+                                        aux)
+    else:
+        from repro.core.engine import superstep_loop
+        st, bc = problem.exec_stages[0]
+
+        def body(grid, coeffs, iters, aux):
+            _note_trace("engine")
+            return superstep_loop(st, geom, grid, coeffs, iters, aux, bc=bc)
 
     return _vmapped_program("engine", problem, config, geom, body)
 
 
 def _make_pallas_backend(force_interpret: bool):
     def factory(problem, config, geom):
-        from repro.kernels.ops import (fused_superstep_loop, pack_coeffs,
+        from repro.kernels.ops import (fused_chain_loop, fused_superstep_loop,
+                                       pack_coeffs, pack_program_coeffs,
                                        _pad_blocked)
         # plan-time validation (satellite bugfix): fail before any execute,
         # and say what IS supported
@@ -294,8 +310,7 @@ def _make_pallas_backend(force_interpret: bool):
                 f"{list(PALLAS_SUPPORTED_DTYPES)}; "
                 f"got problem.dtype={problem.dtype!r} — use the 'engine' or "
                 f"'reference' backend for other dtypes")
-        st = problem.stencil
-        bc = problem.bc
+        bc = problem.structural_bc   # sizes padding + the stream extension
         interpret = force_interpret or config.interpret
         tag = "pallas_interpret" if interpret else "pallas"
         get = _program_cache(config.exec_cache)
@@ -305,12 +320,31 @@ def _make_pallas_backend(force_interpret: bool):
         mc = config.block_parallel
         extra = ("donate", donate, "mc", mc)
 
+        if problem.n_stages > 1:
+            stages = problem.exec_stages
+
+            def run_loop(gp, coeffs_packed, iters, aux_p):
+                return fused_chain_loop(stages, geom, gp, coeffs_packed,
+                                        iters, aux_p, interpret,
+                                        block_parallel=mc)
+
+            def pack(coeffs):
+                return pack_program_coeffs(stages, coeffs)
+        else:
+            st, bc1 = problem.exec_stages[0]
+
+            def run_loop(gp, coeffs_packed, iters, aux_p):
+                return fused_superstep_loop(st, geom, gp, coeffs_packed,
+                                            iters, aux_p, interpret, bc1,
+                                            block_parallel=mc)
+
+            def pack(coeffs):
+                return pack_coeffs(st, coeffs)
+
         def loop_body(gp, coeffs_packed, iters, aux_p):
             # gp is the backend-owned padded carry: safe to donate
             _note_trace(tag)
-            return fused_superstep_loop(st, geom, gp, coeffs_packed, iters,
-                                        aux_p, interpret, bc,
-                                        block_parallel=mc)
+            return run_loop(gp, coeffs_packed, iters, aux_p)
 
         def build_single():
             return jax.jit(loop_body,
@@ -322,7 +356,7 @@ def _make_pallas_backend(force_interpret: bool):
         def execute(grid, coeffs, iters, aux=None):
             gp = _pad_blocked(grid, geom, bc)
             aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
-            return single(gp, pack_coeffs(st, coeffs),
+            return single(gp, pack(coeffs),
                           jnp.asarray(iters, jnp.int32), aux_p)
 
         def build_batch(mode):
@@ -334,14 +368,11 @@ def _make_pallas_backend(force_interpret: bool):
                 _note_trace(tag)
                 if mode == "batched":
                     return jax.lax.map(
-                        lambda ga: fused_superstep_loop(
-                            st, geom, ga[0], coeffs_packed, iters, ga[1],
-                            interpret, bc, block_parallel=mc),
+                        lambda ga: run_loop(ga[0], coeffs_packed, iters,
+                                            ga[1]),
                         (gps, aux_p))
                 return jax.lax.map(
-                    lambda g: fused_superstep_loop(
-                        st, geom, g, coeffs_packed, iters, aux_p, interpret,
-                        bc, block_parallel=mc),
+                    lambda g: run_loop(g, coeffs_packed, iters, aux_p),
                     gps)
             return jax.jit(batched, donate_argnums=(0,) if donate else ())
 
@@ -352,7 +383,7 @@ def _make_pallas_backend(force_interpret: bool):
             fn = get(key, lambda: build_batch(mode))
             gps = _pad_blocked(grids, geom, bc)
             aux_p = _pad_blocked(aux, geom, bc) if aux is not None else None
-            return fn(gps, pack_coeffs(st, coeffs),
+            return fn(gps, pack(coeffs),
                       jnp.asarray(iters, jnp.int32), aux_p)
 
         return BackendProgram(execute, execute_batch)
@@ -396,7 +427,9 @@ def _distributed_backend(problem, config, geom):
         return build_distributed_fn(
             st, problem.shape, None, par_time, bsize, mesh, axis_map,
             batch=batch, aux_batched=aux_batched,
-            trace_hook=lambda: _note_trace("distributed"), bc=problem.bc)
+            trace_hook=lambda: _note_trace("distributed"),
+            bc=problem.structural_bc,
+            stages=problem.exec_stages if problem.n_stages > 1 else None)
 
     def execute(grid, coeffs, iters, aux=None):
         # built lazily on first call (not at plan time): plan() must stay

@@ -23,7 +23,6 @@ from repro.api.problem import StencilProblem
 from repro.core import perf_model
 from repro.core.blocking import (BlockGeometry, extended_geometry,
                                  superstep_traffic_bytes)
-from repro.core.stencils import default_coeffs
 from repro.core.perf_model import Device, Prediction
 
 
@@ -74,7 +73,7 @@ def _candidate_shortlist(problem: StencilProblem, config: RunConfig,
         par_time=config.par_time,
         bsize=config.normalized_bsize(problem.ndim),
         par_vec=par_vec, top_k=top_k,
-        bc=problem.bc)
+        bc=problem.structural_bc)
     if not cands:
         raise ValueError(
             f"no VMEM-feasible (bsize, par_time, par_vec) for "
@@ -131,7 +130,7 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
                 pred = perf_model.predict(
                     problem.stencil, problem.shape, config.iters_hint, bsize,
                     par_time, device, config.cell_bytes, n_chips, chip_grid,
-                    bc=problem.bc, par_vec=par_vec)
+                    bc=problem.structural_bc, par_vec=par_vec)
             except (KeyError, TypeError, ValueError):
                 entry = None
             else:
@@ -236,14 +235,17 @@ class StencilPlan:
     tuned_from_cache: bool = False
 
     # --- execution ----------------------------------------------------------
-    def run(self, grid, iters: int, coeffs: Optional[dict] = None, *,
+    def run(self, grid, iters: int, coeffs=None, *,
             aux=None) -> jnp.ndarray:
-        """Advance ``grid`` by ``iters`` time-steps.
+        """Advance ``grid`` by ``iters`` time-steps (program iterations —
+        each applies every stage in order).
 
-        ``coeffs`` defaults to :func:`~repro.core.stencils.default_coeffs`;
-        ``aux`` is the Hotspot ``power`` grid (required iff the stencil has
-        an aux stream).  The plan is reusable: call ``run`` any number of
-        times, with any ``iters``."""
+        ``coeffs`` defaults to :func:`~repro.core.stencils.default_coeffs`
+        overlaid with any per-stage overrides; pass a dict (single-stage
+        problems) or a sequence of per-stage dicts/None (programs) to
+        override at run time.  ``aux`` is the Hotspot ``power`` grid
+        (required iff any stage has an aux stream).  The plan is reusable:
+        call ``run`` any number of times, with any ``iters``."""
         grid = jnp.asarray(grid, self.problem.jnp_dtype)
         if tuple(grid.shape) != self.problem.shape:
             raise ValueError(f"grid shape {grid.shape} != problem shape "
@@ -251,9 +253,7 @@ class StencilPlan:
         iters = int(iters)
         if iters < 0:
             raise ValueError(f"iters must be >= 0, got {iters}")
-        if coeffs is None:
-            coeffs = default_coeffs(self.problem.stencil,
-                                    self.problem.jnp_dtype)
+        coeffs = self._coeff_payload(coeffs)
         if self.problem.needs_aux:
             if aux is None:
                 raise ValueError(f"{self.problem.stencil.name} needs an aux "
@@ -268,7 +268,15 @@ class StencilPlan:
             return grid
         return self._execute(grid, coeffs, iters, aux)
 
-    def run_batch(self, grids, iters: int, coeffs: Optional[dict] = None, *,
+    def _coeff_payload(self, coeffs):
+        """Resolve run-time coefficients into the backend payload: a plain
+        dict for single-stage problems (the legacy custom-backend contract),
+        a tuple of per-stage dicts for programs."""
+        resolved = self.problem.resolve_coeffs(coeffs,
+                                               dtype=self.problem.jnp_dtype)
+        return resolved[0] if self.problem.n_stages == 1 else resolved
+
+    def run_batch(self, grids, iters: int, coeffs=None, *,
                   aux=None) -> jnp.ndarray:
         """Advance a batch of grids ``(B, *shape)`` by ``iters`` time-steps
         through ONE compiled executable (the serving path).
@@ -295,9 +303,7 @@ class StencilPlan:
         iters = int(iters)
         if iters < 0:
             raise ValueError(f"iters must be >= 0, got {iters}")
-        if coeffs is None:
-            coeffs = default_coeffs(self.problem.stencil,
-                                    self.problem.jnp_dtype)
+        coeffs = self._coeff_payload(coeffs)
         if self.problem.needs_aux:
             if aux is None:
                 raise ValueError(f"{self.problem.stencil.name} needs an aux "
@@ -334,7 +340,7 @@ class StencilPlan:
             iters if iters is not None else self.config.iters_hint,
             geom.bsize, geom.par_time, device or self.device,
             self.config.cell_bytes, self.n_chips, self.chip_grid,
-            batch=batch, bc=self.problem.bc, par_vec=geom.par_vec)
+            batch=batch, bc=self.problem.structural_bc, par_vec=geom.par_vec)
 
     def traffic_report(self, iters: Optional[int] = None) -> dict:
         """Model traffic (paper Eq. 7/8) vs. the Pallas kernels' exact DMA
@@ -343,7 +349,7 @@ class StencilPlan:
         geom = self._require_geometry("traffic_report()")
         st = self.problem.stencil
         cb = self.config.cell_bytes
-        bc = self.problem.bc
+        bc = self.problem.structural_bc
         # a periodic streaming axis is billed on the extended stream the
         # kernels actually move (the materialized wrap), matching predict()
         geom_t = extended_geometry(geom, bc)
@@ -355,8 +361,24 @@ class StencilPlan:
             "traffic_accuracy": model / kernel,
             "redundancy": geom.redundancy,
             "par_vec": geom.par_vec,
-            "vmem_bytes": geom.vmem_bytes(cb, st.has_aux),
+            "vmem_bytes": geom.vmem_bytes(
+                cb, st.has_aux,
+                stage_radii=getattr(st, "stage_radii", None)),
         }
+        n_stages = self.problem.n_stages
+        if n_stages > 1:
+            # fusion accounting: the chained stages' intermediates live only
+            # in the rolling VMEM windows — zero HBM round-trip bytes —
+            # where S sequential single-stage plans would write and re-read
+            # every intermediate once per program iteration
+            cells = math.prod(self.problem.shape)
+            report["stages"] = [
+                {"name": s.name, "radius": s.stencil.radius,
+                 "flop_pcu": s.stencil.flop_pcu, "bc": s.boundary.token()}
+                for s in self.problem.stages]
+            report["intermediate_hbm_bytes_per_superstep"] = 0
+            report["unfused_intermediate_bytes_per_superstep"] = (
+                2 * (n_stages - 1) * cells * cb * geom.par_time)
         if iters is not None:
             n_super = math.ceil(iters / geom.par_time)
             report["n_super"] = n_super
@@ -369,6 +391,11 @@ class StencilPlan:
         lines = [f"StencilPlan[{self.backend}] {st.name} "
                  f"{self.problem.shape} {self.problem.dtype} "
                  f"bc={self.problem.bc.token()}"]
+        if self.problem.n_stages > 1:
+            for i, s in enumerate(self.problem.stages):
+                lines.append(f"  stage {i}: {s.name} rad={s.stencil.radius} "
+                             f"flop_pcu={s.stencil.flop_pcu} "
+                             f"bc={s.boundary.token()}")
         if self.geometry is not None:
             g = self.geometry
             lines.append(f"  schedule: bsize={g.bsize} par_time={g.par_time} "

@@ -8,12 +8,13 @@ produce an executable :class:`~repro.api.plan.StencilPlan`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
 from repro.core.boundary import BCSpec, BoundaryCondition
-from repro.core.stencils import STENCILS, Stencil
+from repro.core.stencils import STENCILS, Stencil, default_coeffs
+from repro.programs import StencilProgram, StencilStage
 
 #: Supported boundary-condition kinds (per axis, mixable).  The paper (§5.1)
 #: clamps every out-of-bound neighbor to the boundary cell (edge
@@ -29,8 +30,18 @@ class StencilProblem:
     Parameters
     ----------
     stencil:
-        A :class:`~repro.core.stencils.Stencil` or the name of one of the
-        registered paper stencils (``"diffusion2d"``, ``"hotspot3d"``, ...).
+        A :class:`~repro.core.stencils.Stencil`, the name of one of the
+        registered paper stencils (``"diffusion2d"``, ``"hotspot3d"``, ...),
+        or a multi-stage program: a
+        :class:`~repro.programs.StencilProgram`, a
+        :class:`~repro.programs.StencilStage`, or a sequence of
+        stage-likes.  A program's stages run in order each iteration; the
+        fused backends keep every intermediate on-chip.  For a single plain
+        stage this field normalizes to the bare ``Stencil`` (legacy
+        behavior); for programs it holds the resolved
+        ``StencilProgram``, which duck-types the ``Stencil`` bookkeeping
+        (``radius`` = sum of stage radii, etc.).  :attr:`program` always
+        exposes the resolved program form.
     shape:
         Grid extents, streaming axis first (``(ny, nx)`` / ``(nz, ny, nx)``).
     dtype:
@@ -47,7 +58,7 @@ class StencilProblem:
         Auxiliary-input spec: ``None`` inherits ``stencil.has_aux`` (Hotspot's
         ``power`` grid); an explicit bool must agree with the stencil.
     """
-    stencil: Union[Stencil, str]
+    stencil: Union[Stencil, str, StencilProgram, StencilStage, Sequence]
     shape: Tuple[int, ...]
     dtype: str = "float32"
     boundary: BCSpec = "clamp"
@@ -60,7 +71,9 @@ class StencilProblem:
                 raise ValueError(f"unknown stencil {st!r}; "
                                  f"registered: {sorted(STENCILS)}")
             st = STENCILS[st]
-            object.__setattr__(self, "stencil", st)
+        elif not isinstance(st, Stencil):
+            # program forms: StencilProgram | StencilStage | sequence
+            st = StencilProgram.make(st)
         shape = tuple(int(d) for d in self.shape)
         object.__setattr__(self, "shape", shape)
         if len(shape) != st.ndim:
@@ -70,6 +83,21 @@ class StencilProblem:
         bc = BoundaryCondition.make(self.boundary, st.ndim)
         bc.validate_shape(shape)
         object.__setattr__(self, "boundary", bc)
+        if isinstance(st, StencilProgram):
+            # resolve per-stage BCs against the problem default + shape
+            program = st.resolved(bc, shape)
+            if (len(program) == 1 and program.stages[0].coeffs is None
+                    and program.stages[0].boundary == bc):
+                # a plain single stage IS the legacy problem — normalize
+                # `stencil` back to the bare Stencil (exact old behavior,
+                # cache keys included)
+                st = program.stages[0].stencil
+            else:
+                st = program
+        else:
+            program = StencilProgram((StencilStage(st, boundary=bc),))
+        object.__setattr__(self, "stencil", st)
+        object.__setattr__(self, "_program", program)
         object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
         if self.aux is not None and bool(self.aux) != st.has_aux:
             raise ValueError(
@@ -78,8 +106,81 @@ class StencilProblem:
 
     @property
     def bc(self) -> BoundaryCondition:
-        """The normalized per-axis boundary condition."""
+        """The normalized per-axis boundary condition (the problem-level
+        default; stages may override the local kinds — see
+        :attr:`structural_bc`)."""
         return self.boundary
+
+    @property
+    def program(self) -> StencilProgram:
+        """The resolved program form: every problem is a (possibly
+        single-stage) chain with per-stage ``BoundaryCondition``s."""
+        return self._program
+
+    @property
+    def stages(self) -> Tuple[StencilStage, ...]:
+        return self._program.stages
+
+    @property
+    def n_stages(self) -> int:
+        return len(self._program)
+
+    @property
+    def is_program(self) -> bool:
+        """True when the problem carries more than the legacy bare stencil:
+        multiple stages, or a single stage with coeff/BC overrides."""
+        return isinstance(self.stencil, StencilProgram)
+
+    @property
+    def exec_stages(self) -> Tuple[Tuple[Stencil, BoundaryCondition], ...]:
+        """The static ``((stencil, bc), ...)`` tuple the chain executors
+        (engine / kernel builder / oracle) take."""
+        return tuple((s.stencil, s.boundary) for s in self.stages)
+
+    @property
+    def structural_bc(self) -> BoundaryCondition:
+        """Stage 0's BC — what sizes padding, the periodic stream extension
+        and the halo exchange (per-axis periodicity is uniform across
+        stages; equals :attr:`bc` for non-program problems)."""
+        return self.stages[0].boundary
+
+    def resolve_coeffs(self, coeffs=None, dtype=None) -> Tuple[dict, ...]:
+        """Per-stage coefficient dicts: stencil defaults, overlaid with each
+        stage's static overrides, overlaid with run-time ``coeffs`` —
+        a single dict (applied to the only stage) for single-stage problems,
+        or a sequence of per-stage dicts/None for programs.  Unknown names
+        are rejected."""
+        if coeffs is None:
+            per_stage = (None,) * self.n_stages
+        elif isinstance(coeffs, dict):
+            if self.n_stages > 1:
+                raise ValueError(
+                    f"{self.stencil.name} has {self.n_stages} stages: pass "
+                    "coeffs as a sequence of per-stage dicts (None entries "
+                    "keep that stage's defaults), not a single dict")
+            per_stage = (coeffs,)
+        else:
+            per_stage = tuple(coeffs)
+            if len(per_stage) != self.n_stages:
+                raise ValueError(
+                    f"got {len(per_stage)} coefficient dicts for "
+                    f"{self.n_stages} stages")
+        out = []
+        for stage, run_c in zip(self.stages, per_stage):
+            merged = dict(default_coeffs(stage.stencil, dtype)
+                          if dtype is not None
+                          else default_coeffs(stage.stencil))
+            if stage.coeffs:
+                merged.update(stage.coeffs)
+            if run_c:
+                unknown = [k for k in run_c if k not in merged]
+                if unknown:
+                    raise ValueError(
+                        f"unknown coefficients {unknown} for stage "
+                        f"{stage.name} (has {list(stage.stencil.coeff_names)})")
+                merged.update(run_c)
+            out.append(merged)
+        return tuple(out)
 
     @property
     def ndim(self) -> int:

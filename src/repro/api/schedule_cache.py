@@ -44,10 +44,11 @@ def code_version_salt() -> str:
     """Content hash of the sources that determine a schedule's performance."""
     global _salt_cache
     if _salt_cache is None:
+        from repro import programs
         from repro.core import blocking, engine, stencils
-        from repro.kernels import ops, stencil2d, stencil3d
+        from repro.kernels import builder, ops
         h = hashlib.sha1()
-        for mod in (blocking, engine, stencils, ops, stencil2d, stencil3d):
+        for mod in (blocking, engine, stencils, ops, builder, programs):
             with open(mod.__file__, "rb") as f:
                 h.update(f.read())
         _salt_cache = h.hexdigest()[:12]
@@ -67,7 +68,20 @@ def stencil_fingerprint(st) -> str:
     user-defined stencils, whose ``apply`` can change under the same name.
 
     Shared by the persistent schedule cache (this module) and the
-    process-level executable cache (``repro.api.backends``)."""
+    process-level executable cache (``repro.api.backends``).
+
+    A multi-stage :class:`~repro.programs.StencilProgram` fingerprints as
+    the ordered chain of its stages — each stage's stencil fingerprint plus
+    its static coefficient overrides and per-stage BC — so two programs
+    collide only when they compute the same thing."""
+    if hasattr(st, "stages"):    # StencilProgram
+        h = hashlib.sha1()
+        for s in st.stages:
+            btok = (s.boundary.token() if hasattr(s.boundary, "token")
+                    else repr(s.boundary))
+            h.update(stencil_fingerprint(s.stencil).encode())
+            h.update(repr((s.name, s.coeffs, btok)).encode())
+        return h.hexdigest()[:8]
     h = hashlib.sha1()
     h.update(repr((st.ndim, st.radius, st.flop_pcu, st.num_read,
                    st.num_write, st.has_aux, st.coeff_names,

@@ -34,7 +34,6 @@ from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
 from repro.core import perf_model
 from repro.core.perf_model import Prediction
-from repro.core.stencils import default_coeffs
 from repro.data import make_stencil_inputs
 
 
@@ -98,7 +97,10 @@ def measure_candidates(problem: StencilProblem, config: RunConfig,
                        ) -> Tuple[TunedCandidate, ...]:
     """Time every candidate; return them ranked by amortized per-iteration
     measured time (steady-state fastest first)."""
-    coeffs = default_coeffs(problem.stencil, problem.jnp_dtype)
+    # the exact payload shape the backends take: one dict for single-stage
+    # problems, a tuple of per-stage dicts for programs
+    resolved = problem.resolve_coeffs(dtype=problem.jnp_dtype)
+    coeffs = resolved[0] if problem.n_stages == 1 else resolved
     grid, aux = make_stencil_inputs(jax.random.PRNGKey(0), problem.shape,
                                     problem.needs_aux)
     grid = grid.astype(problem.jnp_dtype)

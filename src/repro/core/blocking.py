@@ -42,7 +42,7 @@ SUBLANE = 8
 @dataclasses.dataclass(frozen=True)
 class BlockGeometry:
     """Static description of one combined spatial/temporal blocking plan."""
-    ndim: int                      # grid rank (2 or 3)
+    ndim: int                      # grid rank (1, 2 or 3; streaming axis 0)
     dims: Tuple[int, ...]          # grid extents, streaming axis first
     rad: int
     par_time: int                  # fused time-steps per HBM round-trip
@@ -143,7 +143,8 @@ class BlockGeometry:
 
     # --- VMEM working set of the streaming kernels (bytes) ------------------
     def vmem_bytes(self, cell_bytes: int = 4, has_aux: bool = False,
-                   double_buffer: bool = True) -> int:
+                   double_buffer: bool = True,
+                   stage_radii: Sequence[int] | None = None) -> int:
         """Rolling-window footprint of the Pallas kernel for this geometry,
         **as Mosaic tiles it**: the second-to-last dim of every VMEM buffer
         is padded to a multiple of 8 sublanes (f32 (8, 128) tiling), so a
@@ -154,22 +155,38 @@ class BlockGeometry:
         real row.  Counting it here keeps autotune's VMEM feasibility filter
         from admitting candidates that OOM on hardware.
 
-        Per temporal stage: a ``win_slots`` slab window of ``par_vec``
-        rows/planes (2D) each; plus double-buffered input/output DMA slabs
-        and, for Hotspot, an aux (power) window deep enough to feed the last
-        stage (``slab_lag * par_time + 1`` slabs).
+        Per chain entry (program stage × temporal stage): a slab window of
+        ``2*ceil(r_i/V) + 1`` slots of ``par_vec`` rows/planes each, sized
+        for *that* entry's radius; plus double-buffered input/output DMA
+        slabs and, for Hotspot, an aux (power) window deep enough to feed
+        the last entry (``Lag_total + 1`` slabs).  ``stage_radii`` prices a
+        multi-stage :class:`~repro.programs.StencilProgram`'s heterogeneous
+        chain; ``None`` is the classic single-operator chain (``rad`` per
+        entry).
         """
         V = self.par_vec
         db = 2 if double_buffer else 1
-        aux_slabs = self.slab_lag * self.par_time + 1
+        radii = tuple(stage_radii) if stage_radii else (self.rad,)
+        lags = [-(-r // V) for r in radii]          # per program stage
+        slots = [2 * lg + 1 for lg in lags]
+        aux_slabs = sum(lags) * self.par_time + 1   # Lag_total + 1
 
         def pad8(n: int) -> int:
             return -(-n // SUBLANE) * SUBLANE
 
-        if self.ndim == 2:
+        def padl(n: int) -> int:
+            return -(-n // LANE) * LANE
+
+        if self.ndim == 1:
+            # 1-D buffers: the stream rows are the lane dim
+            win = self.par_time * sum(padl(w * V) for w in slots)
+            stream = db * padl(V)
+            out = db * padl(V)
+            aux = (padl(aux_slabs * V) + stream) if has_aux else 0
+        elif self.ndim == 2:
             # stream rows are the sublane dim of every buffer
             bx = self.bsize[0]
-            win = self.par_time * pad8(self.win_slots * V) * bx
+            win = self.par_time * sum(pad8(w * V) for w in slots) * bx
             stream = db * pad8(V) * bx
             out = db * pad8(V) * self.csize[0]
             # aux = rolling window + its own DMA landing double buffer
@@ -177,7 +194,7 @@ class BlockGeometry:
         else:
             # the blocked y extent is the sublane dim; V planes stack above
             plane = pad8(self.bsize[0]) * self.bsize[1]
-            win = self.par_time * self.win_slots * V * plane
+            win = self.par_time * sum(slots) * V * plane
             stream = db * V * plane
             out = db * V * pad8(self.csize[0]) * self.csize[1]
             aux = (aux_slabs * V * plane + stream) if has_aux else 0
@@ -228,6 +245,8 @@ def choose_bsize_candidates(ndim: int, dims: Sequence[int], rad: int = 1,
     depth (see :func:`bsize_feasible`) are dropped; the result may be empty
     — callers autotuning a small grid must handle that, not crash."""
     out = []
+    if ndim == 1:
+        return [()]                  # stream-only: nothing to block
     if ndim == 2:
         b = LANE * 2
         while b <= max(2 * LANE, min(dims[1], 1 << 14)):

@@ -41,7 +41,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.blocking import BlockGeometry
-from repro.core.engine import blocked_superstep
+from repro.core.engine import blocked_superstep, blocked_superstep_chain
 from repro.core.stencils import Stencil
 
 
@@ -145,7 +145,7 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
                          axis_map: Sequence[Optional[Tuple[str, ...]]],
                          kernel_stub: bool = False, *,
                          batch: bool = False, aux_batched: bool = False,
-                         trace_hook=None, bc=None):
+                         trace_hook=None, bc=None, stages=None):
     """Build the jitted multi-device runner ``fn(grid, aux, coeffs) -> grid``.
 
     Used both for real execution (tests/examples) and for the dry-run
@@ -176,6 +176,14 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
         halos on a wrap-around ring and are *localized* to no-op bounds (a
         shard never sees a physical edge there); every other kind keeps its
         rule and ``bounds`` distinguishes internal from physical edges.
+      * ``stages`` (multi-stage programs — see ``repro.programs``): the
+        static ``((stencil, bc), ...)`` chain.  The halo width becomes
+        ``sum(stage radii) * par_time`` (one exchange still covers the whole
+        fused chain per super-step), each stage's BC is localized per the
+        rule above (per-axis periodicity is uniform across stages, so the
+        ring topology is well-defined), and each shard runs the fused
+        chain super-step locally.  ``coeffs`` then is one dict per stage;
+        ``bc`` must be the program's structural (stage-0) BC.
     """
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
@@ -192,14 +200,30 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
         for names, kind in zip(axis_map, kinds))
     bc_local = None if bc is None else dataclasses.replace(
         bc, kinds=local_kinds)
-    h = stencil.radius * par_time
+    if stages is not None:
+        if kernel_stub:
+            raise NotImplementedError(
+                "kernel_stub supports single-stage problems only")
+        rad = sum(st.radius for st, _ in stages)
+        has_aux = any(st.has_aux for st, _ in stages)
+        # localize every stage's BC the same way (sharded periodic axes
+        # degrade to clamp under no-op bounds — the wrapped halo is exact)
+        local_stages = tuple(
+            (st, dataclasses.replace(bc_s, kinds=tuple(
+                "clamp" if (names and k == "periodic") else k
+                for names, k in zip(axis_map, bc_s.kinds))))
+            for st, bc_s in stages)
+    else:
+        rad = stencil.radius
+        has_aux = stencil.has_aux
+        local_stages = None
+    h = rad * par_time
     local_dims = shard_extents(dims, axis_map, mesh)
     ext_dims = tuple(ld + (2 * h if names else 0)
                      for ld, names in zip(local_dims, axis_map))
-    geom = BlockGeometry(len(dims), ext_dims, stencil.radius, par_time,
+    geom = BlockGeometry(len(dims), ext_dims, rad, par_time,
                          tuple(bsize))
     spec = partition_spec(axis_map)
-    has_aux = stencil.has_aux
     if kernel_stub and batch:
         raise NotImplementedError("kernel_stub has no batched variant")
     # leading batch axis is never sharded; grid axes shift right by one
@@ -245,18 +269,20 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
                 return _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
                                        steps, aux_ext if has_aux else None,
                                        bounds, bc_local)
+            if local_stages is not None:
+                def step_local(e, a):
+                    return blocked_superstep_chain(local_stages, geom, e,
+                                                   coeffs_l, steps, a, bounds)
+            else:
+                def step_local(e, a):
+                    return blocked_superstep(stencil, geom, e, coeffs_l,
+                                             steps, a, bounds, bc_local)
             if batch:
                 aux_ax = (0 if aux_batched else None) if has_aux else None
-                upd = jax.vmap(
-                    lambda e, a: blocked_superstep(stencil, geom, e, coeffs_l,
-                                                   steps, a, bounds,
-                                                   bc_local),
-                    in_axes=(0, aux_ax))(ext,
-                                         aux_ext if has_aux else None)
+                upd = jax.vmap(step_local, in_axes=(0, aux_ax))(
+                    ext, aux_ext if has_aux else None)
             else:
-                upd = blocked_superstep(stencil, geom, ext, coeffs_l, steps,
-                                        aux_ext if has_aux else None, bounds,
-                                        bc_local)
+                upd = step_local(ext, aux_ext if has_aux else None)
             return upd[keep]
 
         def superstep(s, gl):

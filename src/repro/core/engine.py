@@ -58,29 +58,32 @@ def _block_index(geom: BlockGeometry, dim_i: int) -> jnp.ndarray:
 
 def extract_blocks(grid: jnp.ndarray, geom: BlockGeometry,
                    bc=None) -> jnp.ndarray:
-    """-> (num_blocks..., stream_dim, *bsize) overlapped blocks."""
+    """-> (num_blocks..., stream_dim, *bsize) overlapped blocks, any rank
+    (1D: the whole stream is the single 'block')."""
     gp = _pad_blocked_dims(grid, geom, bc)
-    if geom.ndim == 2:
-        blk = jnp.take(gp, _block_index(geom, 0), axis=1)   # (ny, bnx, bsx)
-        return jnp.moveaxis(blk, 1, 0)                      # (bnx, ny, bsx)
-    blk = jnp.take(gp, _block_index(geom, 0), axis=1)       # (nz, bny, bsy, nxp)
-    blk = jnp.take(blk, _block_index(geom, 1), axis=3)      # (nz, bny, bsy, bnx, bsx)
-    return jnp.transpose(blk, (1, 3, 0, 2, 4))              # (bny, bnx, nz, bsy, bsx)
+    nb = geom.ndim - 1
+    for i in range(nb):
+        # blocked dim i sits at axis 1 + 2*i once earlier dims are expanded
+        gp = jnp.take(gp, _block_index(geom, i), axis=1 + 2 * i)
+    # (stream, bn0, bs0, bn1, bs1, ..) -> (bn0, bn1, .., stream, bs0, bs1, ..)
+    perm = (tuple(1 + 2 * i for i in range(nb)) + (0,)
+            + tuple(2 + 2 * i for i in range(nb)))
+    return jnp.transpose(gp, perm)
 
 
 def stitch_blocks(blocks: jnp.ndarray, geom: BlockGeometry) -> jnp.ndarray:
     """Write-back: keep each block's compute region, discard halos and
     out-of-bound columns (paper's masked writes)."""
     h = geom.size_halo
-    if geom.ndim == 2:
-        comp = blocks[:, :, h:h + geom.csize[0]]             # (bnx, ny, csx)
-        out = jnp.moveaxis(comp, 0, 1).reshape(blocks.shape[1], -1)
-        return out[:, :geom.blocked_dims[0]]
-    csy, csx = geom.csize
-    comp = blocks[:, :, :, h:h + csy, h:h + csx]             # (bny,bnx,nz,csy,csx)
-    bny, bnx, nz = comp.shape[:3]
-    out = jnp.transpose(comp, (2, 0, 3, 1, 4)).reshape(nz, bny * csy, bnx * csx)
-    return out[:, :geom.blocked_dims[0], :geom.blocked_dims[1]]
+    nb = geom.ndim - 1
+    comp = blocks[(slice(None),) * (nb + 1)
+                  + tuple(slice(h, h + c) for c in geom.csize)]
+    # (bn0, .., stream, cs0, ..) -> (stream, bn0, cs0, bn1, cs1, ..)
+    perm = (nb,) + tuple(x for i in range(nb) for x in (i, nb + 1 + i))
+    out = jnp.transpose(comp, perm).reshape(
+        (blocks.shape[nb],) + tuple(n * c
+                                    for n, c in zip(geom.bnum, geom.csize)))
+    return out[(slice(None),) + tuple(slice(0, d) for d in geom.blocked_dims)]
 
 
 def _mask_fill(arr: jnp.ndarray, mask1d: jnp.ndarray, axis: int,
@@ -155,60 +158,91 @@ def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
     return stencil.apply(get, coeffs, aux_block)
 
 
-@partial(jax.jit, static_argnames=("stencil", "geom", "bc"))
+@partial(jax.jit, static_argnames=("stages", "geom"))
+def blocked_superstep_chain(stages, geom: BlockGeometry, grid: jnp.ndarray,
+                            stage_coeffs, steps,
+                            aux: jnp.ndarray | None = None,
+                            bounds=None) -> jnp.ndarray:
+    """Apply ``steps`` (<= par_time) fused *program iterations* — each one
+    the whole stage chain, in order — via one HBM round-trip worth of
+    overlapped blocks.
+
+    ``stages`` is the static ``((stencil, bc), ...)`` tuple (S=1 recovers
+    :func:`blocked_superstep` exactly); ``stage_coeffs`` one coefficient dict
+    per stage.  Block extraction pads under stage 0's BC (the BC the chain's
+    first read sees; periodicity is uniform across stages by construction)
+    and each stage re-imposes its own BC before it reads.  ``steps`` may be
+    a traced scalar; ``bounds`` is the optional per-axis physical-edge range
+    (see ``_reclamp``)."""
+    bc0 = stages[0][1]
+    has_aux = any(st.has_aux for st, _ in stages)
+    blocks = extract_blocks(grid, geom, bc0)
+    aux_blocks = extract_blocks(aux, geom, bc0) if has_aux else None
+    nb = geom.ndim - 1
+
+    def one_block(block, aux_block, *bidx):
+        def substep(t, blk):
+            cur = blk
+            for (st, bc_s), cf in zip(stages, stage_coeffs):
+                rec = _reclamp(cur, bidx, geom, bounds, bc_s)
+                new = _block_substep(st, rec, cf,
+                                     aux_block if st.has_aux else None, bc_s)
+                cur = jnp.where(t < steps, new, rec)   # PE forwarding
+            return cur
+        return jax.lax.fori_loop(0, geom.par_time, substep, block)
+
+    aux_ax = 0 if aux_blocks is not None else None
+    fn = one_block
+    for i in range(nb - 1, -1, -1):
+        fn = jax.vmap(fn, in_axes=(0, aux_ax)
+                      + tuple(0 if j == i else None for j in range(nb)))
+    upd = fn(blocks, aux_blocks,
+             *(jnp.arange(geom.bnum[j]) for j in range(nb)))
+    return stitch_blocks(upd, geom)
+
+
 def blocked_superstep(stencil: Stencil, geom: BlockGeometry,
                       grid: jnp.ndarray, coeffs: dict, steps,
                       aux: jnp.ndarray | None = None,
                       bounds=None, bc=None) -> jnp.ndarray:
-    """Apply ``steps`` (<= par_time) fused time-steps via one HBM round-trip
-    worth of overlapped blocks. ``steps`` may be a traced scalar; ``bounds``
-    is the optional per-axis physical-edge range and ``bc`` the per-axis
-    boundary condition (None = the paper's clamp; see ``_reclamp``)."""
-    blocks = extract_blocks(grid, geom, bc)
-    aux_blocks = extract_blocks(aux, geom, bc) if stencil.has_aux else None
-
-    def one_block(block, aux_block, *bidx):
-        def substep(t, blk):
-            blk = _reclamp(blk, bidx, geom, bounds, bc)
-            new = _block_substep(stencil, blk, coeffs, aux_block, bc)
-            return jnp.where(t < steps, new, blk)   # PE forwarding
-        return jax.lax.fori_loop(0, geom.par_time, substep, block)
-
-    aux_ax = 0 if aux_blocks is not None else None
-    if geom.ndim == 2:
-        upd = jax.vmap(one_block, in_axes=(0, aux_ax, 0))(
-            blocks, aux_blocks, jnp.arange(geom.bnum[0]))
-    else:
-        inner = jax.vmap(one_block, in_axes=(0, aux_ax, None, 0))
-        upd = jax.vmap(inner, in_axes=(0, aux_ax, 0, None))(
-            blocks, aux_blocks, jnp.arange(geom.bnum[0]),
-            jnp.arange(geom.bnum[1]))
-    return stitch_blocks(upd, geom)
+    """Single-operator special case of :func:`blocked_superstep_chain`
+    (legacy entry point, semantics unchanged)."""
+    return blocked_superstep_chain(((stencil, bc),), geom, grid, (coeffs,),
+                                   steps, aux, bounds)
 
 
-def superstep_loop(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
-                   coeffs: dict, iters, aux: jnp.ndarray | None = None,
-                   bounds=None, bc=None) -> jnp.ndarray:
-    """Fused whole-run driver: ``ceil(iters/par_time)`` super-steps as one
-    traced loop (paper Eq. 8 numerator), so an enclosing ``jit`` lowers the
-    entire iteration count to a single dispatch.
+def superstep_loop_chain(stages, geom: BlockGeometry, grid: jnp.ndarray,
+                         stage_coeffs, iters, aux: jnp.ndarray | None = None,
+                         bounds=None) -> jnp.ndarray:
+    """Fused whole-run driver for a stage chain: ``ceil(iters/par_time)``
+    super-steps as one traced loop (paper Eq. 8 numerator), so an enclosing
+    ``jit`` lowers the entire iteration count to a single dispatch.
 
     ``iters`` may be a *traced* scalar: the trip count is computed inside the
     trace and the loop lowers to a dynamic ``while``, so one compiled
     executable serves every iteration count — a serving process never
     re-traces because a request asked for a different ``iters``.  Trailing
-    sub-steps of a partial final super-step are PE-forwarded (paper §3.2)
-    exactly as in :func:`blocked_superstep`.
+    iterations of a partial final super-step are PE-forwarded (paper §3.2)
+    exactly as in :func:`blocked_superstep_chain`.
     """
     par_time = geom.par_time
     n_super = (iters + par_time - 1) // par_time
 
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
-        return blocked_superstep(stencil, geom, g, coeffs, steps, aux,
-                                 bounds, bc)
+        return blocked_superstep_chain(stages, geom, g, stage_coeffs, steps,
+                                       aux, bounds)
 
     return jax.lax.fori_loop(0, n_super, body, grid)
+
+
+def superstep_loop(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
+                   coeffs: dict, iters, aux: jnp.ndarray | None = None,
+                   bounds=None, bc=None) -> jnp.ndarray:
+    """Single-operator special case of :func:`superstep_loop_chain` (legacy
+    entry point, semantics unchanged)."""
+    return superstep_loop_chain(((stencil, bc),), geom, grid, (coeffs,),
+                                iters, aux, bounds)
 
 
 @partial(jax.jit, static_argnames=("stencil", "geom", "bc"))

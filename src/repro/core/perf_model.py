@@ -160,10 +160,10 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     t_mem = step_bytes / device.mem_bw + n_dma * device.dma_issue_s
 
     # --- compute term: every traversed cell is updated par_time times ------
-    # sublane utilization of the per-tick compute tile: 2D slabs are
-    # (V, bsize) — V sublanes of the 8-sublane f32 tile; 3D slabs are
+    # sublane utilization of the per-tick compute tile: 1D/2D slabs are
+    # (V,)/(V, bsize) — V sublanes of the 8-sublane f32 tile; 3D slabs are
     # (V, bsize_y, bsize_x) — the y extent fills the sublanes
-    sub = par_vec if len(dims) == 2 else bsize[0]
+    sub = bsize[0] if len(dims) == 3 else par_vec
     sub_eff = min(sub, SUBLANE) / SUBLANE
     cells_per_super = batch * geom_t.stream_dim * math.prod(
         n * b for n, b in zip(geom.bnum, geom.bsize))
@@ -197,7 +197,9 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
         gbytes_s=n_super * step_bytes / run_time,
         gcells_s=total_cells / run_time,
         gflops=total_cells * stencil.flop_pcu / run_time,
-        vmem_bytes=geom.vmem_bytes(cell_bytes, stencil.has_aux),
+        vmem_bytes=geom.vmem_bytes(
+            cell_bytes, stencil.has_aux,
+            stage_radii=getattr(stencil, "stage_radii", None)),
         bound=bound, batch=batch)
 
 

@@ -1,0 +1,391 @@
+"""Rank- and stage-generic Pallas kernel builder — ONE streaming kernel.
+
+This module replaces the former ``stencil2d.py``/``stencil3d.py`` twins (now
+thin compatibility shims) with a single builder that emits the combined
+spatial/temporal-blocking kernel for
+
+  * any grid rank with streaming axis 0 (1D: stream only; 2D: 1-D blocking
+    in x; 3D: 2-D blocking in (y, x) — the paper's §3.1 layouts), and
+  * any *chain* of PE stages: ``par_time`` repeats of one stencil (the
+    classic S=1 temporal chain) or a whole multi-stage
+    :class:`~repro.programs.StencilProgram` unrolled ``par_time`` times —
+    ``S*T`` fused stages per super-step, stage boundaries being just
+    temporal steps with a different stencil/coeffs/BC (StencilFlow,
+    arXiv:2010.15218).  Intermediates live only in the rolling VMEM windows:
+    zero HBM round-trips.
+
+Architecture (see DESIGN.md §2 and the original module docstrings, which
+this kernel reproduces op-for-op for S=1):
+
+  * one rolling circular slab window per chain entry, sized for *that*
+    entry's radius (``2*ceil(rad_i/V)+1`` slots of ``par_vec`` rows) —
+    heterogeneous radii pay only their own window;
+  * chain entry ``i`` lags the stream head by ``Lag_i = sum_{u<=i}
+    ceil(rad_u/V)`` slabs (the per-PE ``rad``-row lag of the paper,
+    generalized to per-stage radii and vector slabs);
+  * double-buffered async slab DMA in/out, prefetch stopping at the last
+    real slab; drain runs ``nslabs + Lag_total`` ticks;
+  * stream-axis BCs via per-row BC-mapped window gathers, blocked-axis BCs
+    re-imposed on every pushed slab — both per *entry* (each stage reads its
+    input under its own BC);
+  * PE forwarding for partial super-steps: with ``steps < par_time`` real
+    iterations remaining, entries ``i >= steps*S`` forward their input slab
+    unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+from repro.core.blocking import BlockGeometry, stream_extension
+from repro.core.stencils import Stencil
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainStage:
+    """One fused PE stage of a super-step chain (static kernel metadata)."""
+    stencil: Stencil
+    bc: object                    # BoundaryCondition or None (= clamp)
+    coeff_lo: int                 # slice start into the packed coeff vector
+
+
+def unroll_chain(stages, par_time: int) -> Tuple[ChainStage, ...]:
+    """``stages`` (a tuple of ``(stencil, bc)`` per program stage) unrolled
+    ``par_time`` times into the per-super-step PE chain, with each stage's
+    offset into the packed coefficient vector."""
+    lo, entries = 0, []
+    for st, bc in stages:
+        entries.append(ChainStage(st, bc, lo))
+        lo += len(st.coeff_names)
+    return tuple(entries) * par_time
+
+
+def _chain_lags(chain, par_vec: int):
+    """Per-entry slab radius ``R_i = ceil(rad_i/V)`` and cumulative lag
+    ``Lag_i = sum_{u<=i} R_u`` (entry ``i`` computes slab ``k - Lag_i`` at
+    stream tick ``k``)."""
+    rs = [-(-e.stencil.radius // par_vec) for e in chain]
+    return rs, list(itertools.accumulate(rs))
+
+
+def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
+    nb = geom.ndim - 1                       # blocked (trailing) dims
+    V = geom.par_vec
+    L = len(chain)
+    S = L // geom.par_time                   # program stages per iteration
+    BS = geom.bsize
+    CS = geom.csize
+    h = geom.size_halo
+    Rs, lag = _chain_lags(chain, V)
+    Ws = [2 * r + 1 for r in Rs]             # window slots feeding entry i
+    HA = (lag[-1] if L else 0) + 1           # aux window depth, in slabs
+    nslabs = ns // V
+    nticks = nslabs + (lag[-1] if L else 0)
+    has_aux = any(e.stencil.has_aux for e in chain)
+    blanks = (slice(None),) * nb
+
+    # --- unpack the positional refs (operands, output, scratch) -------------
+    steps_ref, coeff_ref, gp_ref = refs[0], refs[1], refs[2]
+    p = 3
+    aux_ref = None
+    if has_aux:
+        aux_ref, p = refs[p], p + 1
+    out_ref, p = refs[p], p + 1
+    wins, p = refs[p:p + L], p + L
+    in_buf, in_sems, p = refs[p], refs[p + 1], p + 2
+    aux_win = aux_buf = aux_sems = None
+    if has_aux:
+        aux_win, aux_buf, aux_sems = refs[p:p + 3]
+        p += 3
+    out_buf, out_sems = refs[p], refs[p + 1]
+
+    starts = tuple(pl.program_id(d) * CS[d] for d in range(nb))
+    steps = steps_ref[0, 0]
+    iv = jax.lax.iota(jnp.int32, V)          # row offsets within a slab
+
+    # --- per-stage coefficient dicts (shared across par_time repeats) -------
+    # built at kernel top level: values read inside a pl.when branch must not
+    # be reused by a later branch (cross-trace constants)
+    cdicts = {}
+    for e in chain:
+        if e.coeff_lo not in cdicts:
+            cdicts[e.coeff_lo] = {
+                name: coeff_ref[0, e.coeff_lo + ci]
+                for ci, name in enumerate(e.stencil.coeff_names)}
+
+    def coeffs_of(entry):
+        return cdicts[entry.coeff_lo]
+
+    # --- blocked-axis boundary re-imposition, per entry BC ------------------
+    # (only grid-edge blocks ever act; mirrors the former per-rank reclamps)
+    iotas = [jax.lax.broadcasted_iota(jnp.int32, (V,) + BS, 1 + ax)
+             for ax in range(nb)]
+    los = tuple(h - s for s in starts)
+    his = tuple((d - 1) + h - s for d, s in zip(geom.blocked_dims, starts))
+
+    def _reimpose_axis(slab, kind, ax, fill):
+        if kind == "periodic":
+            # wrap-padded halos are exact translated copies: no re-imposition
+            return slab
+        n, axis = BS[ax], 1 + ax
+        lo, hi, iota = los[ax], his[ax], iotas[ax]
+        if kind == "constant":
+            slab = jnp.where(iota < lo, fill, slab)
+            return jnp.where(iota > hi, fill, slab)
+        if kind == "reflect":
+            flipped = jnp.flip(slab, axis=axis)
+            mlo = jnp.roll(flipped, 2 * lo + 1 - n, axis=axis)
+            mhi = jnp.roll(flipped, 2 * hi + 1 - n, axis=axis)
+            slab = jnp.where(iota < lo, mlo, slab)
+            return jnp.where(iota > hi, mhi, slab)
+        sizes = tuple(1 if a == axis else s
+                      for a, s in enumerate((V,) + BS))
+        at = lambda p_: tuple(p_ if a == axis else 0     # noqa: E731
+                              for a in range(1 + nb))
+        lo_band = jax.lax.dynamic_slice(slab, at(jnp.clip(lo, 0, n - 1)),
+                                        sizes)
+        hi_band = jax.lax.dynamic_slice(slab, at(jnp.clip(hi, 0, n - 1)),
+                                        sizes)
+        slab = jnp.where(iota < lo, lo_band, slab)
+        return jnp.where(iota > hi, hi_band, slab)
+
+    def reclamp_for(bc):
+        kinds = ("clamp",) * nb if bc is None else tuple(bc.kinds[1:])
+        fill = 0.0 if bc is None else bc.value
+
+        def reclamp(slab):
+            for ax in range(nb):
+                slab = _reimpose_axis(slab, kinds[ax], ax, fill)
+            return slab
+        return reclamp
+
+    reclamps = [reclamp_for(e.bc) for e in chain]
+
+    # --- DMA plumbing --------------------------------------------------------
+    in_idx = tuple(pl.ds(s, b) for s, b in zip(starts, BS))
+    out_idx = tuple(pl.ds(s + h, c) for s, c in zip(starts, CS))
+
+    def in_copy(j, slot):
+        src = jnp.clip(j, 0, nslabs - 1) * V
+        return pltpu.make_async_copy(
+            gp_ref.at[(pl.ds(src, V),) + in_idx],
+            in_buf.at[slot], in_sems.at[slot])
+
+    def aux_copy(j, slot):
+        src = jnp.clip(j, 0, nslabs - 1) * V
+        return pltpu.make_async_copy(
+            aux_ref.at[(pl.ds(src, V),) + in_idx],
+            aux_buf.at[slot], aux_sems.at[slot])
+
+    def out_copy(j, slot):
+        return pltpu.make_async_copy(
+            out_buf.at[slot],
+            out_ref.at[(pl.ds(j * V, V),) + out_idx], out_sems.at[slot])
+
+    in_copy(0, 0).start()
+    if has_aux:
+        aux_copy(0, 0).start()
+
+    def body(k, _):
+        # wait input slab k; prefetch slab k+1 (both stop at the last real
+        # slab — later ticks only drain the chain, fetching nothing)
+        slot = k % 2
+
+        @pl.when(k <= nslabs - 1)
+        def _():
+            in_copy(k, slot).wait()
+
+        @pl.when(k + 1 <= nslabs - 1)
+        def _():
+            in_copy(k + 1, (k + 1) % 2).start()
+
+        @pl.when(k <= nslabs - 1)
+        def _():   # push the input slab into window 0 (pre-padded => BC-ok)
+            wins[0][(pl.ds((k % Ws[0]) * V, V),) + blanks] = in_buf[slot]
+
+        if has_aux:
+            @pl.when(k <= nslabs - 1)
+            def _():
+                aux_copy(k, slot).wait()
+
+            @pl.when(k + 1 <= nslabs - 1)
+            def _():
+                aux_copy(k + 1, (k + 1) % 2).start()
+
+            @pl.when(k <= nslabs - 1)
+            def _():
+                aux_win[(pl.ds((k % HA) * V, V),) + blanks] = aux_buf[slot]
+
+        # -- PE chain: entry i computes slab k - Lag_i -----------------------
+        for i, entry in enumerate(chain):
+            j = k - lag[i]
+            R, W = Rs[i], Ws[i]
+            newest = j + R               # newest slab entry i's producer owns
+
+            @pl.when((j >= 0) & (j <= nslabs - 1))
+            def _(i=i, entry=entry, j=j, R=R, W=W, newest=newest):
+                # input slabs j-R..j+R of window i, in logical order
+                cat = jnp.concatenate(
+                    [wins[i][(pl.ds(((j + o) % W) * V, V),) + blanks]
+                     for o in range(-R, R + 1)], axis=0)
+                base = (j - R) * V       # logical stream row of cat[0]
+                limit = jnp.minimum(newest * V + V - 1, dom - 1)
+                kind_s = "clamp" if entry.bc is None else entry.bc.kinds[0]
+                fill = 0.0 if entry.bc is None else entry.bc.value
+
+                def stream_tap(ds_):
+                    """(V, *BS) slab of stream rows ``j*V+ds_ ..`` with this
+                    entry's stream-axis BC applied per row: clamp clips,
+                    reflect mirrors (the target provably stays in the
+                    window), constant overrides out-of-domain rows with the
+                    fill; periodic was materialized as a stream extension by
+                    the wrapper.  ``limit`` stops reads at the newest pushed
+                    row."""
+                    rows = j * V + ds_ + iv
+                    if kind_s == "reflect":
+                        p_ = max(2 * dom - 2, 1)
+                        m = jnp.mod(rows, p_)
+                        rows_m = jnp.where(m >= dom, p_ - m, m)
+                    else:
+                        rows_m = rows
+                    pos = jnp.clip(rows_m, 0, limit) - base
+                    vals = jnp.take(cat, pos, axis=0)
+                    if kind_s == "constant":
+                        oob = (rows < 0) | (rows > dom - 1)
+                        vals = jnp.where(oob.reshape((V,) + (1,) * nb),
+                                         fill, vals)
+                    return vals
+
+                # tap memo: one window gather per distinct stream offset,
+                # one lane/sublane rotate per distinct full offset
+                taps = {}
+                zero = (0,) * nb
+
+                def get(off):
+                    ds_, db = off[0], tuple(off[1:])
+                    tap = taps.get(tuple(off))
+                    if tap is None:
+                        tap = taps.get((ds_,) + zero)
+                        if tap is None:
+                            tap = taps[(ds_,) + zero] = stream_tap(ds_)
+                        for ax, d in enumerate(db):
+                            if d:
+                                tap = jnp.roll(tap, -d, axis=1 + ax)
+                        taps[tuple(off)] = tap
+                    return tap
+
+                aux_slab = None
+                if entry.stencil.has_aux:
+                    ja = jnp.clip(j, 0, nslabs - 1)
+                    aux_slab = aux_win[(pl.ds((ja % HA) * V, V),) + blanks]
+                val = entry.stencil.apply(get, coeffs_of(entry), aux_slab)
+                # PE forwarding: with `steps` real iterations this super-step,
+                # only entries of the first `steps` program repeats compute
+                # (entry i belongs to repeat t = i // S + 1)
+                val = jnp.where(i // S + 1 <= steps, val,
+                                get((0,) * geom.ndim))
+                if i < L - 1:
+                    # re-impose the *consumer's* blocked-axis BC on the slab
+                    wins[i + 1][(pl.ds((j % Ws[i + 1]) * V, V),) + blanks] = (
+                        reclamps[i + 1](val))
+                else:
+                    oslot = j % 2
+
+                    @pl.when(j >= 2)
+                    def _():   # slot reuse: the previous copy must have drained
+                        out_copy(j - 2, oslot).wait()
+
+                    out_buf[oslot] = val[(slice(None),)
+                                         + tuple(slice(h, h + c) for c in CS)]
+                    out_copy(j, oslot).start()
+        return 0
+
+    jax.lax.fori_loop(0, nticks, body, 0)
+
+    # drain outstanding output DMAs (last two slabs; nslabs is static)
+    if nslabs >= 2:
+        out_copy(nslabs - 2, (nslabs - 2) % 2).wait()
+    out_copy(nslabs - 1, (nslabs - 1) % 2).wait()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stages", "geom", "interpret",
+                                    "block_parallel"))
+def superstep_chain(stages, geom: BlockGeometry, gp: jnp.ndarray,
+                    coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                    aux_p: Optional[jnp.ndarray] = None,
+                    interpret: bool = True,
+                    block_parallel: bool = False) -> jnp.ndarray:
+    """One super-step (<= ``par_time`` fused program iterations) over the
+    padded grid ``gp``, through the ``len(stages) * par_time``-entry PE
+    chain.
+
+    ``stages``: static tuple of ``(stencil, bc)`` per program stage (S=1
+    recovers the classic single-operator super-step exactly — see
+    ``superstep_2d``/``superstep_3d``).  ``gp``/``aux_p`` are BC-padded by
+    the wrapper (``kernels/ops``) under stage 0's BC: blocked dims to
+    ``bnum*csize + 2*halo``, the stream axis extended ``2*size_halo`` when
+    periodic and padded up to a ``par_vec`` multiple.  Returns the padded
+    output (only compute columns/rows are meaningful).
+
+    ``block_parallel`` opts the kernel grid into Megacore ("parallel"
+    dimension semantics): blocks are independent by construction, so the
+    result is bit-identical to the sequential grid.
+    """
+    nb = geom.ndim - 1
+    V = geom.par_vec
+    ns = gp.shape[0]
+    bc0 = stages[0][1]
+    dom = geom.stream_dim + 2 * stream_extension(geom, bc0)
+    if ns != geom.stream_slabs(dom) * V:
+        raise ValueError(
+            f"padded stream extent {ns} != ceil({dom}/{V})*{V} "
+            f"= {geom.stream_slabs(dom) * V}: the wrapper must pad the "
+            f"stream axis to a slab multiple (kernels/ops._pad_blocked)")
+    chain = unroll_chain(stages, geom.par_time)
+    Rs, lag = _chain_lags(chain, V)
+    has_aux = any(st.has_aux for st, _ in stages)
+    HA = lag[-1] + 1
+    BS, CS = geom.bsize, geom.csize
+
+    kernel = functools.partial(_chain_kernel, chain=chain, geom=geom,
+                               ns=ns, dom=dom)
+    # one rolling window per chain entry, sized for that entry's radius
+    scratch = [pltpu.VMEM(((2 * r + 1) * V,) + BS, jnp.float32) for r in Rs]
+    scratch += [pltpu.VMEM((2, V) + BS, jnp.float32),   # input double buffer
+                pltpu.SemaphoreType.DMA((2,))]
+    if has_aux:
+        scratch += [pltpu.VMEM((HA * V,) + BS, jnp.float32),  # aux window
+                    pltpu.VMEM((2, V) + BS, jnp.float32),
+                    pltpu.SemaphoreType.DMA((2,))]
+    scratch += [pltpu.VMEM((2, V) + CS, jnp.float32),   # output double buffer
+                pltpu.SemaphoreType.DMA((2,))]
+
+    n_hbm_in = 2 if has_aux else 1
+    operands = (coeffs_packed.reshape(1, -1), gp) + (
+        (aux_p,) if has_aux else ())
+    steps_arr = jnp.asarray(steps, jnp.int32).reshape(1, 1)
+    grid = geom.bnum if nb else (1,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)]
+        + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=scratch,
+        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=(
+                ("parallel" if block_parallel else "arbitrary",) * len(grid))),
+    )(steps_arr, *operands)

@@ -23,13 +23,21 @@ import jax.numpy as jnp
 from repro.core import boundary
 from repro.core.blocking import BlockGeometry, stream_extension as _stream_ext
 from repro.core.stencils import Stencil
-from repro.kernels.stencil2d import superstep_2d
-from repro.kernels.stencil3d import superstep_3d
+from repro.kernels.builder import superstep_chain
 
 
 def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
     return jnp.stack([jnp.asarray(coeffs[n], jnp.float32)
                       for n in stencil.coeff_names])
+
+
+def pack_program_coeffs(stages, stage_coeffs) -> jnp.ndarray:
+    """Concatenate per-stage coefficient vectors in stage order — the layout
+    :func:`repro.kernels.builder.unroll_chain` assigns ``coeff_lo`` offsets
+    into.  ``stages`` is the static ``((stencil, bc), ...)`` tuple,
+    ``stage_coeffs`` one coefficient dict per stage."""
+    return jnp.concatenate([pack_coeffs(st, c)
+                            for (st, _), c in zip(stages, stage_coeffs)])
 
 
 def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry,
@@ -111,12 +119,14 @@ def _reclamp_padded(gp: jnp.ndarray, geom: BlockGeometry,
     return gp
 
 
-def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
-                         gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
-                         aux_p: jnp.ndarray | None, interpret: bool,
-                         bc=None, block_parallel: bool = False) -> jnp.ndarray:
-    """The throughput subsystem's fused driver: the whole ``iters`` loop over
-    the *pre-padded* grid ``gp``, returning the unpadded result.
+def fused_chain_loop(stages, geom: BlockGeometry, gp: jnp.ndarray,
+                     coeffs_packed: jnp.ndarray, iters,
+                     aux_p: jnp.ndarray | None, interpret: bool,
+                     block_parallel: bool = False) -> jnp.ndarray:
+    """The throughput subsystem's fused driver: the whole ``iters`` loop of a
+    stage chain over the *pre-padded* grid ``gp``, returning the unpadded
+    result.  ``stages`` is the static ``((stencil, bc), ...)`` tuple of the
+    program (S=1 recovers the classic single-operator loop).
 
     Why this shape:
       * ``iters`` may be a traced scalar — the super-step trip count is
@@ -129,19 +139,34 @@ def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
         XLA reuse the padded buffer for the loop carry (no copy-on-update) —
         ``gp`` is an intermediate the backend owns, so donation never
         invalidates a caller-visible array.
+
+    Padding, the stream extension and inter-super-step halo refresh use stage
+    0's BC: that is the BC the chain's first entry reads the carry under
+    (periodicity is uniform across stages by construction, and each later
+    entry re-imposes its own BC in-kernel).
     """
-    superstep = superstep_2d if geom.ndim == 2 else superstep_3d
+    bc0 = stages[0][1]
     par_time = geom.par_time
     n_super = (iters + par_time - 1) // par_time
 
     def body(s, g):
         steps = jnp.minimum(par_time, iters - s * par_time)
-        op = superstep(stencil, geom, g, coeffs_packed, steps, aux_p,
-                       interpret=interpret, bc=bc,
-                       block_parallel=block_parallel)
-        return _reclamp_padded(op, geom, bc)
+        op = superstep_chain(stages, geom, g, coeffs_packed, steps, aux_p,
+                             interpret=interpret,
+                             block_parallel=block_parallel)
+        return _reclamp_padded(op, geom, bc0)
 
-    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc)
+    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc0)
+
+
+def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
+                         gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
+                         aux_p: jnp.ndarray | None, interpret: bool,
+                         bc=None, block_parallel: bool = False) -> jnp.ndarray:
+    """Single-operator special case of :func:`fused_chain_loop` (legacy
+    entry point, semantics unchanged)."""
+    return fused_chain_loop(((stencil, bc),), geom, gp, coeffs_packed, iters,
+                            aux_p, interpret, block_parallel)
 
 
 @partial(jax.jit, static_argnames=("stencil", "geom", "interpret", "bc",
@@ -158,6 +183,22 @@ def run_pallas(stencil: Stencil, geom: BlockGeometry, grid: jnp.ndarray,
     return fused_superstep_loop(stencil, geom, _pad_blocked(grid, geom, bc),
                                 coeffs_packed, iters, aux_p, interpret, bc,
                                 block_parallel)
+
+
+@partial(jax.jit, static_argnames=("stages", "geom", "interpret",
+                                   "block_parallel"))
+def run_pallas_chain(stages, geom: BlockGeometry, grid: jnp.ndarray,
+                     coeffs_packed: jnp.ndarray, iters,
+                     aux: jnp.ndarray | None, interpret: bool,
+                     block_parallel: bool = False) -> jnp.ndarray:
+    """``iters`` program iterations via the fused streaming chain kernel.
+    ``stages`` is the static ``((stencil, bc), ...)`` tuple; padding uses
+    stage 0's BC (see :func:`fused_chain_loop`)."""
+    bc0 = stages[0][1]
+    aux_p = _pad_blocked(aux, geom, bc0) if aux is not None else None
+    return fused_chain_loop(stages, geom, _pad_blocked(grid, geom, bc0),
+                            coeffs_packed, iters, aux_p, interpret,
+                            block_parallel)
 
 
 def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,

@@ -42,3 +42,24 @@ def oracle_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
     def body(_, g):
         return oracle_step(stencil, g, coeffs, aux, bc=bc)
     return jax.lax.fori_loop(0, iters, body, grid)
+
+
+def oracle_program_step(stages, grid: jnp.ndarray, stage_coeffs,
+                        aux: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One *program iteration*: apply every stage in order, each under its
+    own BC.  ``stages`` is ``((stencil, bc), ...)``, ``stage_coeffs`` one
+    coefficient dict per stage — the sequential semantics every fused chain
+    backend is conformance-tested against."""
+    for (st, bc_s), cf in zip(stages, stage_coeffs):
+        grid = oracle_step(st, grid, cf, aux if st.has_aux else None,
+                           bc=bc_s)
+    return grid
+
+
+def oracle_program_run(stages, grid: jnp.ndarray, stage_coeffs,
+                       iters: int, aux: jnp.ndarray | None = None
+                       ) -> jnp.ndarray:
+    """``iters`` program iterations of the stage chain."""
+    def body(_, g):
+        return oracle_program_step(stages, g, stage_coeffs, aux)
+    return jax.lax.fori_loop(0, iters, body, grid)

@@ -1,353 +1,31 @@
-"""Pallas TPU kernel: 2D stencil with combined spatial + temporal blocking.
+"""2D streaming kernel — compatibility shim over ``kernels.builder``.
 
-Faithful TPU re-architecture of the paper's accelerator (see DESIGN.md §2):
-
-  * 1-D spatial blocking in x, streaming in y (paper §3.1): kernel grid is
-    ``(bnum_x,)``; each program owns one overlapped block of width ``bsize``
-    and streams the full y extent, ``par_vec`` rows per tick.
-  * Shift registers → **rolling VMEM windows**: one ``(win_slots*V, bsize)``
-    circular slab window per temporal stage (V = ``geom.par_vec`` rows per
-    slab, slot ``s`` at rows ``[s*V, s*V + V)``, indexed mod ``win_slots`` —
-    incrementing the start address of the FPGA shift register == bumping the
-    mod-W slot).  At V=1 this is exactly the classic ``(2*rad+1, bsize)``
-    row window.
-  * par_vec (paper §3.3) → **sublane vectorization**: every tick advances a
-    ``(V, bsize)`` slab, so the 8-sublane f32 tile that Mosaic pads a single
-    row out to carries V real rows, per-tick DMAs move V rows at once, and
-    the pipeline drains in ``~1/V`` the ticks.  See DESIGN.md §2.2.
-  * PE chain → **fused stage loop**: stage ``t`` computes slab ``k - t*R``
-    at stream tick ``k`` (``R = slab_lag = ceil(rad/V)``) — the same
-    ``rad``-row lag the paper gives each PE, in slab units.
-  * read/write kernels + channels → **double-buffered async DMA**
-    (``pltpu.make_async_copy``): slab ``k+1`` is in flight while slab ``k``
-    is consumed; output slabs stream back through a 2-deep buffer.
-  * Halos are computed redundantly; only the ``csize``-wide compute region is
-    DMA'd out (the paper's "control only the flow of writes"). Out-of-bound
-    compute lands in padding the wrapper slices off.
-  * PE forwarding (paper §3.2): when fewer than ``par_time`` steps remain, the
-    trailing stages forward their input slab unchanged (runtime ``steps``
-    scalar in SMEM).
-
-Boundary handling (DESIGN.md §2.1, generalized by ``core.boundary``): the
-streaming-axis BC is exact via BC-mapped window reads, generalized to vector
-(per-row) index maps: each of the V rows of a ``dy``-tap slab maps its own
-coordinate (clamp clips, reflect mirrors — both targets provably live inside
-the rolling window — constant overrides out-of-domain rows with the fill
-scalar), then the slab is gathered from the window in one shot.  The
-blocked-axis BC is re-imposed on every pushed slab (prefix/suffix overwrite
-from the mapped in-row position — only the first/last block ever does real
-work here).  Periodic axes take neither path: the wrapper materializes the
-wrap in HBM (wrap-mode padding; for the streaming axis an explicit 2*halo
-stream extension, since the rolling window cannot reach the far end of the
-stream) and the wrapped halos stay exact up to the standard garbage creep,
-exactly like interior block seams.  When the stream extent is not a multiple
-of V the wrapper pads it up with edge rows; the pad rows are computed (and
-discarded) but never tapped — every stream read is BC-mapped into the true
-domain ``[0, dom-1]`` first.
-
-Tap micro-optimization: the per-stage neighbor getter memoizes window reads
-per ``dy`` and lane rotates per ``(dy, dx)``, so each distinct stream tap
-(including its reflect modulus math) and each distinct in-row shift is
-computed exactly once per tick per stage, however many offsets share it.
-
-TPU-shape notes: slabs are ``(V, bsize)`` f32 with ``bsize % 128 == 0``;
-in-row shifts use ``jnp.roll`` (lane rotate) and stream taps gather along
-sublanes (swap for ``pltpu.roll``-based selects if Mosaic rejects the
-gather). ``BlockGeometry.vmem_bytes`` accounts the 8-sublane padding of
-every buffer.
+The rank-specialized 2D kernel that used to live here is now the ``nb=1``,
+``S=1`` specialization of the rank- and stage-generic chain builder
+(:mod:`repro.kernels.builder` — see that module and DESIGN.md §2/§8 for the
+architecture).  ``superstep_2d`` keeps its exact legacy signature and
+semantics: one super-step of ``par_time`` fused time-steps of a single
+stencil, bit-identical to the pre-builder kernel (verified by the BC
+conformance and par_vec suites).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro import compat
-
-from repro.core.blocking import BlockGeometry, stream_extension
+from repro.core.blocking import BlockGeometry
 from repro.core.stencils import Stencil
+from repro.kernels.builder import superstep_chain
 
 
-def _kernel(steps_ref,                      # SMEM (1,1) int32: real steps
-            coeff_ref,                      # VMEM (1, n_coeff) f32
-            gp_ref,                         # ANY (ns, nxp): padded input
-            aux_ref,                        # ANY (ns, nxp) or None
-            out_ref,                        # ANY (ns, nxp): padded output
-            win_ref,                        # VMEM (T, W*V, BX): stage windows
-            in_buf, in_sems,                # VMEM (2,V,BX) + 2 DMA sems
-            aux_win,                        # VMEM (HA*V, BX) aux window or None
-            aux_buf, aux_sems,              # (2,V,BX) + sems, or None
-            out_buf, out_sems,              # VMEM (2,V,CS) + 2 DMA sems
-            *, stencil: Stencil, geom: BlockGeometry, ns: int, dom: int,
-            dimx: int, bc=None):
-    T, rad, V = geom.par_time, geom.rad, geom.par_vec
-    R = geom.slab_lag                        # per-stage lag, in slabs
-    W = geom.win_slots                       # slab slots per stage window
-    BX = geom.bsize[0]
-    CS = geom.csize[0]
-    h = geom.size_halo
-    HA = T * R + 1                           # aux window depth, in slabs
-    nslabs = ns // V
-    b = pl.program_id(0)
-    xs = b * CS                              # block start col in padded grid
-    nticks = nslabs + T * R
-    steps = steps_ref[0, 0]
-    kind_s = "clamp" if bc is None else bc.kinds[0]
-    kind_x = "clamp" if bc is None else bc.kinds[1]
-    fill = 0.0 if bc is None else bc.value
-    iv = jax.lax.iota(jnp.int32, V)          # row offsets within a slab
-
-    coeffs = {name: coeff_ref[0, i]
-              for i, name in enumerate(stencil.coeff_names)}
-
-    # --- x boundary re-imposition (blocked dim): only first/last block act --
-    lo = h - xs                              # positions j < lo are left of grid
-    hi = (dimx - 1) + h - xs                 # positions j > hi are right of grid
-    iota = jax.lax.broadcasted_iota(jnp.int32, (V, BX), 1)
-
-    def reclamp_x(slab):
-        if kind_x == "periodic":
-            # wrap-padded halos are exact translated copies: no re-imposition
-            # (garbage creep is covered by the halo, as between blocks)
-            return slab
-        if kind_x == "constant":
-            slab = jnp.where(iota < lo, fill, slab)
-            return jnp.where(iota > hi, fill, slab)
-        if kind_x == "reflect":
-            # out[j] = slab[2*lo - j] for j < lo (mirror about the edge cell);
-            # flip+roll keeps the per-position gather Mosaic-friendly
-            flipped = jnp.flip(slab, axis=1)
-            mlo = jnp.roll(flipped, 2 * lo + 1 - BX, axis=1)
-            mhi = jnp.roll(flipped, 2 * hi + 1 - BX, axis=1)
-            slab = jnp.where(iota < lo, mlo, slab)
-            return jnp.where(iota > hi, mhi, slab)
-        lo_val = jax.lax.dynamic_slice(slab, (0, jnp.clip(lo, 0, BX - 1)),
-                                       (V, 1))
-        hi_val = jax.lax.dynamic_slice(slab, (0, jnp.clip(hi, 0, BX - 1)),
-                                       (V, 1))
-        slab = jnp.where(iota < lo, lo_val, slab)
-        return jnp.where(iota > hi, hi_val, slab)
-
-    # --- DMA plumbing --------------------------------------------------------
-    def in_copy(j, slot):
-        src = jnp.clip(j, 0, nslabs - 1) * V
-        return pltpu.make_async_copy(
-            gp_ref.at[pl.ds(src, V), pl.ds(xs, BX)],
-            in_buf.at[slot], in_sems.at[slot])
-
-    def aux_copy(j, slot):
-        src = jnp.clip(j, 0, nslabs - 1) * V
-        return pltpu.make_async_copy(
-            aux_ref.at[pl.ds(src, V), pl.ds(xs, BX)],
-            aux_buf.at[slot], aux_sems.at[slot])
-
-    def out_copy(j, slot):
-        return pltpu.make_async_copy(
-            out_buf.at[slot],
-            out_ref.at[pl.ds(j * V, V), pl.ds(xs + h, CS)], out_sems.at[slot])
-
-    has_aux = aux_ref is not None
-    in_copy(0, 0).start()
-    if has_aux:
-        aux_copy(0, 0).start()
-
-    def body(k, _):
-        # -- wait input slab k; prefetch slab k+1 into the other buffer ------
-        # Slabs past nslabs-1 are never pushed (the window push below is
-        # gated at k <= nslabs-1) and stream taps clamp to the last pushed
-        # row, so fetching them would be pure waste: stop both the prefetch
-        # and its matching wait at the last real slab instead of running to
-        # nticks.
-        slot = k % 2
-
-        @pl.when(k <= nslabs - 1)
-        def _():
-            in_copy(k, slot).wait()
-
-        @pl.when(k + 1 <= nslabs - 1)
-        def _():
-            in_copy(k + 1, (k + 1) % 2).start()
-
-        @pl.when(k <= nslabs - 1)
-        def _():   # push input slab into the stage-0 window (pre-padded => BC-ok)
-            win_ref[0, pl.ds((k % W) * V, V), :] = in_buf[slot]
-
-        if has_aux:
-            @pl.when(k <= nslabs - 1)
-            def _():
-                aux_copy(k, slot).wait()
-
-            @pl.when(k + 1 <= nslabs - 1)
-            def _():
-                aux_copy(k + 1, (k + 1) % 2).start()
-
-            @pl.when(k <= nslabs - 1)
-            def _():
-                aux_win[pl.ds((k % HA) * V, V), :] = aux_buf[slot]
-
-        # -- PE chain: stage t computes slab k - t*R --------------------------
-        for t in range(1, T + 1):
-            j = k - t * R
-            newest = k - (t - 1) * R         # newest slab stage t-1 can own
-
-            @pl.when((j >= 0) & (j <= nslabs - 1))
-            def _(t=t, j=j, newest=newest):
-                # stage-(t-1) slabs j-R..j+R, concatenated in logical order:
-                # rows (j-R)*V .. (j+R+1)*V - 1 of the stream
-                cat = jnp.concatenate(
-                    [win_ref[t - 1, pl.ds(((j + o) % W) * V, V), :]
-                     for o in range(-R, R + 1)], axis=0)
-                base = (j - R) * V           # logical row of cat[0]
-                limit = jnp.minimum(newest * V + V - 1, dom - 1)
-
-                def stream_tap(dy):
-                    """(V, BX) slab of rows j*V+dy .. j*V+V-1+dy with the
-                    stream-axis BC applied per row (rows may be out of
-                    domain).  clamp clips; reflect mirrors (the mirror
-                    target is within ``rad`` of the edge, hence provably
-                    still in the window); constant reads any in-window row
-                    and overrides with the fill; periodic was materialized
-                    as a stream extension by the wrapper, so edge reads here
-                    are garbage-tolerant clips.  ``limit`` bounds the clip
-                    so we never read an unpushed slab."""
-                    rows = j * V + dy + iv
-                    if kind_s == "reflect":
-                        p_ = max(2 * dom - 2, 1)
-                        m = jnp.mod(rows, p_)
-                        rows_m = jnp.where(m >= dom, p_ - m, m)
-                    else:
-                        rows_m = rows
-                    pos = jnp.clip(rows_m, 0, limit) - base
-                    vals = jnp.take(cat, pos, axis=0)
-                    if kind_s == "constant":
-                        oob = (rows < 0) | (rows > dom - 1)
-                        vals = jnp.where(oob[:, None], fill, vals)
-                    return vals
-
-                # tap memo: one window gather per distinct dy, one lane
-                # rotate per distinct (dy, dx), per stage per tick
-                taps = {}
-
-                def get(off):
-                    dy, dx = off
-                    tap = taps.get((dy, dx))
-                    if tap is None:
-                        tap = taps.get((dy, 0))
-                        if tap is None:
-                            tap = taps[(dy, 0)] = stream_tap(dy)
-                        if dx:
-                            tap = taps[(dy, dx)] = jnp.roll(tap, -dx, axis=1)
-                    return tap
-
-                aux_slab = None
-                if has_aux:
-                    ja = jnp.clip(j, 0, nslabs - 1)
-                    aux_slab = aux_win[pl.ds((ja % HA) * V, V), :]
-                val = stencil.apply(get, coeffs, aux_slab)
-                # PE forwarding: inactive stages copy their input slab through.
-                val = jnp.where(t <= steps, val, get((0, 0)))
-                if t < T:
-                    win_ref[t, pl.ds((j % W) * V, V), :] = reclamp_x(val)
-                else:
-                    oslot = j % 2
-
-                    @pl.when(j >= 2)
-                    def _():   # slot reuse: previous copy must have drained
-                        out_copy(j - 2, oslot).wait()
-
-                    out_buf[oslot] = val[:, h:h + CS]
-                    out_copy(j, oslot).start()
-        return 0
-
-    jax.lax.fori_loop(0, nticks, body, 0)
-
-    # drain outstanding output DMAs (last two slabs; nslabs is static)
-    if nslabs >= 2:
-        out_copy(nslabs - 2, (nslabs - 2) % 2).wait()
-    out_copy(nslabs - 1, (nslabs - 1) % 2).wait()
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("stencil", "geom", "interpret", "bc",
-                                    "block_parallel"))
 def superstep_2d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
                  coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
                  aux_p: Optional[jnp.ndarray] = None,
                  interpret: bool = True, bc=None,
                  block_parallel: bool = False) -> jnp.ndarray:
-    """One super-step (<= par_time fused time-steps) over the padded grid.
-
-    ``gp``/``aux_p``: BC-padded to (ns, bnum*csize + 2*halo) — plus a
-    2*halo stream extension when the streaming-axis BC is periodic, plus
-    edge rows padding the stream extent up to a multiple of ``par_vec``
-    (the wrapper's job; ``ns`` here is whatever streams).  Returns the
-    padded output (only compute columns/rows are meaningful).
-
-    ``block_parallel`` switches the kernel grid's block dimension from
-    ``"arbitrary"`` to ``"parallel"`` semantics (opt-in Megacore): blocks
-    are independent by construction — halos are redundantly computed and
-    every block writes a disjoint compute region — so Mosaic may split
-    them across TensorCores.  Bit-identical to the sequential grid.
-    """
-    ns, nxp = gp.shape
-    T, V = geom.par_time, geom.par_vec
-    W = geom.win_slots
-    HA = T * geom.slab_lag + 1
-    BX = geom.bsize[0]
-    CS = geom.csize[0]
-    dimx = geom.blocked_dims[0]
-    # the BC domain: the true stream extent (plus the materialized periodic
-    # wrap), before the par_vec pad — stream taps map into [0, dom-1]
-    dom = geom.stream_dim + 2 * stream_extension(geom, bc)
-    if ns != geom.stream_slabs(dom) * V:
-        raise ValueError(
-            f"padded stream extent {ns} != ceil({dom}/{V})*{V} "
-            f"= {geom.stream_slabs(dom) * V}: the wrapper must pad the "
-            f"stream axis to a slab multiple (kernels/ops._pad_blocked)")
-
-    kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
-                               ns=ns, dom=dom, dimx=dimx, bc=bc)
-    scratch = [
-        pltpu.VMEM((T, W * V, BX), jnp.float32),  # stage slab windows
-        pltpu.VMEM((2, V, BX), jnp.float32),      # input double buffer
-        pltpu.SemaphoreType.DMA((2,)),
-        pltpu.VMEM((HA * V, BX), jnp.float32) if stencil.has_aux else None,
-        pltpu.VMEM((2, V, BX), jnp.float32) if stencil.has_aux else None,
-        pltpu.SemaphoreType.DMA((2,)) if stencil.has_aux else None,
-        pltpu.VMEM((2, V, CS), jnp.float32),      # output double buffer
-        pltpu.SemaphoreType.DMA((2,)),
-    ]
-    if not stencil.has_aux:
-        # drop aux scratch slots entirely (kernel signature shrinks to match)
-        scratch = [s for s in scratch if s is not None]
-
-        def kernel_noaux(steps_ref, coeff_ref, gp_ref, out_ref,
-                         win_ref, in_buf, in_sems, out_buf, out_sems):
-            return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
-                           win_ref, in_buf, in_sems, None, None, None,
-                           out_buf, out_sems, stencil=stencil, geom=geom,
-                           ns=ns, dom=dom, dimx=dimx, bc=bc)
-        kernel = kernel_noaux
-
-    n_hbm_in = 2 if stencil.has_aux else 1
-    operands = (coeffs_packed.reshape(1, -1), gp) + (
-        (aux_p,) if stencil.has_aux else ())
-    steps_arr = jnp.asarray(steps, jnp.int32).reshape(1, 1)
-    return pl.pallas_call(
-        kernel,
-        grid=(geom.bnum[0],),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
-                  pl.BlockSpec(memory_space=pltpu.VMEM)]
-        + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=scratch,
-        out_shape=jax.ShapeDtypeStruct((ns, nxp), jnp.float32),
-        interpret=interpret,
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=(
-                ("parallel",) if block_parallel else ("arbitrary",))),
-    )(steps_arr, *operands)
+    """One super-step (<= par_time fused time-steps) over the padded grid —
+    the single-stage 2D chain (see :func:`repro.kernels.builder.superstep_chain`)."""
+    return superstep_chain(((stencil, bc),), geom, gp, coeffs_packed, steps,
+                           aux_p, interpret=interpret,
+                           block_parallel=block_parallel)

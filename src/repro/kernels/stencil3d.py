@@ -1,284 +1,28 @@
-"""Pallas TPU kernel: 3D stencil — 2-D spatial blocking (x,y), z streaming.
+"""3D streaming kernel — compatibility shim over ``kernels.builder``.
 
-The 3D sibling of ``stencil2d.py`` (see that module + DESIGN.md §2 for the
-architecture): this is the paper's 3.5D blocking — a ``(bsize_y, bsize_x)``
-tile marches along z, ``par_vec`` planes per tick, with one rolling
-``win_slots``-slab VMEM window per temporal stage (a slab is ``par_vec``
-planes) and double-buffered slab DMA.  Kernel grid is ``(bnum_y, bnum_x)``;
-halo re-clamping applies to both blocked dims.  Stream (z) taps are
-BC-mapped per plane and gathered from the window, exactly like the 2D
-kernel's per-row maps; the per-stage tap memo computes each distinct ``dz``
-window gather and each distinct ``(dz, dy, dx)`` in-plane rotate once per
-tick.
+The rank-specialized 3D (3.5D-blocking) kernel that used to live here is now
+the ``nb=2``, ``S=1`` specialization of the rank- and stage-generic chain
+builder (:mod:`repro.kernels.builder`).  ``superstep_3d`` keeps its exact
+legacy signature and semantics.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro import compat
-
-from repro.core.blocking import BlockGeometry, stream_extension
+from repro.core.blocking import BlockGeometry
 from repro.core.stencils import Stencil
+from repro.kernels.builder import superstep_chain
 
 
-def _kernel(steps_ref, coeff_ref, gp_ref, aux_ref, out_ref,
-            win_ref, in_buf, in_sems, aux_win, aux_buf, aux_sems,
-            out_buf, out_sems,
-            *, stencil: Stencil, geom: BlockGeometry, ns: int, dom: int,
-            dimy: int, dimx: int, bc=None):
-    T, rad, V = geom.par_time, geom.rad, geom.par_vec
-    R = geom.slab_lag
-    W = geom.win_slots
-    BY, BX = geom.bsize
-    CSY, CSX = geom.csize
-    h = geom.size_halo
-    HA = T * R + 1
-    nslabs = ns // V
-    by, bx = pl.program_id(0), pl.program_id(1)
-    ys, xs = by * CSY, bx * CSX
-    nticks = nslabs + T * R
-    steps = steps_ref[0, 0]
-    kind_s = "clamp" if bc is None else bc.kinds[0]
-    kind_y = "clamp" if bc is None else bc.kinds[1]
-    kind_x = "clamp" if bc is None else bc.kinds[2]
-    fill = 0.0 if bc is None else bc.value
-    iv = jax.lax.iota(jnp.int32, V)          # plane offsets within a slab
-
-    coeffs = {name: coeff_ref[0, i]
-              for i, name in enumerate(stencil.coeff_names)}
-
-    # --- (y, x) boundary re-imposition: only grid-edge blocks act -----------
-    # Per-axis dispatch mirrors stencil2d.reclamp_x: clamp overwrites the
-    # out-of-grid band with the edge row/col, reflect with the mirrored one
-    # (flip+roll), constant with the fill scalar; periodic skips (wrap-padded
-    # halos are exact translated copies, covered by garbage creep).
-    lo_y, hi_y = h - ys, (dimy - 1) + h - ys
-    lo_x, hi_x = h - xs, (dimx - 1) + h - xs
-    iota_y = jax.lax.broadcasted_iota(jnp.int32, (V, BY, BX), 1)
-    iota_x = jax.lax.broadcasted_iota(jnp.int32, (V, BY, BX), 2)
-
-    def _reimpose_axis(slab, kind, axis, n, lo, hi, iota):
-        if kind == "periodic":
-            return slab
-        if kind == "constant":
-            slab = jnp.where(iota < lo, fill, slab)
-            return jnp.where(iota > hi, fill, slab)
-        if kind == "reflect":
-            flipped = jnp.flip(slab, axis=axis)
-            mlo = jnp.roll(flipped, 2 * lo + 1 - n, axis=axis)
-            mhi = jnp.roll(flipped, 2 * hi + 1 - n, axis=axis)
-            slab = jnp.where(iota < lo, mlo, slab)
-            return jnp.where(iota > hi, mhi, slab)
-        sizes = (V, 1, BX) if axis == 1 else (V, BY, 1)
-        at = lambda p: ((0, p, 0) if axis == 1 else (0, 0, p))  # noqa: E731
-        lo_band = jax.lax.dynamic_slice(slab, at(jnp.clip(lo, 0, n - 1)),
-                                        sizes)
-        hi_band = jax.lax.dynamic_slice(slab, at(jnp.clip(hi, 0, n - 1)),
-                                        sizes)
-        slab = jnp.where(iota < lo, lo_band, slab)
-        return jnp.where(iota > hi, hi_band, slab)
-
-    def reclamp(slab):
-        slab = _reimpose_axis(slab, kind_y, 1, BY, lo_y, hi_y, iota_y)
-        return _reimpose_axis(slab, kind_x, 2, BX, lo_x, hi_x, iota_x)
-
-    # --- DMA plumbing --------------------------------------------------------
-    def in_copy(j, slot):
-        src = jnp.clip(j, 0, nslabs - 1) * V
-        return pltpu.make_async_copy(
-            gp_ref.at[pl.ds(src, V), pl.ds(ys, BY), pl.ds(xs, BX)],
-            in_buf.at[slot], in_sems.at[slot])
-
-    def aux_copy(j, slot):
-        src = jnp.clip(j, 0, nslabs - 1) * V
-        return pltpu.make_async_copy(
-            aux_ref.at[pl.ds(src, V), pl.ds(ys, BY), pl.ds(xs, BX)],
-            aux_buf.at[slot], aux_sems.at[slot])
-
-    def out_copy(j, slot):
-        return pltpu.make_async_copy(
-            out_buf.at[slot],
-            out_ref.at[pl.ds(j * V, V), pl.ds(ys + h, CSY),
-                       pl.ds(xs + h, CSX)],
-            out_sems.at[slot])
-
-    has_aux = aux_ref is not None
-    in_copy(0, 0).start()
-    if has_aux:
-        aux_copy(0, 0).start()
-
-    def body(k, _):
-        # Slabs past nslabs-1 are never pushed and stream taps clamp to the
-        # last pushed plane; stop the prefetch (and its matching wait) at the
-        # last real slab instead of fetching clamped re-reads out to nticks.
-        slot = k % 2
-
-        @pl.when(k <= nslabs - 1)
-        def _():
-            in_copy(k, slot).wait()
-
-        @pl.when(k + 1 <= nslabs - 1)
-        def _():
-            in_copy(k + 1, (k + 1) % 2).start()
-
-        @pl.when(k <= nslabs - 1)
-        def _():
-            win_ref[0, pl.ds((k % W) * V, V), :, :] = in_buf[slot]
-
-        if has_aux:
-            @pl.when(k <= nslabs - 1)
-            def _():
-                aux_copy(k, slot).wait()
-
-            @pl.when(k + 1 <= nslabs - 1)
-            def _():
-                aux_copy(k + 1, (k + 1) % 2).start()
-
-            @pl.when(k <= nslabs - 1)
-            def _():
-                aux_win[pl.ds((k % HA) * V, V), :, :] = aux_buf[slot]
-
-        for t in range(1, T + 1):
-            j = k - t * R
-            newest = k - (t - 1) * R
-
-            @pl.when((j >= 0) & (j <= nslabs - 1))
-            def _(t=t, j=j, newest=newest):
-                cat = jnp.concatenate(
-                    [win_ref[t - 1, pl.ds(((j + o) % W) * V, V), :, :]
-                     for o in range(-R, R + 1)], axis=0)
-                base = (j - R) * V
-                limit = jnp.minimum(newest * V + V - 1, dom - 1)
-
-                def stream_tap(dz):
-                    # stream-axis BC, per plane of the slab: clamp clips,
-                    # reflect mirrors (target stays within the window),
-                    # constant overrides with the fill; periodic is a stream
-                    # extension materialized by the wrapper (edge reads here
-                    # are garbage-tolerant clips).  See stencil2d.
-                    planes = j * V + dz + iv
-                    if kind_s == "reflect":
-                        p_ = max(2 * dom - 2, 1)
-                        m = jnp.mod(planes, p_)
-                        planes_m = jnp.where(m >= dom, p_ - m, m)
-                    else:
-                        planes_m = planes
-                    pos = jnp.clip(planes_m, 0, limit) - base
-                    vals = jnp.take(cat, pos, axis=0)
-                    if kind_s == "constant":
-                        oob = (planes < 0) | (planes > dom - 1)
-                        vals = jnp.where(oob[:, None, None], fill, vals)
-                    return vals
-
-                taps = {}
-
-                def get(off):
-                    dz, dy, dx = off
-                    tap = taps.get(off)
-                    if tap is None:
-                        tap = taps.get((dz, 0, 0))
-                        if tap is None:
-                            tap = taps[(dz, 0, 0)] = stream_tap(dz)
-                        if dy:
-                            tap = jnp.roll(tap, -dy, axis=1)
-                        if dx:
-                            tap = jnp.roll(tap, -dx, axis=2)
-                        taps[off] = tap
-                    return tap
-
-                aux_slab = None
-                if has_aux:
-                    ja = jnp.clip(j, 0, nslabs - 1)
-                    aux_slab = aux_win[pl.ds((ja % HA) * V, V), :, :]
-                val = stencil.apply(get, coeffs, aux_slab)
-                val = jnp.where(t <= steps, val, get((0, 0, 0)))  # forwarding
-                if t < T:
-                    win_ref[t, pl.ds((j % W) * V, V), :, :] = reclamp(val)
-                else:
-                    oslot = j % 2
-
-                    @pl.when(j >= 2)
-                    def _():
-                        out_copy(j - 2, oslot).wait()
-
-                    out_buf[oslot] = val[:, h:h + CSY, h:h + CSX]
-                    out_copy(j, oslot).start()
-        return 0
-
-    jax.lax.fori_loop(0, nticks, body, 0)
-
-    if nslabs >= 2:
-        out_copy(nslabs - 2, (nslabs - 2) % 2).wait()
-    out_copy(nslabs - 1, (nslabs - 1) % 2).wait()
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("stencil", "geom", "interpret", "bc",
-                                    "block_parallel"))
 def superstep_3d(stencil: Stencil, geom: BlockGeometry, gp: jnp.ndarray,
                  coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
                  aux_p: Optional[jnp.ndarray] = None,
                  interpret: bool = True, bc=None,
                  block_parallel: bool = False) -> jnp.ndarray:
-    ns, nyp, nxp = gp.shape
-    T, V = geom.par_time, geom.par_vec
-    W = geom.win_slots
-    HA = T * geom.slab_lag + 1
-    BY, BX = geom.bsize
-    CSY, CSX = geom.csize
-    dimy, dimx = geom.blocked_dims
-    dom = geom.stream_dim + 2 * stream_extension(geom, bc)
-    if ns != geom.stream_slabs(dom) * V:
-        raise ValueError(
-            f"padded stream extent {ns} != ceil({dom}/{V})*{V} "
-            f"= {geom.stream_slabs(dom) * V}: the wrapper must pad the "
-            f"stream axis to a slab multiple (kernels/ops._pad_blocked)")
-
-    kernel = functools.partial(_kernel, stencil=stencil, geom=geom,
-                               ns=ns, dom=dom, dimy=dimy, dimx=dimx, bc=bc)
-    scratch = [
-        pltpu.VMEM((T, W * V, BY, BX), jnp.float32),
-        pltpu.VMEM((2, V, BY, BX), jnp.float32),
-        pltpu.SemaphoreType.DMA((2,)),
-        pltpu.VMEM((HA * V, BY, BX), jnp.float32) if stencil.has_aux else None,
-        pltpu.VMEM((2, V, BY, BX), jnp.float32) if stencil.has_aux else None,
-        pltpu.SemaphoreType.DMA((2,)) if stencil.has_aux else None,
-        pltpu.VMEM((2, V, CSY, CSX), jnp.float32),
-        pltpu.SemaphoreType.DMA((2,)),
-    ]
-    if not stencil.has_aux:
-        scratch = [s for s in scratch if s is not None]
-
-        def kernel_noaux(steps_ref, coeff_ref, gp_ref, out_ref,
-                         win_ref, in_buf, in_sems, out_buf, out_sems):
-            return _kernel(steps_ref, coeff_ref, gp_ref, None, out_ref,
-                           win_ref, in_buf, in_sems, None, None, None,
-                           out_buf, out_sems, stencil=stencil, geom=geom,
-                           ns=ns, dom=dom, dimy=dimy, dimx=dimx, bc=bc)
-        kernel = kernel_noaux
-
-    n_hbm_in = 2 if stencil.has_aux else 1
-    operands = (coeffs_packed.reshape(1, -1), gp) + (
-        (aux_p,) if stencil.has_aux else ())
-    steps_arr = jnp.asarray(steps, jnp.int32).reshape(1, 1)
-    return pl.pallas_call(
-        kernel,
-        grid=(geom.bnum[0], geom.bnum[1]),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
-                  pl.BlockSpec(memory_space=pltpu.VMEM)]
-        + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=scratch,
-        out_shape=jax.ShapeDtypeStruct((ns, nyp, nxp), jnp.float32),
-        interpret=interpret,
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=(
-                ("parallel", "parallel") if block_parallel
-                else ("arbitrary", "arbitrary"))),
-    )(steps_arr, *operands)
+    """One super-step (<= par_time fused time-steps) over the padded grid —
+    the single-stage 3D chain (see :func:`repro.kernels.builder.superstep_chain`)."""
+    return superstep_chain(((stencil, bc),), geom, gp, coeffs_packed, steps,
+                           aux_p, interpret=interpret,
+                           block_parallel=block_parallel)

@@ -1,0 +1,236 @@
+"""Multi-stage stencil programs — chained operators fused into one super-step.
+
+The paper's PE chain (§3.2) fuses ``par_time`` temporal iterations of *one*
+operator; StencilFlow (arXiv:2010.15218) observes that a linear chain of
+*dependent* stencil stages maps onto exactly the same structure — a stage
+boundary is just another temporal step with a different stencil and
+coefficients, so intermediates never round-trip external memory.  This module
+is the declarative half of that idea:
+
+  * :class:`StencilStage` — one operator application: a stencil plus optional
+    per-stage coefficient overrides and an optional per-stage boundary
+    condition.
+  * :class:`StencilProgram` — a validated linear chain of stages (the
+    DAG-ready representation: today a path graph, by construction).
+
+A ``StencilProgram`` is accepted everywhere a bare stencil is today
+(``StencilProblem(stencil=...)``): one *iteration* of the problem applies the
+stages in order, and a program of S stages at temporal depth ``par_time=T``
+unrolls to ``S*T`` chained PE stages per super-step.  Aggregate properties
+(``radius`` = per-iteration halo growth = sum of stage radii, ``flop_pcu`` =
+sum, ...) duck-type the :class:`~repro.core.stencils.Stencil` bookkeeping the
+geometry/perf-model layers read, so the whole planning stack prices the
+heterogeneous chain without special cases.
+
+Per-stage boundary conditions: each stage's *input* is read under that
+stage's BC (defaulting to the problem-level one).  The periodic/non-periodic
+split per axis must be uniform across stages — periodicity is structural
+(wrap-padding layout, the materialized stream extension, the distributed
+ring exchange), while the local kinds (clamp/reflect/constant) are
+re-imposed per sub-step and may differ freely between stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core.boundary import BCSpec, BoundaryCondition
+from repro.core.stencils import STENCILS, Stencil
+
+
+def _freeze_coeffs(coeffs) -> Optional[Tuple[Tuple[str, float], ...]]:
+    """Normalize a stage's static coefficient overrides to a hashable,
+    order-independent tuple (stages live inside jit static arguments)."""
+    if coeffs is None:
+        return None
+    if isinstance(coeffs, tuple):   # already frozen (dataclasses.replace
+        items = coeffs              # re-runs __post_init__): idempotent
+    elif isinstance(coeffs, Mapping):
+        items = coeffs.items()
+    else:
+        raise TypeError(f"stage coeffs must be a mapping, got "
+                        f"{type(coeffs).__name__}")
+    return tuple(sorted((str(k), float(v)) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilStage:
+    """One stage of a program: stencil + optional coeffs/BC overrides.
+
+    Parameters
+    ----------
+    stencil:
+        A :class:`~repro.core.stencils.Stencil` or a registered name.
+    coeffs:
+        Optional static scalar coefficient overrides for this stage, merged
+        over :func:`~repro.core.stencils.default_coeffs` at run time (and
+        under any per-run ``coeffs`` handed to ``StencilPlan.run``).  Keys
+        must be coefficient names of the stencil.
+    boundary:
+        Optional per-stage boundary condition (same specs as
+        ``StencilProblem.boundary``); ``None`` inherits the problem-level BC.
+        Normalized to a :class:`~repro.core.boundary.BoundaryCondition` when
+        the owning problem resolves the program.
+    name:
+        Optional label for reports; defaults to the stencil name.
+    """
+    stencil: Union[Stencil, str]
+    coeffs: Optional[Mapping] = None
+    boundary: Optional[BCSpec] = None
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        st = self.stencil
+        if isinstance(st, str):
+            if st not in STENCILS:
+                raise ValueError(f"unknown stencil {st!r}; "
+                                 f"registered: {sorted(STENCILS)}")
+            st = STENCILS[st]
+            object.__setattr__(self, "stencil", st)
+        elif not isinstance(st, Stencil):
+            raise TypeError(f"stage stencil must be a Stencil or name, got "
+                            f"{type(st).__name__}")
+        frozen = _freeze_coeffs(self.coeffs)
+        if frozen:
+            unknown = [k for k, _ in frozen if k not in st.coeff_names]
+            if unknown:
+                raise ValueError(
+                    f"stage coeffs {unknown} are not coefficients of "
+                    f"{st.name} (has {list(st.coeff_names)})")
+        object.__setattr__(self, "coeffs", frozen)
+        # a sequence BC spec must be hashable for jit-static stages
+        if isinstance(self.boundary, list):
+            object.__setattr__(self, "boundary", tuple(self.boundary))
+        if self.name is None:
+            object.__setattr__(self, "name", st.name)
+
+    @property
+    def bc(self) -> Optional[BoundaryCondition]:
+        """The stage BC if already normalized (a resolved program), else
+        whatever raw spec was given (``None`` = inherit)."""
+        b = self.boundary
+        return b if isinstance(b, BoundaryCondition) or b is None else None
+
+
+#: anything :func:`StencilProgram.make` accepts as one stage
+StageLike = Union[StencilStage, Stencil, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProgram:
+    """A validated linear chain of :class:`StencilStage`.
+
+    One *iteration* applies the stages in order (stage ``i+1`` consumes stage
+    ``i``'s output); the fused backends run the whole chain — all stages ×
+    all ``par_time`` iterations of a super-step — without materializing any
+    intermediate in HBM.
+
+    Duck-types the ``Stencil`` bookkeeping the planning layers read:
+    ``radius`` (per-iteration halo growth: the *sum* of stage radii —
+    geometry's ``rad``), ``flop_pcu`` (sum), ``num_read``/``num_write``
+    (external streams of the fused chain: one grid in, one out, plus aux),
+    ``has_aux`` (any stage), ``ndim``, ``name``.
+    """
+    stages: Tuple[StencilStage, ...]
+
+    def __post_init__(self):
+        stages = tuple(
+            s if isinstance(s, StencilStage) else StencilStage(s)
+            for s in self.stages)
+        if not stages:
+            raise ValueError("a StencilProgram needs at least one stage")
+        nd = stages[0].stencil.ndim
+        for s in stages:
+            if s.stencil.ndim != nd:
+                raise ValueError(
+                    f"all stages must share a rank: got {nd}D and "
+                    f"{s.stencil.ndim}D ({s.name})")
+        object.__setattr__(self, "stages", stages)
+
+    # --- construction -------------------------------------------------------
+    @classmethod
+    def make(cls, spec: Union["StencilProgram", StageLike,
+                              Sequence[StageLike]]) -> "StencilProgram":
+        """Normalize anything stage-like into a program: a program (as-is),
+        a single stencil/name/stage, or a sequence of them."""
+        if isinstance(spec, StencilProgram):
+            return spec
+        if isinstance(spec, (StencilStage, Stencil, str)):
+            return cls((spec if isinstance(spec, StencilStage)
+                        else StencilStage(spec),))
+        if isinstance(spec, Sequence):
+            return cls(tuple(s if isinstance(s, StencilStage)
+                             else StencilStage(s) for s in spec))
+        raise TypeError(f"cannot build a StencilProgram from "
+                        f"{type(spec).__name__}")
+
+    def resolved(self, default_boundary: BCSpec,
+                 shape: Tuple[int, ...]) -> "StencilProgram":
+        """Program with every stage's BC normalized to a
+        :class:`BoundaryCondition` (``None`` -> the problem default) and
+        validated: per-axis periodicity must be uniform across stages."""
+        nd = self.ndim
+        default_bc = BoundaryCondition.make(default_boundary, nd)
+        out = []
+        for s in self.stages:
+            bc = (default_bc if s.boundary is None
+                  else BoundaryCondition.make(s.boundary, nd))
+            bc.validate_shape(shape)
+            out.append(dataclasses.replace(s, boundary=bc))
+        for ax in range(nd):
+            per = {s.boundary.kinds[ax] == "periodic" for s in out}
+            if len(per) > 1:
+                raise ValueError(
+                    f"axis {ax}: stages mix periodic and non-periodic BCs "
+                    f"({[s.boundary.kinds[ax] for s in out]}) — periodicity "
+                    "is structural (wrap layout / stream extension / ring "
+                    "exchange) and must be uniform across a program's stages")
+        return StencilProgram(tuple(out))
+
+    # --- container protocol -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def __iter__(self):
+        return iter(self.stages)
+
+    # --- Stencil duck-typed aggregates (what geometry/perf-model read) ------
+    @property
+    def ndim(self) -> int:
+        return self.stages[0].stencil.ndim
+
+    @property
+    def name(self) -> str:
+        if len(self.stages) == 1:
+            return self.stages[0].stencil.name
+        return "program(" + "+".join(s.name for s in self.stages) + ")"
+
+    @property
+    def stage_radii(self) -> Tuple[int, ...]:
+        return tuple(s.stencil.radius for s in self.stages)
+
+    @property
+    def radius(self) -> int:
+        """Per-iteration halo growth of the chain: one iteration applies
+        every stage, so the dependency cone widens by the *sum* of stage
+        radii — this is the ``rad`` that sizes ``size_halo = rad*par_time``."""
+        return sum(self.stage_radii)
+
+    @property
+    def flop_pcu(self) -> int:
+        return sum(s.stencil.flop_pcu for s in self.stages)
+
+    @property
+    def has_aux(self) -> bool:
+        return any(s.stencil.has_aux for s in self.stages)
+
+    @property
+    def num_read(self) -> int:
+        """External input streams of the *fused* chain per cell update
+        column: the stage-0 grid plus (if any stage needs it) the aux
+        stream.  Intermediates never touch external memory."""
+        return 1 + (1 if self.has_aux else 0)
+
+    @property
+    def num_write(self) -> int:
+        return 1
