@@ -34,8 +34,9 @@ from pathlib import Path
 import jax
 
 from repro.api import RunConfig, StencilProblem, StencilStage, plan
-from repro.core.stencils import make_star
+from repro.core.stencils import make_combine, make_star
 from repro.data import make_stencil_inputs
+from repro.programs import StencilProgram
 
 
 def _advect2d():
@@ -64,6 +65,42 @@ FULL_CASES = {
                         lambda: _damp(2)], (512, 1024), 4, 512),
     "diffuse3_2d": ([lambda: StencilStage("diffusion2d")] * 3,
                     (512, 1024), 2, 512),
+}
+
+
+def _wave2d_program():
+    """Second-order wave equation: the canonical DAG program — two fields
+    (``u``, ``u_prev``), a Laplacian stage fanned into a 3-way combine,
+    both fields rotated simultaneously each iteration."""
+    return StencilProgram(
+        (StencilStage(make_star(2, 1), name="lapu", inputs=("u",)),
+         StencilStage(make_combine(2, 3), name="unext",
+                      inputs=("u", "u_prev", "lapu"),
+                      coeffs={"w0": 2.0, "w1": -1.0, "w2": 0.1})),
+        fields=("u", "u_prev"),
+        updates={"u": "unext", "u_prev": "u"})
+
+
+def _diamond_program():
+    """Fan-out / fan-in: two radius-1 views of ``u`` recombined — exercises
+    the per-edge window sizing the DAG unroll prices."""
+    s = make_star(2, 1)
+    return StencilProgram(
+        (StencilStage(s, name="a", inputs=("u",)),
+         StencilStage(s, name="b", inputs=("u",),
+                      coeffs={"c0": 0.5, "c_0_1": 0.2}),
+         StencilStage(make_combine(2, 2), name="m", inputs=("a", "b"),
+                      coeffs={"w0": 0.6, "w1": 0.4})))
+
+
+#: name -> (program thunk, dims, par_time, bsize)
+DAG_SMOKE_CASES = {
+    "wave2d": (_wave2d_program, (96, 256), 2, 256),
+    "diamond2d": (_diamond_program, (96, 256), 2, 256),
+}
+DAG_FULL_CASES = {
+    "wave2d": (_wave2d_program, (512, 1024), 4, 512),
+    "diamond2d": (_diamond_program, (512, 1024), 2, 512),
 }
 
 
@@ -117,17 +154,45 @@ def bench_case(backend, name, stages, dims, par_time, bsize, warmup,
     }
 
 
-def check_regression(rows, baseline_path: Path, max_regression: float):
+def bench_dag_case(backend, name, build, dims, par_time, bsize, warmup,
+                   repeats):
+    """One fused super-step of a DAG program (no unfused rendition exists:
+    a DAG's intermediates are not expressible as chained single-stage
+    plans).  Gated on fused per-cell time alone."""
+    problem = StencilProblem(build(), dims)
+    fused = plan(problem, RunConfig(backend=backend, par_time=par_time,
+                                    bsize=bsize))
+    key = jax.random.PRNGKey(0)
+    state = jax.random.uniform(key, problem.state_shape, minval=0.5,
+                               maxval=2.0)
+
+    def run_fused():
+        return fused.run(state, par_time)           # one super-step
+
+    s_fused = _time_call(run_fused, warmup, repeats)
+    cells = math.prod(dims) * par_time              # program iterations
+    return {
+        "program": name, "n_stages": len(problem.stages),
+        "n_fields": len(problem.fields),
+        "dims": list(dims), "par_time": par_time, "bsize": bsize,
+        "s_per_superstep": s_fused,
+        "ns_per_cell": s_fused / cells * 1e9,
+        "gcells_s": cells / s_fused / 1e9,
+    }
+
+
+def check_regression(rows, baseline_path: Path, max_regression: float,
+                     section: str = "program_rows"):
     """Fused per-cell time of every (program, par_time) row vs the
-    baseline's ``program_rows``.  Returns failure strings (empty = pass)."""
+    baseline's ``section``.  Returns failure strings (empty = pass)."""
     try:
         base = json.loads(baseline_path.read_text())
     except (OSError, ValueError) as e:
         return [f"baseline {baseline_path} unreadable: {e}"]
     by_key = {(r["program"], r["par_time"]): r
-              for r in base.get("program_rows", [])}
+              for r in base.get(section, [])}
     if not by_key:
-        return [f"baseline {baseline_path} has no program_rows section — "
+        return [f"baseline {baseline_path} has no {section} section — "
                 "regenerate it with --update-baseline"]
     failures = []
     for r in rows:
@@ -148,18 +213,21 @@ def check_regression(rows, baseline_path: Path, max_regression: float):
     return failures
 
 
-def update_baseline(rows, baseline_path: Path) -> None:
-    """Write/refresh the ``program_rows`` section, preserving whatever else
-    (kernel/throughput rows) the shared baseline file holds."""
+def update_baseline(rows, baseline_path: Path, dag_rows=None) -> None:
+    """Write/refresh the ``program_rows`` (and ``program_dag_rows``)
+    sections, preserving whatever else (kernel/throughput rows) the shared
+    baseline file holds."""
     try:
         base = json.loads(baseline_path.read_text())
     except (OSError, ValueError):
         base = {}
     base["program_rows"] = rows
+    if dag_rows is not None:
+        base["program_dag_rows"] = dag_rows
     baseline_path.parent.mkdir(parents=True, exist_ok=True)
     baseline_path.write_text(json.dumps(base, indent=1, sort_keys=True)
                              + "\n")
-    print(f"updated program_rows in {baseline_path}")
+    print(f"updated program_rows/program_dag_rows in {baseline_path}")
 
 
 def main(argv=None) -> int:
@@ -195,6 +263,16 @@ def main(argv=None) -> int:
               f"x{r['fusion_speedup']:6.2f} {r['gcells_s']:8.4f}")
         assert r["intermediate_hbm_bytes_per_superstep"] == 0
 
+    dag_cases = DAG_SMOKE_CASES if args.smoke else DAG_FULL_CASES
+    dag_rows = []
+    for name, (build, dims, par_time, bsize) in dag_cases.items():
+        r = bench_dag_case(args.backend, name, build, dims, par_time, bsize,
+                           args.warmup, args.repeats)
+        dag_rows.append(r)
+        print(f"{r['program']:18s} {str(tuple(r['dims'])):>12s} "
+              f"{r['par_time']:2d} {r['s_per_superstep'] * 1e3:9.2f} "
+              f"{'(dag)':>10s} {'':>7s} {r['gcells_s']:8.4f}")
+
     out = {
         "schema": 1,
         "mode": "smoke" if args.smoke else "full",
@@ -202,6 +280,7 @@ def main(argv=None) -> int:
         "platform": jax.default_backend(),
         "backend": args.backend,
         "rows": rows,
+        "dag_rows": dag_rows,
     }
     out_path = Path(args.out)
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -209,11 +288,14 @@ def main(argv=None) -> int:
     print(f"wrote {out_path}")
 
     if args.update_baseline:
-        update_baseline(rows, Path(args.update_baseline))
+        update_baseline(rows, Path(args.update_baseline), dag_rows)
         return 0
     if args.baseline:
         failures = check_regression(rows, Path(args.baseline),
                                     args.max_regression)
+        failures += check_regression(dag_rows, Path(args.baseline),
+                                     args.max_regression,
+                                     section="program_dag_rows")
         if failures:
             print("PERF REGRESSION:\n  " + "\n  ".join(failures),
                   file=sys.stderr)

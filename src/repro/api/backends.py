@@ -257,8 +257,22 @@ def _vmapped_program(kind: str, problem, config, key_geom,
     return BackendProgram(execute, execute_batch)
 
 
+def _dag_coeffs(coeffs):
+    """Normalize the plan's coefficient payload for the DAG executors: a
+    single-stage DAG program gets a bare dict from ``_coeff_payload`` (the
+    legacy contract) — the executors always take one dict per stage."""
+    return coeffs if isinstance(coeffs, tuple) else (coeffs,)
+
+
 def _reference_backend(problem, config, geom):
-    if problem.n_stages > 1:
+    if problem.is_dag:
+        from repro.kernels.ref import oracle_dag_run
+        dag = problem.exec_dag
+
+        def body(grid, coeffs, iters, aux):
+            _note_trace("reference")
+            return oracle_dag_run(dag, grid, _dag_coeffs(coeffs), iters, aux)
+    elif problem.n_stages > 1:
         from repro.kernels.ref import oracle_program_run
         stages = problem.exec_stages
 
@@ -278,7 +292,15 @@ def _reference_backend(problem, config, geom):
 
 
 def _engine_backend(problem, config, geom):
-    if problem.n_stages > 1:
+    if problem.is_dag:
+        from repro.core.engine import superstep_loop_dag
+        dag = problem.exec_dag
+
+        def body(grid, coeffs, iters, aux):
+            _note_trace("engine")
+            return superstep_loop_dag(dag, geom, grid, _dag_coeffs(coeffs),
+                                      iters, aux)
+    elif problem.n_stages > 1:
         from repro.core.engine import superstep_loop_chain
         stages = problem.exec_stages
 
@@ -299,8 +321,9 @@ def _engine_backend(problem, config, geom):
 
 def _make_pallas_backend(force_interpret: bool):
     def factory(problem, config, geom):
-        from repro.kernels.ops import (fused_chain_loop, fused_superstep_loop,
-                                       pack_coeffs, pack_program_coeffs,
+        from repro.kernels.ops import (fused_chain_loop, fused_dag_loop,
+                                       fused_superstep_loop, pack_coeffs,
+                                       pack_dag_coeffs, pack_program_coeffs,
                                        _pad_blocked)
         # plan-time validation (satellite bugfix): fail before any execute,
         # and say what IS supported
@@ -320,7 +343,17 @@ def _make_pallas_backend(force_interpret: bool):
         mc = config.block_parallel
         extra = ("donate", donate, "mc", mc)
 
-        if problem.n_stages > 1:
+        if problem.is_dag:
+            dag = problem.exec_dag
+
+            def run_loop(gp, coeffs_packed, iters, aux_p):
+                return fused_dag_loop(dag, geom, gp, coeffs_packed,
+                                      iters, aux_p, interpret,
+                                      block_parallel=mc)
+
+            def pack(coeffs):
+                return pack_dag_coeffs(dag, _dag_coeffs(coeffs))
+        elif problem.n_stages > 1:
             stages = problem.exec_stages
 
             def run_loop(gp, coeffs_packed, iters, aux_p):
@@ -429,7 +462,9 @@ def _distributed_backend(problem, config, geom):
             batch=batch, aux_batched=aux_batched,
             trace_hook=lambda: _note_trace("distributed"),
             bc=problem.structural_bc,
-            stages=problem.exec_stages if problem.n_stages > 1 else None)
+            stages=(problem.exec_stages
+                    if problem.n_stages > 1 and not problem.is_dag else None),
+            dag=problem.exec_dag if problem.is_dag else None)
 
     def execute(grid, coeffs, iters, aux=None):
         # built lazily on first call (not at plan time): plan() must stay

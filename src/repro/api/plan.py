@@ -244,12 +244,14 @@ class StencilPlan:
         overlaid with any per-stage overrides; pass a dict (single-stage
         problems) or a sequence of per-stage dicts/None (programs) to
         override at run time.  ``aux`` is the Hotspot ``power`` grid
-        (required iff any stage has an aux stream).  The plan is reusable:
-        call ``run`` any number of times, with any ``iters``."""
+        (required iff any stage has an aux stream).  Multi-field programs
+        take (and return) the ``(n_fields, *shape)`` field stack —
+        ``problem.state_shape`` — fields in declaration order.  The plan is
+        reusable: call ``run`` any number of times, with any ``iters``."""
         grid = jnp.asarray(grid, self.problem.jnp_dtype)
-        if tuple(grid.shape) != self.problem.shape:
-            raise ValueError(f"grid shape {grid.shape} != problem shape "
-                             f"{self.problem.shape}")
+        if tuple(grid.shape) != self.problem.state_shape:
+            raise ValueError(f"grid shape {grid.shape} != problem state "
+                             f"shape {self.problem.state_shape}")
         iters = int(iters)
         if iters < 0:
             raise ValueError(f"iters must be >= 0, got {iters}")
@@ -293,8 +295,8 @@ class StencilPlan:
         a batched entry point fall back to a per-element loop (correct, not
         fast)."""
         grids = jnp.asarray(grids, self.problem.jnp_dtype)
-        shape = self.problem.shape
-        if grids.ndim != self.problem.ndim + 1 \
+        shape = self.problem.state_shape
+        if grids.ndim != len(shape) + 1 \
                 or tuple(grids.shape[1:]) != shape:
             raise ValueError(f"run_batch needs grids of shape (B, *{shape}); "
                              f"got {tuple(grids.shape)}")
@@ -309,10 +311,12 @@ class StencilPlan:
                 raise ValueError(f"{self.problem.stencil.name} needs an aux "
                                  "(power) grid")
             aux = jnp.asarray(aux, self.problem.jnp_dtype)
-            if tuple(aux.shape) not in (shape, tuple(grids.shape)):
+            aux_ok = (self.problem.shape,
+                      (grids.shape[0],) + self.problem.shape)
+            if tuple(aux.shape) not in aux_ok:
                 raise ValueError(
-                    f"aux shape {tuple(aux.shape)} must be {shape} (shared) "
-                    f"or {tuple(grids.shape)} (per-batch)")
+                    f"aux shape {tuple(aux.shape)} must be {aux_ok[0]} "
+                    f"(shared) or {aux_ok[1]} (per-batch)")
         elif aux is not None:
             raise ValueError(f"{self.problem.stencil.name} takes no aux grid")
         if iters == 0:
@@ -363,7 +367,9 @@ class StencilPlan:
             "par_vec": geom.par_vec,
             "vmem_bytes": geom.vmem_bytes(
                 cb, st.has_aux,
-                stage_radii=getattr(st, "stage_radii", None)),
+                stage_radii=getattr(st, "stage_radii", None),
+                dag_info=(st.dag_vmem_info(geom.par_time, geom.par_vec)
+                          if hasattr(st, "dag_vmem_info") else None)),
         }
         n_stages = self.problem.n_stages
         if n_stages > 1:

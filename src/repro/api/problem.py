@@ -86,7 +86,8 @@ class StencilProblem:
         if isinstance(st, StencilProgram):
             # resolve per-stage BCs against the problem default + shape
             program = st.resolved(bc, shape)
-            if (len(program) == 1 and program.stages[0].coeffs is None
+            if (len(program) == 1 and program.is_linear
+                    and program.stages[0].coeffs is None
                     and program.stages[0].boundary == bc):
                 # a plain single stage IS the legacy problem — normalize
                 # `stencil` back to the bare Stencil (exact old behavior,
@@ -143,6 +144,34 @@ class StencilProblem:
         and the halo exchange (per-axis periodicity is uniform across
         stages; equals :attr:`bc` for non-program problems)."""
         return self.stages[0].boundary
+
+    @property
+    def is_dag(self) -> bool:
+        """True when the program is a general DAG (multi-field state, fan-in/
+        fan-out, or non-default wiring) — the backends then route through the
+        topological DAG executors instead of the linear chain fast path."""
+        return not self._program.is_linear
+
+    @property
+    def fields(self) -> Tuple[str, ...]:
+        """The program's external field names (``("u",)`` for plain
+        problems)."""
+        return self._program.fields
+
+    @property
+    def state_shape(self) -> Tuple[int, ...]:
+        """Shape of the array ``run()`` takes: the plain grid ``shape`` for
+        single-field problems, ``(n_fields, *shape)`` for multi-field
+        programs (field axis leading, fields in declaration order)."""
+        F = len(self._program.fields)
+        return ((F,) + self.shape) if F > 1 else self.shape
+
+    @property
+    def exec_dag(self):
+        """The resolved program's static :class:`~repro.programs.DagSpec` —
+        what the DAG executors (oracle / engine / kernel builder /
+        distributed) take."""
+        return self._program.dag
 
     def resolve_coeffs(self, coeffs=None, dtype=None) -> Tuple[dict, ...]:
         """Per-stage coefficient dicts: stencil defaults, overlaid with each

@@ -73,7 +73,10 @@ def stencil_fingerprint(st) -> str:
     A multi-stage :class:`~repro.programs.StencilProgram` fingerprints as
     the ordered chain of its stages — each stage's stencil fingerprint plus
     its static coefficient overrides and per-stage BC — so two programs
-    collide only when they compute the same thing."""
+    collide only when they compute the same thing.  DAG wiring (explicit
+    ``inputs=``, extra ``fields=``, ``updates=``) folds in only when
+    present, so every pre-DAG linear program keeps its exact historical
+    fingerprint (cached schedules stay valid)."""
     if hasattr(st, "stages"):    # StencilProgram
         h = hashlib.sha1()
         for s in st.stages:
@@ -81,11 +84,17 @@ def stencil_fingerprint(st) -> str:
                     else repr(s.boundary))
             h.update(stencil_fingerprint(s.stencil).encode())
             h.update(repr((s.name, s.coeffs, btok)).encode())
+            if s.inputs is not None:
+                h.update(repr(("inputs", s.inputs)).encode())
+        if st.fields != ("u",) or st.updates is not None:
+            h.update(repr(("state", st.fields, st.updates)).encode())
         return h.hexdigest()[:8]
     h = hashlib.sha1()
     h.update(repr((st.ndim, st.radius, st.flop_pcu, st.num_read,
                    st.num_write, st.has_aux, st.coeff_names,
                    st.offsets)).encode())
+    if getattr(st, "arity", 1) != 1:
+        h.update(repr(("arity", st.arity)).encode())
     code = getattr(st.apply, "__code__", None)
     if code is not None:
         h.update(code.co_code)

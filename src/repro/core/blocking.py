@@ -144,7 +144,8 @@ class BlockGeometry:
     # --- VMEM working set of the streaming kernels (bytes) ------------------
     def vmem_bytes(self, cell_bytes: int = 4, has_aux: bool = False,
                    double_buffer: bool = True,
-                   stage_radii: Sequence[int] | None = None) -> int:
+                   stage_radii: Sequence[int] | None = None,
+                   dag_info: tuple | None = None) -> int:
         """Rolling-window footprint of the Pallas kernel for this geometry,
         **as Mosaic tiles it**: the second-to-last dim of every VMEM buffer
         is padded to a multiple of 8 sublanes (f32 (8, 128) tiling), so a
@@ -163,13 +164,31 @@ class BlockGeometry:
         multi-stage :class:`~repro.programs.StencilProgram`'s heterogeneous
         chain; ``None`` is the classic single-operator chain (``rad`` per
         entry).
+
+        ``dag_info`` prices a general DAG program instead: a
+        ``(win_slots, n_in, n_out, aux_slabs)`` tuple from
+        :meth:`~repro.programs.StencilProgram.dag_vmem_info`.  ``win_slots``
+        enumerates every live value-node window's depth (in V-slabs) over
+        the *already unrolled* graph — per-edge consumer reach, not the
+        chain's uniform ``2*lag+1`` — so no ``par_time`` multiplier applies;
+        ``n_in``/``n_out`` count the external field streams each needing
+        their own DMA slabs; ``aux_slabs`` is the aux window depth (0 = no
+        aux).
         """
         V = self.par_vec
         db = 2 if double_buffer else 1
-        radii = tuple(stage_radii) if stage_radii else (self.rad,)
-        lags = [-(-r // V) for r in radii]          # per program stage
-        slots = [2 * lg + 1 for lg in lags]
-        aux_slabs = sum(lags) * self.par_time + 1   # Lag_total + 1
+        if dag_info is not None:
+            slots, n_in, n_out, aux_slabs = dag_info
+            slots = [w for w in slots if w > 0]
+            pt = 1
+            has_aux = has_aux and aux_slabs > 0
+        else:
+            radii = tuple(stage_radii) if stage_radii else (self.rad,)
+            lags = [-(-r // V) for r in radii]          # per program stage
+            slots = [2 * lg + 1 for lg in lags]
+            aux_slabs = sum(lags) * self.par_time + 1   # Lag_total + 1
+            n_in = n_out = 1
+            pt = self.par_time
 
         def pad8(n: int) -> int:
             return -(-n // SUBLANE) * SUBLANE
@@ -179,25 +198,26 @@ class BlockGeometry:
 
         if self.ndim == 1:
             # 1-D buffers: the stream rows are the lane dim
-            win = self.par_time * sum(padl(w * V) for w in slots)
-            stream = db * padl(V)
-            out = db * padl(V)
-            aux = (padl(aux_slabs * V) + stream) if has_aux else 0
+            win = pt * sum(padl(w * V) for w in slots)
+            stream = db * padl(V) * n_in
+            out = db * padl(V) * n_out
+            aux = (padl(aux_slabs * V) + db * padl(V)) if has_aux else 0
         elif self.ndim == 2:
             # stream rows are the sublane dim of every buffer
             bx = self.bsize[0]
-            win = self.par_time * sum(pad8(w * V) for w in slots) * bx
-            stream = db * pad8(V) * bx
-            out = db * pad8(V) * self.csize[0]
+            win = pt * sum(pad8(w * V) for w in slots) * bx
+            stream = db * pad8(V) * bx * n_in
+            out = db * pad8(V) * self.csize[0] * n_out
             # aux = rolling window + its own DMA landing double buffer
-            aux = (pad8(aux_slabs * V) * bx + stream) if has_aux else 0
+            aux = (pad8(aux_slabs * V) * bx + db * pad8(V) * bx) \
+                if has_aux else 0
         else:
             # the blocked y extent is the sublane dim; V planes stack above
             plane = pad8(self.bsize[0]) * self.bsize[1]
-            win = self.par_time * sum(slots) * V * plane
-            stream = db * V * plane
-            out = db * V * pad8(self.csize[0]) * self.csize[1]
-            aux = (aux_slabs * V * plane + stream) if has_aux else 0
+            win = pt * sum(slots) * V * plane
+            stream = db * V * plane * n_in
+            out = db * V * pad8(self.csize[0]) * self.csize[1] * n_out
+            aux = (aux_slabs * V * plane + db * V * plane) if has_aux else 0
         return (win + stream + out + aux) * cell_bytes
 
 

@@ -41,8 +41,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.blocking import BlockGeometry
-from repro.core.engine import blocked_superstep, blocked_superstep_chain
+from repro.core.engine import (blocked_superstep, blocked_superstep_chain,
+                               blocked_superstep_dag)
 from repro.core.stencils import Stencil
+from repro.programs import DagSpec, dag_radius
 
 
 def _linear_index(axis_names: Tuple[str, ...]) -> jnp.ndarray:
@@ -145,7 +147,7 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
                          axis_map: Sequence[Optional[Tuple[str, ...]]],
                          kernel_stub: bool = False, *,
                          batch: bool = False, aux_batched: bool = False,
-                         trace_hook=None, bc=None, stages=None):
+                         trace_hook=None, bc=None, stages=None, dag=None):
     """Build the jitted multi-device runner ``fn(grid, aux, coeffs) -> grid``.
 
     Used both for real execution (tests/examples) and for the dry-run
@@ -184,6 +186,14 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
         ring topology is well-defined), and each shard runs the fused
         chain super-step locally.  ``coeffs`` then is one dict per stage;
         ``bc`` must be the program's structural (stage-0) BC.
+      * ``dag`` (general stage DAGs — see ``repro.programs``): the resolved
+        static :class:`~repro.programs.DagSpec`.  The halo width becomes the
+        DAG's *critical-path* radius × ``par_time``; per-stage BCs localize
+        like ``stages``; a multi-field program's state carries a leading
+        ``(F, ...)`` field axis that is never mesh-sharded — ONE halo
+        exchange per sharded grid axis still covers all fields (the strips
+        stack along the field axis), so temporal blocking's
+        latency-aggregation win extends unchanged to multi-field DAGs.
     """
     if isinstance(bsize, int):
         bsize = (bsize,) * (len(dims) - 1)
@@ -200,19 +210,36 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
         for names, kind in zip(axis_map, kinds))
     bc_local = None if bc is None else dataclasses.replace(
         bc, kinds=local_kinds)
-    if stages is not None:
+    def localize(bc_s):
+        return dataclasses.replace(bc_s, kinds=tuple(
+            "clamp" if (names and k == "periodic") else k
+            for names, k in zip(axis_map, bc_s.kinds)))
+
+    local_dag = None
+    n_fields = 1
+    if dag is not None:
+        if kernel_stub:
+            raise NotImplementedError(
+                "kernel_stub supports single-stage problems only")
+        # the exchange must cover the DAG's deepest dependency path per
+        # iteration, not the sum over stages (branches run in parallel)
+        rad = dag_radius(dag)
+        has_aux = any(st.has_aux for st, _, _ in dag.stages)
+        n_fields = dag.n_fields
+        # localize every stage's BC the same way (sharded periodic axes
+        # degrade to clamp under no-op bounds — the wrapped halo is exact)
+        local_dag = DagSpec(
+            stages=tuple((st, localize(bc_s), refs)
+                         for st, bc_s, refs in dag.stages),
+            n_fields=dag.n_fields, updates=dag.updates, topo=dag.topo)
+        local_stages = None
+    elif stages is not None:
         if kernel_stub:
             raise NotImplementedError(
                 "kernel_stub supports single-stage problems only")
         rad = sum(st.radius for st, _ in stages)
         has_aux = any(st.has_aux for st, _ in stages)
-        # localize every stage's BC the same way (sharded periodic axes
-        # degrade to clamp under no-op bounds — the wrapped halo is exact)
-        local_stages = tuple(
-            (st, dataclasses.replace(bc_s, kinds=tuple(
-                "clamp" if (names and k == "periodic") else k
-                for names, k in zip(axis_map, bc_s.kinds))))
-            for st, bc_s in stages)
+        local_stages = tuple((st, localize(bc_s)) for st, bc_s in stages)
     else:
         rad = stencil.radius
         has_aux = stencil.has_aux
@@ -226,8 +253,9 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
     spec = partition_spec(axis_map)
     if kernel_stub and batch:
         raise NotImplementedError("kernel_stub has no batched variant")
-    # leading batch axis is never sharded; grid axes shift right by one
-    off = 1 if batch else 0
+    # leading batch and/or field axes are never sharded; grid axes shift
+    # right by one per leading axis
+    off = (1 if batch else 0) + (1 if n_fields > 1 else 0)
 
     def local_impl(g, aux_l, coeffs_l, iters_l):
         if trace_hook is not None:
@@ -269,7 +297,14 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
                 return _superstep_stub(stencil, geom, (ext, keep), coeffs_l,
                                        steps, aux_ext if has_aux else None,
                                        bounds, bc_local)
-            if local_stages is not None:
+            if local_dag is not None:
+                cf_dag = (coeffs_l if isinstance(coeffs_l, tuple)
+                          else (coeffs_l,))
+
+                def step_local(e, a):
+                    return blocked_superstep_dag(local_dag, geom, e, cf_dag,
+                                                 steps, a, bounds)
+            elif local_stages is not None:
                 def step_local(e, a):
                     return blocked_superstep_chain(local_stages, geom, e,
                                                    coeffs_l, steps, a, bounds)
@@ -299,7 +334,7 @@ def build_distributed_fn(stencil: Stencil, dims, iters: Optional[int],
 
     aux_spec = P() if not has_aux else (
         P(None, *spec) if (batch and aux_batched) else spec)
-    grid_spec = P(None, *spec) if batch else spec
+    grid_spec = P(*((None,) * off), *spec) if off else spec
     if iters is None:
         # dynamic iters: the runner takes the count as a replicated scalar —
         # fn(grid, aux, coeffs, iters)

@@ -140,13 +140,11 @@ def _reclamp(block: jnp.ndarray, bidx, geom: BlockGeometry,
     return block
 
 
-def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
-                   aux_block, bc=None) -> jnp.ndarray:
-    """One plain stencil step on a block: exact BC-mode pad on the streaming
-    axis (the block carries the full stream extent, so wrap/reflect/constant
+def _block_getter(block: jnp.ndarray, r: int, bc=None):
+    """Neighbor getter on a block: exact BC-mode pad on the streaming axis
+    (the block carries the full stream extent, so wrap/reflect/constant
     padding IS the boundary condition there), garbage-tolerant edge-pad on
     blocked axes (halo shrinkage covers it)."""
-    r = stencil.radius
     p = boundary.pad_axis(block, 0, r, r, boundary.kinds_of(bc, 1)[0],
                           boundary.fill_of(bc))
     p = jnp.pad(p, [(0, 0)] + [(r, r)] * (block.ndim - 1), mode="edge")
@@ -155,7 +153,25 @@ def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
         idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, block.shape))
         return p[idx]
 
+    return get
+
+
+def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
+                   aux_block, bc=None) -> jnp.ndarray:
+    """One plain stencil step on a block (see :func:`_block_getter`)."""
+    get = _block_getter(block, stencil.radius, bc)
     return stencil.apply(get, coeffs, aux_block)
+
+
+def _block_substep_dag(stencil: Stencil, blocks, coeffs: dict,
+                       aux_block, bc=None) -> jnp.ndarray:
+    """One (possibly multi-input) stage application on pre-reclamped input
+    blocks: each input is read under this stage's BC; ``arity > 1`` stencils
+    receive a tuple of getters."""
+    r = stencil.radius
+    gets = [_block_getter(b, r, bc) for b in blocks]
+    return stencil.apply(tuple(gets) if stencil.arity > 1 else gets[0],
+                         coeffs, aux_block)
 
 
 @partial(jax.jit, static_argnames=("stages", "geom"))
@@ -199,6 +215,79 @@ def blocked_superstep_chain(stages, geom: BlockGeometry, grid: jnp.ndarray,
     upd = fn(blocks, aux_blocks,
              *(jnp.arange(geom.bnum[j]) for j in range(nb)))
     return stitch_blocks(upd, geom)
+
+
+@partial(jax.jit, static_argnames=("dag", "geom"))
+def blocked_superstep_dag(dag, geom: BlockGeometry, state: jnp.ndarray,
+                          stage_coeffs, steps,
+                          aux: jnp.ndarray | None = None,
+                          bounds=None) -> jnp.ndarray:
+    """Apply ``steps`` (<= par_time) fused *program iterations* of a stage
+    DAG (:class:`repro.programs.DagSpec`) via one HBM round-trip worth of
+    overlapped blocks.
+
+    ``state`` is the plain grid for single-field programs, else the
+    ``(F, *shape)`` field stack — every field is blocked identically and
+    travels through the same vmapped per-block pipeline.  Each iteration
+    evaluates the stages in topological order (every input re-reclamped
+    under the *consuming* stage's BC), then updates all fields
+    simultaneously; partial super-steps forward each field's previous value
+    (PE forwarding, generalized per field)."""
+    F = dag.n_fields
+    fields = [state[k] for k in range(F)] if F > 1 else [state]
+    bc0 = dag.stages[0][1]
+    has_aux = any(st.has_aux for st, _, _ in dag.stages)
+    fblocks = tuple(extract_blocks(g, geom, bc0) for g in fields)
+    aux_blocks = extract_blocks(aux, geom, bc0) if has_aux else None
+    nb = geom.ndim - 1
+
+    def one_block(blks, aux_block, *bidx):
+        def substep(t, cur):
+            vals: list = [None] * len(dag.stages)
+            for si in dag.topo:
+                st, bc_s, refs = dag.stages[si]
+                ins = [cur[~r] if r < 0 else vals[r] for r in refs]
+                recs = [_reclamp(x, bidx, geom, bounds, bc_s) for x in ins]
+                vals[si] = _block_substep_dag(
+                    st, recs, stage_coeffs[si],
+                    aux_block if st.has_aux else None, bc_s)
+            out = []
+            for k, u in enumerate(dag.updates):
+                if u == ~k:                  # field carried unchanged
+                    out.append(cur[k])
+                    continue
+                tgt = vals[u] if u >= 0 else cur[~u]
+                out.append(jnp.where(t < steps, tgt, cur[k]))
+            return tuple(out)
+        return jax.lax.fori_loop(0, geom.par_time, substep, blks)
+
+    aux_ax = 0 if aux_blocks is not None else None
+    fn = one_block
+    for i in range(nb - 1, -1, -1):
+        fn = jax.vmap(fn, in_axes=(0, aux_ax)
+                      + tuple(0 if j == i else None for j in range(nb)))
+    upd = fn(fblocks, aux_blocks,
+             *(jnp.arange(geom.bnum[j]) for j in range(nb)))
+    outs = [stitch_blocks(u, geom) for u in upd]
+    return jnp.stack(outs) if F > 1 else outs[0]
+
+
+def superstep_loop_dag(dag, geom: BlockGeometry, state: jnp.ndarray,
+                       stage_coeffs, iters,
+                       aux: jnp.ndarray | None = None,
+                       bounds=None) -> jnp.ndarray:
+    """Fused whole-run driver for a stage DAG — the DAG analogue of
+    :func:`superstep_loop_chain` (dynamic ``iters``, PE-forwarded partial
+    final super-step)."""
+    par_time = geom.par_time
+    n_super = (iters + par_time - 1) // par_time
+
+    def body(s, g):
+        steps = jnp.minimum(par_time, iters - s * par_time)
+        return blocked_superstep_dag(dag, geom, g, stage_coeffs, steps,
+                                     aux, bounds)
+
+    return jax.lax.fori_loop(0, n_super, body, state)
 
 
 def blocked_superstep(stencil: Stencil, geom: BlockGeometry,

@@ -199,7 +199,9 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
         gflops=total_cells * stencil.flop_pcu / run_time,
         vmem_bytes=geom.vmem_bytes(
             cell_bytes, stencil.has_aux,
-            stage_radii=getattr(stencil, "stage_radii", None)),
+            stage_radii=getattr(stencil, "stage_radii", None),
+            dag_info=(stencil.dag_vmem_info(geom.par_time, geom.par_vec)
+                      if hasattr(stencil, "dag_vmem_info") else None)),
         bound=bound, batch=batch)
 
 

@@ -43,7 +43,7 @@ def _star_offsets(ndim: int, radius: int) -> tuple:
 @dataclasses.dataclass(frozen=True)
 class Stencil:
     name: str
-    ndim: int                     # 2 or 3
+    ndim: int                     # 1, 2 or 3
     radius: int
     flop_pcu: int                 # FLOPs per cell update      (Table 2)
     num_read: int                 # external reads per update  (Table 2)
@@ -55,8 +55,14 @@ class Stencil:
     #: non-star shapes (``make_box`` diagonals) report their true footprint.
     #: Defaults to the axis-aligned star — correct for every builtin.
     offsets: tuple = ()
+    #: Number of input grids ``apply`` reads.  ``arity == 1`` (every classic
+    #: stencil) gets a single neighbor getter; ``arity > 1`` (fan-in combine
+    #: stages in a program DAG) gets a *tuple* of getters, one per input.
+    arity: int = 1
 
     def __post_init__(self):
+        if self.arity < 1:
+            raise ValueError(f"{self.name}: arity must be >= 1")
         offs = self.offsets or _star_offsets(self.ndim, self.radius)
         object.__setattr__(self, "offsets",
                            tuple(tuple(int(d) for d in o) for o in offs))
@@ -123,6 +129,33 @@ HOTSPOT3D = Stencil("hotspot3d", 3, 1, 17, 2, 1, True,
 STENCILS = {s.name: s for s in (DIFFUSION2D, DIFFUSION3D, HOTSPOT2D, HOTSPOT3D)}
 
 
+def make_combine(ndim: int, arity: int) -> Stencil:
+    """Radius-0 elementwise combine — the fan-in node of a program DAG:
+
+        out = w0*x0 + w1*x1 + ... + w_{n-1}*x_{n-1}
+
+    With appropriate weights this expresses residuals (``r = f - A@u`` via
+    ``combine(f, Au; w=(1,-1))``), time integrators (the wave equation's
+    ``2u - u_prev + c*lap``), damping, and axis splitting — StencilFlow's
+    "arithmetic nodes" (arXiv:2010.15218 §3).  ``apply`` receives a tuple of
+    neighbor getters, one per input (``arity > 1``)."""
+    if arity < 2:
+        raise ValueError("make_combine needs arity >= 2 (use make_star(nd, 0)"
+                         " for a single-input scale)")
+    names = tuple(f"w{i}" for i in range(arity))
+    center = tuple([0] * ndim)
+
+    def _apply(gets, c, aux=None):
+        out = c["w0"] * gets[0](center)
+        for i in range(1, arity):
+            out = out + c[f"w{i}"] * gets[i](center)
+        return out
+
+    return Stencil(f"combine{ndim}d_x{arity}", ndim, 0, 2 * arity - 1,
+                   arity, 1, False, names, _apply, offsets=(center,),
+                   arity=arity)
+
+
 def make_star(ndim: int, radius: int) -> Stencil:
     """Generic star stencil of arbitrary radius (paper §8 future-work: high-order).
 
@@ -151,6 +184,14 @@ def make_star(ndim: int, radius: int) -> Stencil:
     return Stencil(f"star{ndim}d_r{radius}", ndim, radius, flops, 1, 1, False,
                    tuple(names), _apply,
                    offsets=(tuple([0] * ndim),) + tuple(o for _, o in offs))
+
+
+# 1D star stencils (stream axis only, no blocked dims) — the 1D kernel entry
+# point: registered so `plan()` accepts 1D problems on every backend.
+STAR1D_R1 = make_star(1, 1)
+STAR1D_R2 = make_star(1, 2)
+STENCILS[STAR1D_R1.name] = STAR1D_R1
+STENCILS[STAR1D_R2.name] = STAR1D_R2
 
 
 def make_box(ndim: int, radius: int) -> Stencil:
@@ -202,6 +243,11 @@ def default_coeffs(stencil: Stencil, dtype=jnp.float32) -> dict:
                 "ce": jnp.asarray(k, dtype), "cw": jnp.asarray(k, dtype),
                 "ca": jnp.asarray(k, dtype), "cb": jnp.asarray(k, dtype),
                 "sdc": jnp.asarray(0.054, dtype)}
+    if stencil.name.startswith("combine"):
+        # uniform convex combination (stable: weights sum to 1)
+        n = len(stencil.coeff_names)
+        return {name: jnp.asarray(1.0 / n, dtype)
+                for name in stencil.coeff_names}
     if stencil.name.startswith("box"):
         # uniform averaging kernel (stable: coefficients sum to 1)
         n = len(stencil.coeff_names)

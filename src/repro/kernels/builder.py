@@ -1,4 +1,4 @@
-"""Rank- and stage-generic Pallas kernel builder — ONE streaming kernel.
+"""Rank- and DAG-generic Pallas kernel builder — ONE streaming kernel.
 
 This module replaces the former ``stencil2d.py``/``stencil3d.py`` twins (now
 thin compatibility shims) with a single builder that emits the combined
@@ -6,38 +6,43 @@ spatial/temporal-blocking kernel for
 
   * any grid rank with streaming axis 0 (1D: stream only; 2D: 1-D blocking
     in x; 3D: 2-D blocking in (y, x) — the paper's §3.1 layouts), and
-  * any *chain* of PE stages: ``par_time`` repeats of one stencil (the
-    classic S=1 temporal chain) or a whole multi-stage
-    :class:`~repro.programs.StencilProgram` unrolled ``par_time`` times —
-    ``S*T`` fused stages per super-step, stage boundaries being just
-    temporal steps with a different stencil/coeffs/BC (StencilFlow,
+  * any *DAG* of PE stages: ``par_time`` repeats of one stencil (the classic
+    S=1 temporal chain), a linear multi-stage
+    :class:`~repro.programs.StencilProgram` chain, or a general stage DAG —
+    fan-out, fan-in (multi-input combine stages), multi-field state —
+    topologically unrolled ``par_time`` times per super-step (StencilFlow,
     arXiv:2010.15218).  Intermediates live only in the rolling VMEM windows:
     zero HBM round-trips.
 
-Architecture (see DESIGN.md §2 and the original module docstrings, which
-this kernel reproduces op-for-op for S=1):
+Architecture (see DESIGN.md §2 and §2.5):
 
-  * one rolling circular slab window per chain entry, sized for *that*
-    entry's radius (``2*ceil(rad_i/V)+1`` slots of ``par_vec`` rows) —
-    heterogeneous radii pay only their own window;
-  * chain entry ``i`` lags the stream head by ``Lag_i = sum_{u<=i}
-    ceil(rad_u/V)`` slabs (the per-PE ``rad``-row lag of the paper,
-    generalized to per-stage radii and vector slabs);
-  * double-buffered async slab DMA in/out, prefetch stopping at the last
-    real slab; drain runs ``nslabs + Lag_total`` ticks;
-  * stream-axis BCs via per-row BC-mapped window gathers, blocked-axis BCs
-    re-imposed on every pushed slab — both per *entry* (each stage reads its
-    input under its own BC);
-  * PE forwarding for partial super-steps: with ``steps < par_time`` real
-    iterations remaining, entries ``i >= steps*S`` forward their input slab
-    unchanged.
+  * one rolling circular slab window per *producer* value (external field
+    stream or unrolled entry) that other entries consume, sized by
+    StencilFlow buffer-depth analysis (:func:`repro.programs.dag_layout`):
+    ``max over consumer edges of (Lag_c + R_c) - Lag_p + 1`` slots of
+    ``par_vec`` rows — which is the chain's ``2*ceil(rad/V)+1`` when
+    producer and consumer are adjacent, and grows by exactly the lag
+    *difference* where an edge skips levels (a diamond's short branch);
+  * fan-out is one producer window tapped by several consumers (no copies);
+    each consumer re-imposes *its own* blocked-axis BC on every slab it
+    reads, and applies its stream-axis BC in its window gathers;
+  * entry ``e`` lags the stream head by ``Lag_e = max over inputs of Lag_p
+    + R_e`` slabs (the per-PE ``rad``-row lag of the paper, generalized to
+    DAG edges and vector slabs);
+  * double-buffered async slab DMA per external field stream in, per field
+    out; prefetch stops at the last real slab; the tick loop runs ``nslabs
+    + max output lag`` ticks;
+  * partial super-steps (``steps < par_time``): linear chains fuse the
+    select into every entry (identical to the classic PE forwarding);
+    general DAGs insert radius-0 *state* nodes per updated field selecting
+    new-vs-previous value, so every field advances simultaneously and
+    un-taken iterations forward exactly.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import itertools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,51 +52,53 @@ from jax.experimental.pallas import tpu as pltpu
 from repro import compat
 
 from repro.core.blocking import BlockGeometry, stream_extension
-from repro.core.stencils import Stencil
+from repro.programs import (DagNode, DagSpec, chain_dag, dag_layout,
+                            unroll_dag)
+
+#: Compatibility alias: the multi-input generalization of the former
+#: single-input ``ChainStage`` (now carries value-id ``inputs``).
+ChainStage = DagNode
 
 
-@dataclasses.dataclass(frozen=True)
-class ChainStage:
-    """One fused PE stage of a super-step chain (static kernel metadata)."""
-    stencil: Stencil
-    bc: object                    # BoundaryCondition or None (= clamp)
-    coeff_lo: int                 # slice start into the packed coeff vector
-
-
-def unroll_chain(stages, par_time: int) -> Tuple[ChainStage, ...]:
+def unroll_chain(stages, par_time: int):
     """``stages`` (a tuple of ``(stencil, bc)`` per program stage) unrolled
-    ``par_time`` times into the per-super-step PE chain, with each stage's
-    offset into the packed coefficient vector."""
-    lo, entries = 0, []
-    for st, bc in stages:
-        entries.append(ChainStage(st, bc, lo))
-        lo += len(st.coeff_names)
-    return tuple(entries) * par_time
+    ``par_time`` times into the per-super-step PE chain — the path-graph
+    special case of :func:`repro.programs.unroll_dag`."""
+    return unroll_dag(chain_dag(stages), par_time).entries
 
 
 def _chain_lags(chain, par_vec: int):
     """Per-entry slab radius ``R_i = ceil(rad_i/V)`` and cumulative lag
-    ``Lag_i = sum_{u<=i} R_u`` (entry ``i`` computes slab ``k - Lag_i`` at
-    stream tick ``k``)."""
-    rs = [-(-e.stencil.radius // par_vec) for e in chain]
+    ``Lag_i = sum_{u<=i} R_u`` — only meaningful for linear chains (DAG lags
+    live in :func:`repro.programs.dag_layout`)."""
+    rs = [0 if e.stencil is None else -(-e.stencil.radius // par_vec)
+          for e in chain]
     return rs, list(itertools.accumulate(rs))
 
 
-def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
+def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
     nb = geom.ndim - 1                       # blocked (trailing) dims
     V = geom.par_vec
-    L = len(chain)
-    S = L // geom.par_time                   # program stages per iteration
+    F = plan.n_streams
+    multi = F > 1
+    entries = plan.entries
     BS = geom.bsize
     CS = geom.csize
     h = geom.size_halo
-    Rs, lag = _chain_lags(chain, V)
-    Ws = [2 * r + 1 for r in Rs]             # window slots feeding entry i
-    HA = (lag[-1] if L else 0) + 1           # aux window depth, in slabs
+    radii, lags, wins = lay.radii, lay.lags, lay.wins
+    HA = lay.aux_depth                       # aux window depth, in slabs
     nslabs = ns // V
-    nticks = nslabs + (lag[-1] if L else 0)
-    has_aux = any(e.stencil.has_aux for e in chain)
+    nticks = nslabs + lay.out_lag
+    has_aux = any(e.stencil is not None and e.stencil.has_aux
+                  for e in entries)
     blanks = (slice(None),) * nb
+
+    # value ids that need a rolling window, in id order (streams first)
+    win_ids = [v for v in range(F + len(entries)) if wins[v] > 0]
+    # out producers: value id -> field indices it drains to
+    out_of: dict = {}
+    for kf, o in enumerate(plan.outputs):
+        out_of.setdefault(o, []).append(kf)
 
     # --- unpack the positional refs (operands, output, scratch) -------------
     steps_ref, coeff_ref, gp_ref = refs[0], refs[1], refs[2]
@@ -100,7 +107,8 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
     if has_aux:
         aux_ref, p = refs[p], p + 1
     out_ref, p = refs[p], p + 1
-    wins, p = refs[p:p + L], p + L
+    win_refs, p = refs[p:p + len(win_ids)], p + len(win_ids)
+    win_of = dict(zip(win_ids, win_refs))
     in_buf, in_sems, p = refs[p], refs[p + 1], p + 2
     aux_win = aux_buf = aux_sems = None
     if has_aux:
@@ -116,8 +124,8 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
     # built at kernel top level: values read inside a pl.when branch must not
     # be reused by a later branch (cross-trace constants)
     cdicts = {}
-    for e in chain:
-        if e.coeff_lo not in cdicts:
+    for e in entries:
+        if e.stencil is not None and e.coeff_lo not in cdicts:
             cdicts[e.coeff_lo] = {
                 name: coeff_ref[0, e.coeff_lo + ci]
                 for ci, name in enumerate(e.stencil.coeff_names)}
@@ -125,8 +133,9 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
     def coeffs_of(entry):
         return cdicts[entry.coeff_lo]
 
-    # --- blocked-axis boundary re-imposition, per entry BC ------------------
-    # (only grid-edge blocks ever act; mirrors the former per-rank reclamps)
+    # --- blocked-axis boundary re-imposition, per consuming entry's BC ------
+    # (only grid-edge blocks ever act; applied to every slab an entry reads,
+    # so fan-out consumers each see their own BC on a shared producer)
     iotas = [jax.lax.broadcasted_iota(jnp.int32, (V,) + BS, 1 + ax)
              for ax in range(nb)]
     los = tuple(h - s for s in starts)
@@ -168,17 +177,18 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
             return slab
         return reclamp
 
-    reclamps = [reclamp_for(e.bc) for e in chain]
+    reclamps = [reclamp_for(e.bc) for e in entries]
 
     # --- DMA plumbing --------------------------------------------------------
     in_idx = tuple(pl.ds(s, b) for s, b in zip(starts, BS))
     out_idx = tuple(pl.ds(s + h, c) for s, c in zip(starts, CS))
 
-    def in_copy(j, slot):
+    def in_copy(kf, j, slot):
         src = jnp.clip(j, 0, nslabs - 1) * V
+        lead = (kf,) if multi else ()
         return pltpu.make_async_copy(
-            gp_ref.at[(pl.ds(src, V),) + in_idx],
-            in_buf.at[slot], in_sems.at[slot])
+            gp_ref.at[lead + (pl.ds(src, V),) + in_idx],
+            in_buf.at[lead + (slot,)], in_sems.at[lead + (slot,)])
 
     def aux_copy(j, slot):
         src = jnp.clip(j, 0, nslabs - 1) * V
@@ -186,31 +196,60 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
             aux_ref.at[(pl.ds(src, V),) + in_idx],
             aux_buf.at[slot], aux_sems.at[slot])
 
-    def out_copy(j, slot):
+    def out_copy(kf, j, slot):
+        lead = (kf,) if multi else ()
         return pltpu.make_async_copy(
-            out_buf.at[slot],
-            out_ref.at[(pl.ds(j * V, V),) + out_idx], out_sems.at[slot])
+            out_buf.at[lead + (slot,)],
+            out_ref.at[lead + (pl.ds(j * V, V),) + out_idx],
+            out_sems.at[lead + (slot,)])
 
-    in_copy(0, 0).start()
+    def in_slab(kf, slot):
+        return in_buf[((kf, slot) if multi else (slot,))]
+
+    for kf in range(F):
+        in_copy(kf, 0, 0).start()
     if has_aux:
         aux_copy(0, 0).start()
 
+    def emit_out(vid, j, val):
+        """Drain ``val`` (a compute slab) to every field this value id
+        feeds: crop the compute columns, double-buffer, start the DMA."""
+        for kf in out_of[vid]:
+            oslot = j % 2
+
+            @pl.when(j >= 2)
+            def _(kf=kf, oslot=oslot):   # slot reuse: prior copy must drain
+                out_copy(kf, j - 2, oslot).wait()
+
+            crop = val[(slice(None),) + tuple(slice(h, h + c) for c in CS)]
+            if multi:
+                out_buf[kf, oslot] = crop
+            else:
+                out_buf[oslot] = crop
+            out_copy(kf, j, oslot).start()
+
     def body(k, _):
         # wait input slab k; prefetch slab k+1 (both stop at the last real
-        # slab — later ticks only drain the chain, fetching nothing)
+        # slab — later ticks only drain the DAG, fetching nothing)
         slot = k % 2
+        for kf in range(F):
+            @pl.when(k <= nslabs - 1)
+            def _(kf=kf):
+                in_copy(kf, k, slot).wait()
 
-        @pl.when(k <= nslabs - 1)
-        def _():
-            in_copy(k, slot).wait()
+            @pl.when(k + 1 <= nslabs - 1)
+            def _(kf=kf):
+                in_copy(kf, k + 1, (k + 1) % 2).start()
 
-        @pl.when(k + 1 <= nslabs - 1)
-        def _():
-            in_copy(k + 1, (k + 1) % 2).start()
-
-        @pl.when(k <= nslabs - 1)
-        def _():   # push the input slab into window 0 (pre-padded => BC-ok)
-            wins[0][(pl.ds((k % Ws[0]) * V, V),) + blanks] = in_buf[slot]
+            @pl.when(k <= nslabs - 1)
+            def _(kf=kf):
+                # push the input slab into the stream's window (pre-padded
+                # => BC-ok) and drain pass-through fields straight to out
+                if wins[kf] > 0:
+                    win_of[kf][(pl.ds((k % wins[kf]) * V, V),) + blanks] = (
+                        in_slab(kf, slot))
+                if kf in out_of:
+                    emit_out(kf, k, in_slab(kf, slot))
 
         if has_aux:
             @pl.when(k <= nslabs - 1)
@@ -225,150 +264,172 @@ def _chain_kernel(*refs, chain, geom: BlockGeometry, ns: int, dom: int):
             def _():
                 aux_win[(pl.ds((k % HA) * V, V),) + blanks] = aux_buf[slot]
 
-        # -- PE chain: entry i computes slab k - Lag_i -----------------------
-        for i, entry in enumerate(chain):
-            j = k - lag[i]
-            R, W = Rs[i], Ws[i]
-            newest = j + R               # newest slab entry i's producer owns
+        # -- unrolled DAG: entry e computes slab k - Lag_e -------------------
+        for i, entry in enumerate(entries):
+            vid = F + i
+            j = k - lags[vid]
+            R = radii[i]
 
             @pl.when((j >= 0) & (j <= nslabs - 1))
-            def _(i=i, entry=entry, j=j, R=R, W=W, newest=newest):
-                # input slabs j-R..j+R of window i, in logical order
-                cat = jnp.concatenate(
-                    [wins[i][(pl.ds(((j + o) % W) * V, V),) + blanks]
-                     for o in range(-R, R + 1)], axis=0)
-                base = (j - R) * V       # logical stream row of cat[0]
-                limit = jnp.minimum(newest * V + V - 1, dom - 1)
-                kind_s = "clamp" if entry.bc is None else entry.bc.kinds[0]
-                fill = 0.0 if entry.bc is None else entry.bc.value
+            def _(i=i, entry=entry, vid=vid, j=j, R=R):
+                def read_slab(pid, jj):
+                    W = wins[pid]
+                    return win_of[pid][(pl.ds((jj % W) * V, V),) + blanks]
 
-                def stream_tap(ds_):
-                    """(V, *BS) slab of stream rows ``j*V+ds_ ..`` with this
-                    entry's stream-axis BC applied per row: clamp clips,
-                    reflect mirrors (the target provably stays in the
-                    window), constant overrides out-of-domain rows with the
-                    fill; periodic was materialized as a stream extension by
-                    the wrapper.  ``limit`` stops reads at the newest pushed
-                    row."""
-                    rows = j * V + ds_ + iv
-                    if kind_s == "reflect":
-                        p_ = max(2 * dom - 2, 1)
-                        m = jnp.mod(rows, p_)
-                        rows_m = jnp.where(m >= dom, p_ - m, m)
-                    else:
-                        rows_m = rows
-                    pos = jnp.clip(rows_m, 0, limit) - base
-                    vals = jnp.take(cat, pos, axis=0)
-                    if kind_s == "constant":
-                        oob = (rows < 0) | (rows > dom - 1)
-                        vals = jnp.where(oob.reshape((V,) + (1,) * nb),
-                                         fill, vals)
-                    return vals
-
-                # tap memo: one window gather per distinct stream offset,
-                # one lane/sublane rotate per distinct full offset
-                taps = {}
-                zero = (0,) * nb
-
-                def get(off):
-                    ds_, db = off[0], tuple(off[1:])
-                    tap = taps.get(tuple(off))
-                    if tap is None:
-                        tap = taps.get((ds_,) + zero)
-                        if tap is None:
-                            tap = taps[(ds_,) + zero] = stream_tap(ds_)
-                        for ax, d in enumerate(db):
-                            if d:
-                                tap = jnp.roll(tap, -d, axis=1 + ax)
-                        taps[tuple(off)] = tap
-                    return tap
-
-                aux_slab = None
-                if entry.stencil.has_aux:
-                    ja = jnp.clip(j, 0, nslabs - 1)
-                    aux_slab = aux_win[(pl.ds((ja % HA) * V, V),) + blanks]
-                val = entry.stencil.apply(get, coeffs_of(entry), aux_slab)
-                # PE forwarding: with `steps` real iterations this super-step,
-                # only entries of the first `steps` program repeats compute
-                # (entry i belongs to repeat t = i // S + 1)
-                val = jnp.where(i // S + 1 <= steps, val,
-                                get((0,) * geom.ndim))
-                if i < L - 1:
-                    # re-impose the *consumer's* blocked-axis BC on the slab
-                    wins[i + 1][(pl.ds((j % Ws[i + 1]) * V, V),) + blanks] = (
-                        reclamps[i + 1](val))
+                if entry.stencil is None:
+                    # state node: select the updated value while this
+                    # iteration is real, else forward the field's previous
+                    # value (PE forwarding, generalized per field)
+                    val = jnp.where(entry.iteration + 1 <= steps,
+                                    read_slab(entry.inputs[0], j),
+                                    read_slab(entry.inputs[1], j))
                 else:
-                    oslot = j % 2
+                    base = (j - R) * V   # logical stream row of cat[0]
+                    limit = jnp.minimum((j + R) * V + V - 1, dom - 1)
+                    bc = entry.bc
+                    kind_s = "clamp" if bc is None else bc.kinds[0]
+                    fill = 0.0 if bc is None else bc.value
+                    rec = reclamps[i]
 
-                    @pl.when(j >= 2)
-                    def _():   # slot reuse: the previous copy must have drained
-                        out_copy(j - 2, oslot).wait()
+                    def cat_of(pid):
+                        """Producer ``pid``'s slabs j-R..j+R in logical
+                        order, each re-imposed under *this* entry's
+                        blocked-axis BC.  Linear chains skip this entirely:
+                        the stream window is pre-padded under stage 0's BC
+                        and every other slab was re-imposed with the (sole)
+                        consumer's BC at push time — the PR 6 chain
+                        op-for-op."""
+                        slabs = [read_slab(pid, j + o)
+                                 for o in range(-R, R + 1)]
+                        if not plan.linear:
+                            slabs = [rec(s) for s in slabs]
+                        return jnp.concatenate(slabs, axis=0)
 
-                    out_buf[oslot] = val[(slice(None),)
-                                         + tuple(slice(h, h + c) for c in CS)]
-                    out_copy(j, oslot).start()
+                    def make_get(cat):
+                        def stream_tap(ds_):
+                            """(V, *BS) slab of stream rows ``j*V+ds_ ..``
+                            with this entry's stream-axis BC applied per
+                            row: clamp clips, reflect mirrors (the target
+                            provably stays in the window), constant
+                            overrides out-of-domain rows with the fill;
+                            periodic was materialized as a stream extension
+                            by the wrapper.  ``limit`` stops reads at the
+                            newest pushed row."""
+                            rows = j * V + ds_ + iv
+                            if kind_s == "reflect":
+                                p_ = max(2 * dom - 2, 1)
+                                m = jnp.mod(rows, p_)
+                                rows_m = jnp.where(m >= dom, p_ - m, m)
+                            else:
+                                rows_m = rows
+                            pos = jnp.clip(rows_m, 0, limit) - base
+                            vals = jnp.take(cat, pos, axis=0)
+                            if kind_s == "constant":
+                                oob = (rows < 0) | (rows > dom - 1)
+                                vals = jnp.where(
+                                    oob.reshape((V,) + (1,) * nb),
+                                    fill, vals)
+                            return vals
+
+                        # tap memo: one window gather per distinct stream
+                        # offset, one lane/sublane rotate per full offset
+                        taps = {}
+                        zero = (0,) * nb
+
+                        def get(off):
+                            ds_, db = off[0], tuple(off[1:])
+                            tap = taps.get(tuple(off))
+                            if tap is None:
+                                tap = taps.get((ds_,) + zero)
+                                if tap is None:
+                                    tap = taps[(ds_,) + zero] = (
+                                        stream_tap(ds_))
+                                for ax, d in enumerate(db):
+                                    if d:
+                                        tap = jnp.roll(tap, -d, axis=1 + ax)
+                                taps[tuple(off)] = tap
+                            return tap
+                        return get
+
+                    cats = {}
+                    for pid in entry.inputs:
+                        if pid not in cats:
+                            cats[pid] = make_get(cat_of(pid))
+                    gets = [cats[pid] for pid in entry.inputs]
+
+                    aux_slab = None
+                    if entry.stencil.has_aux:
+                        ja = jnp.clip(j, 0, nslabs - 1)
+                        aux_slab = aux_win[(pl.ds((ja % HA) * V, V),)
+                                           + blanks]
+                    val = entry.stencil.apply(
+                        tuple(gets) if entry.stencil.arity > 1 else gets[0],
+                        coeffs_of(entry), aux_slab)
+                    if entry.fused_select:
+                        # linear-chain PE forwarding: un-taken repeats
+                        # forward their input slab unchanged
+                        val = jnp.where(entry.iteration + 1 <= steps, val,
+                                        gets[0]((0,) * geom.ndim))
+
+                if wins[vid] > 0:
+                    # linear chains re-impose the sole consumer's (entry
+                    # i+1's) blocked-axis BC at push time; DAG fan-out
+                    # defers to read time, where each consumer applies its
+                    # own (see cat_of)
+                    stored = reclamps[i + 1](val) if plan.linear else val
+                    win_of[vid][(pl.ds((j % wins[vid]) * V, V),) + blanks] = (
+                        stored)
+                if vid in out_of:
+                    emit_out(vid, j, val)
         return 0
 
     jax.lax.fori_loop(0, nticks, body, 0)
 
     # drain outstanding output DMAs (last two slabs; nslabs is static)
-    if nslabs >= 2:
-        out_copy(nslabs - 2, (nslabs - 2) % 2).wait()
-    out_copy(nslabs - 1, (nslabs - 1) % 2).wait()
+    for kf in range(F):
+        if nslabs >= 2:
+            out_copy(kf, nslabs - 2, (nslabs - 2) % 2).wait()
+        out_copy(kf, nslabs - 1, (nslabs - 1) % 2).wait()
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stages", "geom", "interpret",
-                                    "block_parallel"))
-def superstep_chain(stages, geom: BlockGeometry, gp: jnp.ndarray,
-                    coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
-                    aux_p: Optional[jnp.ndarray] = None,
-                    interpret: bool = True,
-                    block_parallel: bool = False) -> jnp.ndarray:
-    """One super-step (<= ``par_time`` fused program iterations) over the
-    padded grid ``gp``, through the ``len(stages) * par_time``-entry PE
-    chain.
-
-    ``stages``: static tuple of ``(stencil, bc)`` per program stage (S=1
-    recovers the classic single-operator super-step exactly — see
-    ``superstep_2d``/``superstep_3d``).  ``gp``/``aux_p`` are BC-padded by
-    the wrapper (``kernels/ops``) under stage 0's BC: blocked dims to
-    ``bnum*csize + 2*halo``, the stream axis extended ``2*size_halo`` when
-    periodic and padded up to a ``par_vec`` multiple.  Returns the padded
-    output (only compute columns/rows are meaningful).
-
-    ``block_parallel`` opts the kernel grid into Megacore ("parallel"
-    dimension semantics): blocks are independent by construction, so the
-    result is bit-identical to the sequential grid.
-    """
+def _superstep_dag_impl(dag: DagSpec, geom: BlockGeometry, gp: jnp.ndarray,
+                        coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                        aux_p: Optional[jnp.ndarray], interpret: bool,
+                        block_parallel: bool) -> jnp.ndarray:
     nb = geom.ndim - 1
     V = geom.par_vec
-    ns = gp.shape[0]
-    bc0 = stages[0][1]
+    F = dag.n_fields
+    multi = F > 1
+    if multi and gp.shape[0] != F:
+        raise ValueError(f"multi-field program: leading axis {gp.shape[0]} "
+                         f"!= {F} fields")
+    ns = gp.shape[1] if multi else gp.shape[0]
+    bc0 = dag.stages[0][1]
     dom = geom.stream_dim + 2 * stream_extension(geom, bc0)
     if ns != geom.stream_slabs(dom) * V:
         raise ValueError(
             f"padded stream extent {ns} != ceil({dom}/{V})*{V} "
             f"= {geom.stream_slabs(dom) * V}: the wrapper must pad the "
             f"stream axis to a slab multiple (kernels/ops._pad_blocked)")
-    chain = unroll_chain(stages, geom.par_time)
-    Rs, lag = _chain_lags(chain, V)
-    has_aux = any(st.has_aux for st, _ in stages)
-    HA = lag[-1] + 1
+    plan = unroll_dag(dag, geom.par_time)
+    lay = dag_layout(plan, V)
+    has_aux = any(st.has_aux for st, _, _ in dag.stages)
     BS, CS = geom.bsize, geom.csize
 
-    kernel = functools.partial(_chain_kernel, chain=chain, geom=geom,
+    kernel = functools.partial(_dag_kernel, plan=plan, lay=lay, geom=geom,
                                ns=ns, dom=dom)
-    # one rolling window per chain entry, sized for that entry's radius
-    scratch = [pltpu.VMEM(((2 * r + 1) * V,) + BS, jnp.float32) for r in Rs]
-    scratch += [pltpu.VMEM((2, V) + BS, jnp.float32),   # input double buffer
-                pltpu.SemaphoreType.DMA((2,))]
+    # one rolling window per consumed producer value, buffer-depth sized
+    scratch = [pltpu.VMEM((w * V,) + BS, jnp.float32)
+               for w in lay.wins if w > 0]
+    lead = (F,) if multi else ()
+    scratch += [pltpu.VMEM(lead + (2, V) + BS, jnp.float32),  # in dbl buffer
+                pltpu.SemaphoreType.DMA(lead + (2,))]
     if has_aux:
-        scratch += [pltpu.VMEM((HA * V,) + BS, jnp.float32),  # aux window
+        scratch += [pltpu.VMEM((lay.aux_depth * V,) + BS, jnp.float32),
                     pltpu.VMEM((2, V) + BS, jnp.float32),
                     pltpu.SemaphoreType.DMA((2,))]
-    scratch += [pltpu.VMEM((2, V) + CS, jnp.float32),   # output double buffer
-                pltpu.SemaphoreType.DMA((2,))]
+    scratch += [pltpu.VMEM(lead + (2, V) + CS, jnp.float32),  # out dbl buffer
+                pltpu.SemaphoreType.DMA(lead + (2,))]
 
     n_hbm_in = 2 if has_aux else 1
     operands = (coeffs_packed.reshape(1, -1), gp) + (
@@ -389,3 +450,51 @@ def superstep_chain(stages, geom: BlockGeometry, gp: jnp.ndarray,
             dimension_semantics=(
                 ("parallel" if block_parallel else "arbitrary",) * len(grid))),
     )(steps_arr, *operands)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dag", "geom", "interpret",
+                                    "block_parallel"))
+def superstep_dag(dag: DagSpec, geom: BlockGeometry, gp: jnp.ndarray,
+                  coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                  aux_p: Optional[jnp.ndarray] = None,
+                  interpret: bool = True,
+                  block_parallel: bool = False) -> jnp.ndarray:
+    """One super-step (<= ``par_time`` fused program iterations) of a stage
+    DAG over the padded state ``gp`` (``(ns, *padded)`` for single-field
+    programs, ``(F, ns, *padded)`` for multi-field), through the unrolled
+    per-super-step value graph.
+
+    ``gp``/``aux_p`` are BC-padded by the wrapper (``kernels/ops``) under
+    stage 0's BC: blocked dims to ``bnum*csize + 2*halo``, the stream axis
+    extended ``2*size_halo`` when periodic and padded up to a ``par_vec``
+    multiple.  Returns the padded output (only compute columns/rows are
+    meaningful).
+
+    ``block_parallel`` opts the kernel grid into Megacore ("parallel"
+    dimension semantics): blocks are independent by construction, so the
+    result is bit-identical to the sequential grid.
+    """
+    return _superstep_dag_impl(dag, geom, gp, coeffs_packed, steps, aux_p,
+                               interpret, block_parallel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stages", "geom", "interpret",
+                                    "block_parallel"))
+def superstep_chain(stages, geom: BlockGeometry, gp: jnp.ndarray,
+                    coeffs_packed: jnp.ndarray, steps: jnp.ndarray,
+                    aux_p: Optional[jnp.ndarray] = None,
+                    interpret: bool = True,
+                    block_parallel: bool = False) -> jnp.ndarray:
+    """One super-step through the ``len(stages) * par_time``-entry PE chain.
+
+    ``stages``: static tuple of ``(stencil, bc)`` per program stage (S=1
+    recovers the classic single-operator super-step exactly — see
+    ``superstep_2d``/``superstep_3d``).  The path-graph special case of
+    :func:`superstep_dag`: linear chains unroll to the identical entry list
+    (fused per-entry PE-forwarding selects, same windows, same scratch), so
+    this builds the same kernel PR 6 shipped, bit for bit.
+    """
+    return _superstep_dag_impl(chain_dag(stages), geom, gp, coeffs_packed,
+                               steps, aux_p, interpret, block_parallel)

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core import boundary
 from repro.core.blocking import BlockGeometry, stream_extension as _stream_ext
 from repro.core.stencils import Stencil
-from repro.kernels.builder import superstep_chain
+from repro.kernels.builder import superstep_chain, superstep_dag
 
 
 def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
@@ -32,12 +32,21 @@ def pack_coeffs(stencil: Stencil, coeffs: dict) -> jnp.ndarray:
 
 
 def pack_program_coeffs(stages, stage_coeffs) -> jnp.ndarray:
-    """Concatenate per-stage coefficient vectors in stage order — the layout
-    :func:`repro.kernels.builder.unroll_chain` assigns ``coeff_lo`` offsets
-    into.  ``stages`` is the static ``((stencil, bc), ...)`` tuple,
+    """Concatenate per-stage coefficient vectors in *authored* stage order —
+    the layout :func:`repro.programs.unroll_dag` assigns ``coeff_lo``
+    offsets into.  ``stages`` is the static ``((stencil, bc), ...)`` tuple,
     ``stage_coeffs`` one coefficient dict per stage."""
     return jnp.concatenate([pack_coeffs(st, c)
                             for (st, _), c in zip(stages, stage_coeffs)])
+
+
+def pack_dag_coeffs(dag, stage_coeffs) -> jnp.ndarray:
+    """DAG variant of :func:`pack_program_coeffs`: authored stage order of a
+    :class:`repro.programs.DagSpec` (evaluation order is the DAG's ``topo``
+    permutation, but coefficient packing stays positional)."""
+    return jnp.concatenate([pack_coeffs(st, c)
+                            for (st, _, _), c in zip(dag.stages,
+                                                     stage_coeffs)])
 
 
 def _pad_blocked(grid: jnp.ndarray, geom: BlockGeometry,
@@ -159,6 +168,32 @@ def fused_chain_loop(stages, geom: BlockGeometry, gp: jnp.ndarray,
     return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc0)
 
 
+def fused_dag_loop(dag, geom: BlockGeometry, gp: jnp.ndarray,
+                   coeffs_packed: jnp.ndarray, iters,
+                   aux_p: jnp.ndarray | None, interpret: bool,
+                   block_parallel: bool = False) -> jnp.ndarray:
+    """DAG analogue of :func:`fused_chain_loop`: the whole ``iters`` loop of
+    a stage DAG (:class:`repro.programs.DagSpec`) over the *pre-padded*
+    state ``gp`` (``(ns, *padded)`` single-field, ``(F, ns, *padded)``
+    multi-field — every field padded identically), returning the unpadded
+    result.  The carry stays padded; halos of all fields are refreshed in
+    one ``_reclamp_padded`` per super-step under stage 0's BC (periodicity
+    is uniform by construction; each entry re-imposes its own BC
+    in-kernel)."""
+    bc0 = dag.stages[0][1]
+    par_time = geom.par_time
+    n_super = (iters + par_time - 1) // par_time
+
+    def body(s, g):
+        steps = jnp.minimum(par_time, iters - s * par_time)
+        op = superstep_dag(dag, geom, g, coeffs_packed, steps, aux_p,
+                           interpret=interpret,
+                           block_parallel=block_parallel)
+        return _reclamp_padded(op, geom, bc0)
+
+    return _slice_blocked(jax.lax.fori_loop(0, n_super, body, gp), geom, bc0)
+
+
 def fused_superstep_loop(stencil: Stencil, geom: BlockGeometry,
                          gp: jnp.ndarray, coeffs_packed: jnp.ndarray, iters,
                          aux_p: jnp.ndarray | None, interpret: bool,
@@ -201,6 +236,23 @@ def run_pallas_chain(stages, geom: BlockGeometry, grid: jnp.ndarray,
                             block_parallel)
 
 
+@partial(jax.jit, static_argnames=("dag", "geom", "interpret",
+                                   "block_parallel"))
+def run_pallas_dag(dag, geom: BlockGeometry, state: jnp.ndarray,
+                   coeffs_packed: jnp.ndarray, iters,
+                   aux: jnp.ndarray | None, interpret: bool,
+                   block_parallel: bool = False) -> jnp.ndarray:
+    """``iters`` program iterations via the fused streaming DAG kernel.
+    ``state`` is the plain grid for single-field programs, else the
+    ``(F, *shape)`` field stack (the leading field axis rides through
+    ``_pad_blocked`` like a batch axis); padding uses stage 0's BC."""
+    bc0 = dag.stages[0][1]
+    aux_p = _pad_blocked(aux, geom, bc0) if aux is not None else None
+    return fused_dag_loop(dag, geom, _pad_blocked(state, geom, bc0),
+                          coeffs_packed, iters, aux_p, interpret,
+                          block_parallel)
+
+
 def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
                       cell_bytes: int = 4, bc=None) -> int:
     """Exact HBM traffic of one Pallas super-step, from its DMA schedule.
@@ -231,8 +283,11 @@ def dma_traffic_bytes(stencil: Stencil, geom: BlockGeometry,
     block_in = math.prod(geom.bsize)
     block_out = math.prod(geom.csize)
     n_blocks = geom.num_blocks
-    reads = n_blocks * stream * block_in * (2 if stencil.has_aux else 1)
-    writes = n_blocks * stream * block_out
+    # num_read/num_write count the external streams (fields + aux / fields):
+    # 1 + aux for every plain stencil and linear chain, F + aux / F for a
+    # multi-field DAG — each field streams in and drains out per block
+    reads = n_blocks * stream * block_in * stencil.num_read
+    writes = n_blocks * stream * block_out * stencil.num_write
     return (reads + writes) * cell_bytes
 
 

@@ -16,10 +16,8 @@ from repro.core import boundary
 from repro.core.stencils import Stencil
 
 
-def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
-                aux: jnp.ndarray | None = None, *, bc=None) -> jnp.ndarray:
-    """One time-step over the full grid under ``bc`` (default: clamp)."""
-    r = stencil.radius
+def _padded_getter(grid: jnp.ndarray, r: int, bc=None):
+    """Neighbor getter over ``grid`` BC-padded by ``r`` on every axis."""
     if bc is None or bc.is_clamp:
         p = jnp.pad(grid, r, mode="edge")
     else:
@@ -31,6 +29,13 @@ def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
         idx = tuple(slice(r + o, r + o + n) for o, n in zip(off, grid.shape))
         return p[idx]
 
+    return get
+
+
+def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
+                aux: jnp.ndarray | None = None, *, bc=None) -> jnp.ndarray:
+    """One time-step over the full grid under ``bc`` (default: clamp)."""
+    get = _padded_getter(grid, stencil.radius, bc)
     return stencil.apply(get, coeffs, aux)
 
 
@@ -63,3 +68,32 @@ def oracle_program_run(stages, grid: jnp.ndarray, stage_coeffs,
     def body(_, g):
         return oracle_program_step(stages, g, stage_coeffs, aux)
     return jax.lax.fori_loop(0, iters, body, grid)
+
+
+def oracle_dag_step(dag, state: jnp.ndarray, stage_coeffs,
+                    aux: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One *program iteration* of a DAG (:class:`repro.programs.DagSpec`):
+    stages evaluated in topological order — each input (field or earlier
+    stage) read under the consuming stage's own BC — then every field
+    updated simultaneously.  ``state`` is the plain grid for single-field
+    programs, else the ``(F, *shape)`` field stack.  This is the sequential
+    semantics every fused DAG backend is conformance-tested against."""
+    F = dag.n_fields
+    fields = [state[k] for k in range(F)] if F > 1 else [state]
+    vals: list = [None] * len(dag.stages)
+    for si in dag.topo:
+        st, bc_s, refs = dag.stages[si]
+        ins = [vals[r] if r >= 0 else fields[~r] for r in refs]
+        gets = [_padded_getter(x, st.radius, bc_s) for x in ins]
+        vals[si] = st.apply(tuple(gets) if st.arity > 1 else gets[0],
+                            stage_coeffs[si], aux if st.has_aux else None)
+    new = [vals[u] if u >= 0 else fields[~u] for u in dag.updates]
+    return jnp.stack(new) if F > 1 else new[0]
+
+
+def oracle_dag_run(dag, state: jnp.ndarray, stage_coeffs, iters: int,
+                   aux: jnp.ndarray | None = None) -> jnp.ndarray:
+    """``iters`` program iterations of the stage DAG."""
+    def body(_, s):
+        return oracle_dag_step(dag, s, stage_coeffs, aux)
+    return jax.lax.fori_loop(0, iters, body, state)

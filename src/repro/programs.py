@@ -1,37 +1,56 @@
-"""Multi-stage stencil programs — chained operators fused into one super-step.
+"""Multi-stage stencil programs — operator DAGs fused into one super-step.
 
 The paper's PE chain (§3.2) fuses ``par_time`` temporal iterations of *one*
-operator; StencilFlow (arXiv:2010.15218) observes that a linear chain of
-*dependent* stencil stages maps onto exactly the same structure — a stage
-boundary is just another temporal step with a different stencil and
-coefficients, so intermediates never round-trip external memory.  This module
-is the declarative half of that idea:
+operator; StencilFlow (arXiv:2010.15218) observes that a general *DAG* of
+dependent stencil stages maps onto exactly the same streaming structure given
+per-edge buffer-depth analysis — a stage boundary is just another temporal
+step with a different stencil and coefficients, fan-out is one producer
+window tapped by several consumers, and fan-in is a multi-input stage.  This
+module is the declarative half of that idea:
 
   * :class:`StencilStage` — one operator application: a stencil plus optional
-    per-stage coefficient overrides and an optional per-stage boundary
-    condition.
-  * :class:`StencilProgram` — a validated linear chain of stages (the
-    DAG-ready representation: today a path graph, by construction).
+    per-stage coefficient overrides, an optional per-stage boundary
+    condition, and optional explicit ``inputs`` (names of fields or earlier
+    stages; default = the previous stage, preserving chain syntax verbatim).
+  * :class:`StencilProgram` — a validated stage DAG over named external
+    ``fields`` (e.g. ``("u", "u_prev")`` for the wave equation) with
+    per-field ``updates`` declaring which value each field takes after one
+    iteration.  Validation covers dangling references, reference ambiguity,
+    arity mismatches, cycles (Kahn toposort) and unconsumed stages.
 
-A ``StencilProgram`` is accepted everywhere a bare stencil is today
-(``StencilProblem(stencil=...)``): one *iteration* of the problem applies the
-stages in order, and a program of S stages at temporal depth ``par_time=T``
-unrolls to ``S*T`` chained PE stages per super-step.  Aggregate properties
-(``radius`` = per-iteration halo growth = sum of stage radii, ``flop_pcu`` =
-sum, ...) duck-type the :class:`~repro.core.stencils.Stencil` bookkeeping the
-geometry/perf-model layers read, so the whole planning stack prices the
-heterogeneous chain without special cases.
+A ``StencilProgram`` is accepted everywhere a bare stencil is
+(``StencilProblem(stencil=...)``): one *iteration* of the problem evaluates
+the stages in topological order and then updates every field
+simultaneously.  Aggregate properties (``radius`` = per-iteration halo
+growth = the DAG's critical-path cumulative radius, ``flop_pcu`` = sum over
+stages, ``num_read``/``num_write`` = external field streams, ...) duck-type
+the :class:`~repro.core.stencils.Stencil` bookkeeping the geometry and
+perf-model layers read, so the whole planning stack prices the DAG without
+special cases.
 
-Per-stage boundary conditions: each stage's *input* is read under that
+Linear chains (single field, default inputs, default update) remain a
+recognized fast path — :attr:`StencilProgram.is_linear` — and compile to
+bit-identical kernels and unchanged cache fingerprints versus the chain-only
+implementation.
+
+Per-stage boundary conditions: each stage's *inputs* are read under that
 stage's BC (defaulting to the problem-level one).  The periodic/non-periodic
-split per axis must be uniform across stages — periodicity is structural
+split per axis must be uniform across all stages — periodicity is structural
 (wrap-padding layout, the materialized stream extension, the distributed
 ring exchange), while the local kinds (clamp/reflect/constant) are
-re-imposed per sub-step and may differ freely between stages.
+re-imposed per read and may differ freely between stages and branches.
+
+The bottom half of the module is the shared, jax-free unroll machinery:
+:func:`unroll_dag` flattens ``par_time`` iterations of a :class:`DagSpec`
+into a value graph of :class:`DagNode` entries, and :func:`dag_layout`
+derives per-producer lags and circular-window slot counts (StencilFlow's
+buffer-depth analysis).  Both the Pallas kernel builder and the perf model
+consume it, so VMEM pricing and the emitted kernel can never disagree.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core.boundary import BCSpec, BoundaryCondition
@@ -55,7 +74,7 @@ def _freeze_coeffs(coeffs) -> Optional[Tuple[Tuple[str, float], ...]]:
 
 @dataclasses.dataclass(frozen=True)
 class StencilStage:
-    """One stage of a program: stencil + optional coeffs/BC overrides.
+    """One stage of a program: stencil + optional coeffs/BC/input overrides.
 
     Parameters
     ----------
@@ -72,12 +91,21 @@ class StencilStage:
         Normalized to a :class:`~repro.core.boundary.BoundaryCondition` when
         the owning problem resolves the program.
     name:
-        Optional label for reports; defaults to the stencil name.
+        Optional label for reports and for ``inputs`` references from other
+        stages; defaults to the stencil name.  The positional aliases
+        ``stage0``, ``stage1``, ... always resolve regardless of naming.
+    inputs:
+        Optional explicit input references — a tuple of field or stage names,
+        one per stencil input (``stencil.arity`` of them).  ``None`` keeps
+        the chain default: stage 0 reads the first field, stage ``i`` reads
+        stage ``i-1``.  A multi-input (fan-in) stencil *requires* explicit
+        inputs.
     """
     stencil: Union[Stencil, str]
     coeffs: Optional[Mapping] = None
     boundary: Optional[BCSpec] = None
     name: Optional[str] = None
+    inputs: Optional[Sequence[str]] = None
 
     def __post_init__(self):
         st = self.stencil
@@ -103,6 +131,16 @@ class StencilStage:
             object.__setattr__(self, "boundary", tuple(self.boundary))
         if self.name is None:
             object.__setattr__(self, "name", st.name)
+        if self.inputs is not None:
+            ins = self.inputs
+            if isinstance(ins, str):
+                ins = (ins,)
+            ins = tuple(str(r) for r in ins)
+            if len(ins) != st.arity:
+                raise ValueError(
+                    f"stage {self.name!r}: {len(ins)} inputs given but "
+                    f"stencil {st.name} has arity {st.arity}")
+            object.__setattr__(self, "inputs", ins)
 
     @property
     def bc(self) -> Optional[BoundaryCondition]:
@@ -117,21 +155,200 @@ StageLike = Union[StencilStage, Stencil, str]
 
 
 @dataclasses.dataclass(frozen=True)
-class StencilProgram:
-    """A validated linear chain of :class:`StencilStage`.
+class DagSpec:
+    """Static, hashable execution form of a resolved program DAG.
 
-    One *iteration* applies the stages in order (stage ``i+1`` consumes stage
-    ``i``'s output); the fused backends run the whole chain — all stages ×
-    all ``par_time`` iterations of a super-step — without materializing any
-    intermediate in HBM.
+    ``stages[i] = (stencil, bc, refs)`` in *authored* order (coefficient
+    packing order); ``refs`` are int-encoded value references: ``r >= 0``
+    reads stage ``r``'s output, ``r < 0`` reads external field ``~r``.
+    ``updates[k]`` gives field ``k``'s next-iteration value in the same
+    encoding (``~k`` = the field is carried unchanged).  ``topo`` is a
+    topological evaluation order over the stage indices.
+    """
+    stages: Tuple[Tuple[Stencil, Optional[BoundaryCondition],
+                        Tuple[int, ...]], ...]
+    n_fields: int
+    updates: Tuple[int, ...]
+    topo: Tuple[int, ...]
+
+
+def chain_dag(stages) -> DagSpec:
+    """The path-graph :class:`DagSpec` of a linear chain.  ``stages`` is the
+    legacy executor contract: a tuple of ``(stencil, bc)`` pairs."""
+    L = len(stages)
+    return DagSpec(
+        stages=tuple((st, bc, ((i - 1,) if i else (-1,)))
+                     for i, (st, bc) in enumerate(stages)),
+        n_fields=1, updates=(L - 1,), topo=tuple(range(L)))
+
+
+def dag_is_chain(dag: DagSpec) -> bool:
+    """True iff ``dag`` is the single-field path graph (the PR 6 chain) —
+    the shape that takes the bit-identical linear kernel fast path."""
+    L = len(dag.stages)
+    return (dag.n_fields == 1 and dag.updates == (L - 1,)
+            and all(st.arity == 1
+                    and refs == ((i - 1,) if i else (-1,))
+                    for i, (st, _, refs) in enumerate(dag.stages)))
+
+
+def dag_radius(dag: DagSpec) -> int:
+    """Per-iteration halo growth: the critical-path cumulative radius over
+    the DAG, maximized over the field updates (= the sum of stage radii for
+    a chain).  This is the ``rad`` that sizes ``size_halo = rad*par_time``
+    and the distributed halo exchange."""
+    cum = [0] * len(dag.stages)
+    for si in dag.topo:
+        st, _, refs = dag.stages[si]
+        cum[si] = st.radius + max((cum[r] for r in refs if r >= 0), default=0)
+    return max((cum[u] for u in dag.updates if u >= 0), default=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DagNode:
+    """One value node of the unrolled per-super-step graph.
+
+    ``stencil`` entries compute one stage application; ``stencil is None``
+    marks a *state* (select) node — the PE-forwarding generalization for
+    DAGs: ``inputs = (updated, fallback)`` and the node selects the updated
+    value while ``iteration < steps``, else forwards the fallback (the
+    field's previous value), so partial super-steps stay exact.  Linear
+    chains instead fuse the select into every entry (``fused_select``),
+    reproducing the PR 6 chain op-for-op.
+
+    ``inputs`` are value ids: ``0..n_streams-1`` = external field streams,
+    ``n_streams + e`` = unrolled entry ``e``.
+    """
+    stencil: Optional[Stencil]
+    bc: object                    # BoundaryCondition or None (= clamp)
+    coeff_lo: int                 # slice start into the packed coeff vector
+    inputs: Tuple[int, ...]
+    iteration: int                # which program iteration this entry is in
+    fused_select: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class UnrollPlan:
+    """``par_time`` iterations of a :class:`DagSpec` flattened to a value
+    graph: entry ``e`` is value id ``n_streams + e``; ``outputs[k]`` is the
+    value id field ``k`` holds after the super-step (possibly a stream id,
+    for fields carried unchanged)."""
+    n_streams: int
+    entries: Tuple[DagNode, ...]
+    outputs: Tuple[int, ...]
+    linear: bool
+
+
+def unroll_dag(dag: DagSpec, par_time: int) -> UnrollPlan:
+    """Topological unroll: ``par_time`` repeats of the DAG, stages evaluated
+    in ``dag.topo`` order per iteration, then (non-linear DAGs) one state
+    node per updated field selecting new-vs-previous value so every field
+    advances simultaneously and partial super-steps forward correctly."""
+    F = dag.n_fields
+    L = len(dag.stages)
+    los, acc = [], 0
+    for st, _, _ in dag.stages:
+        los.append(acc)
+        acc += len(st.coeff_names)
+    linear = dag_is_chain(dag)
+    entries = []
+    cur = list(range(F))          # value id currently holding each field
+
+    def vid():
+        return F + len(entries)
+
+    for t in range(par_time):
+        vals: list = [None] * L
+        for si in dag.topo:
+            st, bc, refs = dag.stages[si]
+            ins = tuple(vals[r] if r >= 0 else cur[~r] for r in refs)
+            v = vid()
+            entries.append(DagNode(st, bc, los[si], ins, t,
+                                   fused_select=linear))
+            vals[si] = v
+        if linear:
+            cur[0] = vals[L - 1]
+            continue
+        new = list(cur)
+        for k, u in enumerate(dag.updates):
+            if u == ~k:           # field carried unchanged: no node
+                continue
+            src = vals[u] if u >= 0 else cur[~u]
+            new[k] = vid()
+            entries.append(DagNode(None, None, -1, (src, cur[k]), t))
+        cur = new
+    return UnrollPlan(F, tuple(entries), tuple(cur), linear)
+
+
+@dataclasses.dataclass(frozen=True)
+class DagLayout:
+    """Buffer-depth analysis of an :class:`UnrollPlan` at vector width ``V``
+    (StencilFlow, arXiv:2010.15218 §4): per-entry slab radii
+    ``R_e = ceil(rad_e/V)``, per-value lags, and per-producer circular
+    window slot counts.
+
+    ``lags[v]``: entry ``v`` computes stream slab ``k - lags[v]`` at tick
+    ``k`` (streams have lag 0).  ``wins[v]``: slots the producer's window
+    must hold — ``max over consumer edges of (lag_c + R_c) - lag_p + 1`` —
+    which reduces to the chain's ``2R+1`` when producer and consumer are
+    adjacent and grows by exactly the lag *difference* when an edge skips
+    levels; ``0`` means no window (the value feeds only the output DMA).
+    """
+    radii: Tuple[int, ...]        # per entry (slabs); state nodes are 0
+    lags: Tuple[int, ...]         # per value id
+    wins: Tuple[int, ...]         # per value id; 0 = no window needed
+    out_lag: int                  # max lag over output producers
+    aux_depth: int                # aux window depth, in slabs
+
+
+def dag_layout(plan: UnrollPlan, par_vec: int) -> DagLayout:
+    F = plan.n_streams
+    radii = tuple(0 if e.stencil is None
+                  else -(-e.stencil.radius // par_vec)
+                  for e in plan.entries)
+    lags = [0] * (F + len(plan.entries))
+    for i, e in enumerate(plan.entries):
+        lags[F + i] = radii[i] + max((lags[p] for p in e.inputs), default=0)
+    wins = [0] * (F + len(plan.entries))
+    for i, e in enumerate(plan.entries):
+        need = lags[F + i] + radii[i] + 1
+        for p in set(e.inputs):
+            wins[p] = max(wins[p], need - lags[p])
+    out_lag = max(lags[o] for o in plan.outputs)
+    if plan.linear:
+        aux_depth = lags[-1] + 1          # PR 6 chain: Lag_total + 1
+    else:
+        al = [lags[F + i] for i, e in enumerate(plan.entries)
+              if e.stencil is not None and e.stencil.has_aux]
+        aux_depth = (max(al) + 1) if al else 1
+    return DagLayout(radii, tuple(lags), tuple(wins), out_lag, aux_depth)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProgram:
+    """A validated DAG of :class:`StencilStage` over named external fields.
+
+    One *iteration* evaluates the stages in topological order — each stage
+    reading its declared ``inputs`` (fields or other stages) — and then
+    applies ``updates`` simultaneously: every field takes its declared
+    next value (a stage output or another field).  The fused backends run
+    the whole DAG — all stages × all ``par_time`` iterations of a
+    super-step — without materializing any intermediate in HBM.
+
+    Defaults preserve the linear-chain syntax verbatim: one field ``"u"``,
+    stage ``i`` reads stage ``i-1`` (stage 0 reads the field), and the field
+    updates to the last stage — :attr:`is_linear` programs compile through
+    the unchanged chain fast path with identical kernels and fingerprints.
 
     Duck-types the ``Stencil`` bookkeeping the planning layers read:
-    ``radius`` (per-iteration halo growth: the *sum* of stage radii —
-    geometry's ``rad``), ``flop_pcu`` (sum), ``num_read``/``num_write``
-    (external streams of the fused chain: one grid in, one out, plus aux),
+    ``radius`` (per-iteration halo growth: the DAG's critical-path
+    cumulative radius — geometry's ``rad``), ``flop_pcu`` (sum),
+    ``num_read``/``num_write`` (external streams: one per field, plus aux),
     ``has_aux`` (any stage), ``ndim``, ``name``.
     """
     stages: Tuple[StencilStage, ...]
+    fields: Tuple[str, ...] = ("u",)
+    updates: Optional[Mapping] = None
 
     def __post_init__(self):
         stages = tuple(
@@ -146,6 +363,135 @@ class StencilProgram:
                     f"all stages must share a rank: got {nd}D and "
                     f"{s.stencil.ndim}D ({s.name})")
         object.__setattr__(self, "stages", stages)
+
+        fields = self.fields
+        if isinstance(fields, str):
+            fields = (fields,)
+        fields = tuple(str(f) for f in fields)
+        if not fields:
+            raise ValueError("a StencilProgram needs at least one field")
+        if len(set(fields)) != len(fields):
+            raise ValueError(f"duplicate field names in {fields}")
+        object.__setattr__(self, "fields", fields)
+
+        # normalize updates to a per-field-ordered tuple of (field, ref)
+        upd = self.updates
+        if upd is not None:
+            if isinstance(upd, Mapping):
+                items = list(upd.items())
+            elif isinstance(upd, tuple) and all(
+                    isinstance(p, tuple) and len(p) == 2 for p in upd):
+                items = list(upd)       # already frozen: idempotent
+            else:
+                raise TypeError("updates must be a mapping "
+                                "{field: stage-or-field name}")
+            for f, _ in items:
+                if f not in fields:
+                    raise ValueError(f"updates key {f!r} is not a field "
+                                     f"(fields: {list(fields)})")
+            by_field = dict((str(f), str(r)) for f, r in items)
+            upd = tuple((f, by_field[f]) for f in fields if f in by_field)
+            object.__setattr__(self, "updates", upd)
+
+        self._resolve_dag()
+
+    # --- DAG resolution and validation --------------------------------------
+    def _resolve_dag(self) -> None:
+        stages, fields = self.stages, self.fields
+        L = len(stages)
+        field_pos = {f: k for k, f in enumerate(fields)}
+        auto = {f"stage{i}": i for i in range(L)}
+        counts = Counter(s.name for s in stages)
+        by_name = {s.name: i for i, s in enumerate(stages)
+                   if counts[s.name] == 1}
+
+        def resolve(ref: str, where: str) -> int:
+            si = auto.get(ref, by_name.get(ref))
+            fi = field_pos.get(ref)
+            if si is not None and fi is not None:
+                raise ValueError(
+                    f"{where}: reference {ref!r} is ambiguous — it names "
+                    f"both a field and a stage; rename one or use the "
+                    f"positional alias stage{si}")
+            if si is not None:
+                return si
+            if fi is not None:
+                return ~fi
+            if counts.get(ref, 0) > 1:
+                raise ValueError(
+                    f"{where}: reference {ref!r} is ambiguous — "
+                    f"{counts[ref]} stages share that name; use the "
+                    f"positional aliases stage0..stage{L - 1}")
+            raise ValueError(
+                f"{where}: dangling reference {ref!r} — not a field "
+                f"{list(fields)} or a stage "
+                f"{sorted(set(auto) | set(by_name))}")
+
+        inputs_idx = []
+        for i, s in enumerate(stages):
+            if s.inputs is None:
+                if s.stencil.arity != 1:
+                    raise ValueError(
+                        f"stage {s.name!r} (stage{i}): stencil "
+                        f"{s.stencil.name} has arity {s.stencil.arity} and "
+                        f"needs explicit inputs=(...)")
+                inputs_idx.append(((i - 1,) if i else (~0,)))
+            else:
+                inputs_idx.append(tuple(
+                    resolve(r, f"stage {s.name!r} (stage{i}) inputs")
+                    for r in s.inputs))
+        inputs_idx = tuple(inputs_idx)
+
+        if self.updates is None:
+            updates_idx = tuple((L - 1) if k == 0 else ~k
+                                for k in range(len(fields)))
+        else:
+            declared = dict(self.updates)
+            updates_idx = tuple(
+                resolve(declared[f], f"updates[{f!r}]") if f in declared
+                else ~k
+                for k, f in enumerate(fields))
+
+        # Kahn toposort over stage->stage edges (authored order preserved;
+        # forward references are legal, cycles are not)
+        preds = [sorted({r for r in ins if r >= 0}) for ins in inputs_idx]
+        indeg = [len(p) for p in preds]
+        succs = [[] for _ in range(L)]
+        for i, ps in enumerate(preds):
+            for p in ps:
+                succs[p].append(i)
+        ready = sorted(i for i in range(L) if not indeg[i])
+        topo = []
+        while ready:
+            i = ready.pop(0)
+            topo.append(i)
+            for c in succs[i]:
+                indeg[c] -= 1
+                if not indeg[c]:
+                    ready.append(c)
+            ready.sort()
+        if len(topo) != L:
+            stuck = [f"stage{i}({stages[i].name})"
+                     for i in range(L) if i not in topo]
+            raise ValueError(f"program DAG has a cycle through {stuck}")
+
+        consumed = {r for ins in inputs_idx for r in ins if r >= 0}
+        consumed |= {u for u in updates_idx if u >= 0}
+        unused = [i for i in range(L) if i not in consumed]
+        if unused:
+            raise ValueError(
+                "stage output(s) never consumed (dead stages): "
+                + ", ".join(f"stage{i}({stages[i].name})" for i in unused))
+
+        linear = (len(fields) == 1
+                  and updates_idx == (L - 1,)
+                  and all(s.stencil.arity == 1 for s in stages)
+                  and all(inputs_idx[i] == (((i - 1),) if i else (~0,))
+                          for i in range(L)))
+        object.__setattr__(self, "_inputs_idx", inputs_idx)
+        object.__setattr__(self, "_updates_idx", updates_idx)
+        object.__setattr__(self, "_topo", tuple(topo))
+        object.__setattr__(self, "_linear", linear)
 
     # --- construction -------------------------------------------------------
     @classmethod
@@ -185,7 +531,7 @@ class StencilProgram:
                     f"({[s.boundary.kinds[ax] for s in out]}) — periodicity "
                     "is structural (wrap layout / stream extension / ring "
                     "exchange) and must be uniform across a program's stages")
-        return StencilProgram(tuple(out))
+        return dataclasses.replace(self, stages=tuple(out))
 
     # --- container protocol -------------------------------------------------
     def __len__(self) -> int:
@@ -194,6 +540,52 @@ class StencilProgram:
     def __iter__(self):
         return iter(self.stages)
 
+    # --- DAG views ----------------------------------------------------------
+    @property
+    def is_linear(self) -> bool:
+        """True for single-field default-wired chains — the shape PR 6
+        shipped, compiled through the unchanged chain fast path."""
+        return self._linear
+
+    @property
+    def inputs_idx(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per-stage resolved input references (``>= 0`` stage, ``< 0``
+        field ``~r``)."""
+        return self._inputs_idx
+
+    @property
+    def updates_idx(self) -> Tuple[int, ...]:
+        """Per-field resolved next-value references (``~k`` = unchanged)."""
+        return self._updates_idx
+
+    @property
+    def topo(self) -> Tuple[int, ...]:
+        return self._topo
+
+    @property
+    def dag(self) -> DagSpec:
+        """The static execution form handed to every backend (stage BCs are
+        whatever this program carries — resolve first for executors)."""
+        return DagSpec(
+            stages=tuple((s.stencil, s.bc, self._inputs_idx[i])
+                         for i, s in enumerate(self.stages)),
+            n_fields=len(self.fields),
+            updates=self._updates_idx,
+            topo=self._topo)
+
+    def dag_vmem_info(self, par_time: int, par_vec: int):
+        """Exact unrolled buffer-depth accounting for the perf model:
+        ``(window_slot_counts, n_in_streams, n_out_streams, aux_slabs)``,
+        or ``None`` for linear programs (priced by the chain formula,
+        unchanged from PR 6)."""
+        if self._linear:
+            return None
+        plan = unroll_dag(self.dag, par_time)
+        lay = dag_layout(plan, par_vec)
+        return (tuple(w for w in lay.wins if w),
+                len(self.fields), len(self.fields),
+                lay.aux_depth if self.has_aux else 0)
+
     # --- Stencil duck-typed aggregates (what geometry/perf-model read) ------
     @property
     def ndim(self) -> int:
@@ -201,7 +593,7 @@ class StencilProgram:
 
     @property
     def name(self) -> str:
-        if len(self.stages) == 1:
+        if len(self.stages) == 1 and self._linear:
             return self.stages[0].stencil.name
         return "program(" + "+".join(s.name for s in self.stages) + ")"
 
@@ -211,10 +603,10 @@ class StencilProgram:
 
     @property
     def radius(self) -> int:
-        """Per-iteration halo growth of the chain: one iteration applies
-        every stage, so the dependency cone widens by the *sum* of stage
-        radii — this is the ``rad`` that sizes ``size_halo = rad*par_time``."""
-        return sum(self.stage_radii)
+        """Per-iteration halo growth: the critical-path cumulative radius
+        over the DAG (= the *sum* of stage radii for a chain) — this is the
+        ``rad`` that sizes ``size_halo = rad*par_time``."""
+        return dag_radius(self.dag)
 
     @property
     def flop_pcu(self) -> int:
@@ -226,11 +618,11 @@ class StencilProgram:
 
     @property
     def num_read(self) -> int:
-        """External input streams of the *fused* chain per cell update
-        column: the stage-0 grid plus (if any stage needs it) the aux
-        stream.  Intermediates never touch external memory."""
-        return 1 + (1 if self.has_aux else 0)
+        """External input streams of the *fused* DAG per cell update
+        column: one per field plus (if any stage needs it) the aux stream.
+        Intermediates never touch external memory."""
+        return len(self.fields) + (1 if self.has_aux else 0)
 
     @property
     def num_write(self) -> int:
-        return 1
+        return len(self.fields)

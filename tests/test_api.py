@@ -54,6 +54,38 @@ def test_plan_roundtrip_across_backends(name, dims, par_time, bsize):
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("name", ["star1d_r1", "star1d_r2"])
+@pytest.mark.parametrize("bc", ["clamp", "periodic", "reflect"])
+def test_1d_plan_roundtrip_across_backends(name, bc):
+    """Satellite: 1D problems (stream axis only, no blocked dims) plan and
+    run on every local backend, matching the oracle."""
+    st = STENCILS[name]
+    dims = (97,)
+    g, _ = _data(st, dims)
+    problem = StencilProblem(name, dims, boundary=bc)
+    want = oracle_run(st, g, default_coeffs(st), 5, bc=problem.bc)
+    for backend in ("reference", "engine", "pallas_interpret"):
+        p = plan(problem, RunConfig(backend=backend, par_time=2))
+        np.testing.assert_allclose(np.asarray(p.run(g, 5)),
+                                   np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_1d_autotune_and_batch():
+    """1D geometry candidates are the trivial `()` bsize; autotune still
+    ranks par_time/par_vec and run_batch round-trips."""
+    problem = StencilProblem("star1d_r1", (128,))
+    assert choose_bsize_candidates(1, problem.shape) == [()]
+    p = plan(problem, RunConfig(backend="pallas_interpret", autotune=True))
+    assert p.geometry is not None and p.geometry.ndim == 1
+    g, _ = _data(STENCILS["star1d_r1"], (128,))
+    gs = jnp.stack([g, g * 0.5])
+    want = jnp.stack([oracle_run(STENCILS["star1d_r1"], gs[i],
+                                 default_coeffs(STENCILS["star1d_r1"]), 3)
+                      for i in range(2)])
+    np.testing.assert_allclose(np.asarray(p.run_batch(gs, 3)),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
 def test_distributed_plan_single_device_mesh_matches_engine():
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((1,), ("x",))

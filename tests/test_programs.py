@@ -364,3 +364,367 @@ def test_program_splits_exec_cache_from_single_stage():
                            StencilStage(make_star(2, 0))], shape)
     assert (_exec_key("engine", single, None)
             != _exec_key("engine", prog, None))
+
+# --- DAG programs: conformance vs an independent topological oracle -----------
+#
+# The evaluator below shares NOTHING with repro.kernels.ref beyond the stage
+# stencils' `apply` (which every backend shares by definition): numpy
+# padding, fixpoint scheduling instead of the library's Kahn topo order, a
+# plain dict of field arrays instead of DagSpec plumbing.
+
+from repro.core.stencils import make_combine  # noqa: E402
+
+_NP_PAD = {"clamp": "edge", "periodic": "wrap", "reflect": "reflect"}
+
+
+def _np_get(x, r, bc):
+    x = np.asarray(x)
+    p = x
+    for ax, kind in enumerate(bc.kinds):
+        pads = [(0, 0)] * x.ndim
+        pads[ax] = (r, r)
+        if kind == "constant":
+            p = np.pad(p, pads, mode="constant", constant_values=bc.value)
+        else:
+            p = np.pad(p, pads, mode=_NP_PAD[kind])
+
+    def get(off):
+        return p[tuple(slice(r + o, r + o + n)
+                       for o, n in zip(off, x.shape))]
+    return get
+
+
+def _np_dag_oracle(problem, state, iters, aux=None):
+    """iters program iterations, stages scheduled by *fixpoint* (re-scan
+    until every stage has its inputs) — an order-free restatement of the
+    topological semantics."""
+    prog = problem.program
+    coeffs = problem.resolve_coeffs(dtype=jnp.float32)
+    F = len(prog.fields)
+    state = np.asarray(state, np.float32)
+    fields = [state[i] for i in range(F)] if F > 1 else [state]
+    S = len(prog.stages)
+    for _ in range(iters):
+        vals, done = [None] * S, [False] * S
+        while not all(done):
+            progressed = False
+            for i, stage in enumerate(prog.stages):
+                if done[i]:
+                    continue
+                refs = prog.inputs_idx[i]
+                if any(r >= 0 and not done[r] for r in refs):
+                    continue
+                ins = [vals[r] if r >= 0 else fields[~r] for r in refs]
+                st = stage.stencil
+                gets = [_np_get(x, st.radius, stage.boundary) for x in ins]
+                vals[i] = np.asarray(st.apply(
+                    tuple(gets) if st.arity > 1 else gets[0], coeffs[i],
+                    aux if st.has_aux else None), np.float32)
+                done[i] = progressed = True
+            assert progressed, "cycle leaked past validation"
+        fields = [vals[u] if u >= 0 else fields[~u]
+                  for u in prog.updates_idx]
+    return np.stack(fields) if F > 1 else fields[0]
+
+
+def _wave2d_program(c=0.1):
+    """Second-order wave equation: two fields, one simultaneous rotation."""
+    return StencilProgram(
+        (StencilStage(make_star(2, 1), name="lapu", inputs=("u",)),
+         StencilStage(make_combine(2, 3), name="unext",
+                      inputs=("u", "u_prev", "lapu"),
+                      coeffs={"w0": 2.0, "w1": -1.0, "w2": c})),
+        fields=("u", "u_prev"),
+        updates={"u": "unext", "u_prev": "u"})
+
+
+def _residual_program():
+    """Fan-in from a field: r = u - smooth(u) reads `u` twice (raw + through
+    a stage)."""
+    return StencilProgram(
+        (StencilStage("diffusion2d", name="Au", inputs=("u",)),
+         StencilStage(make_combine(2, 2), name="resid", inputs=("u", "Au"),
+                      coeffs={"w0": 1.0, "w1": -1.0})))
+
+
+def _diamond_program():
+    """Fan-out then fan-in: two independent views of `u` recombined."""
+    s = make_star(2, 1)
+    return StencilProgram(
+        (StencilStage(s, name="a", inputs=("u",)),
+         StencilStage(s, name="b", inputs=("u",),
+                      coeffs={"c0": 0.5, "c_0_1": 0.2}),
+         StencilStage(make_combine(2, 2), name="m", inputs=("a", "b"),
+                      coeffs={"w0": 0.6, "w1": 0.4})))
+
+
+_DAG_CASES = [
+    ("wave2d", _wave2d_program, (22, 19), "periodic", 1, 4),
+    ("wave2d", _wave2d_program, (26, 17), ("clamp", "reflect"), 2, 3),
+    ("residual", _residual_program, (20, 16), "clamp", 2, 3),
+    ("diamond", _diamond_program, (24, 15), ("periodic", "clamp"), 2, 4),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize(
+    "name,build,shape,bc,par_vec,iters", _DAG_CASES,
+    ids=[f"{c[0]}-{i}" for i, c in enumerate(_DAG_CASES)])
+def test_dag_matches_topological_oracle(backend, name, build, shape, bc,
+                                        par_vec, iters):
+    if backend == "engine":
+        par_vec = 1
+    problem = StencilProblem(build(), shape, boundary=bc)
+    assert problem.is_dag
+    state = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(11), problem.state_shape, jnp.float32, 0.5, 2.0))
+    want = _np_dag_oracle(problem, state, iters)
+    p = plan(problem, RunConfig(backend=backend, par_time=2, bsize=8,
+                                par_vec=par_vec))
+    np.testing.assert_allclose(np.asarray(p.run(state, iters=iters)),
+                               want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_field_run_batch(backend):
+    problem = StencilProblem(_wave2d_program(), (18, 16), boundary="periodic")
+    p = plan(problem, RunConfig(backend=backend, par_time=2, bsize=8,
+                                par_vec=1))
+    base = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(12), problem.state_shape, jnp.float32, 0.5, 2.0))
+    batch = np.stack([base, base * 0.5, base + 0.1])
+    want = np.stack([_np_dag_oracle(problem, batch[i], 3) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(p.run_batch(batch, iters=3)),
+                               want, rtol=3e-5, atol=3e-5)
+    with pytest.raises(ValueError, match="state"):
+        p.run(base[0], iters=1)           # missing field axis
+
+
+# --- randomized DAG sweep -----------------------------------------------------
+
+def _draw_dag_case(rng):
+    """A random valid 2D DAG: every stage feeds something, every field
+    updates, periodicity uniform per axis."""
+    n_fields = rng.choice([1, 2])
+    fields = tuple(f"f{i}" for i in range(n_fields))
+    n_inner = rng.randint(1, 3)
+    stages, names = [], []
+    for i in range(n_inner):
+        arity = rng.choice([1, 1, 2])
+        pool = list(fields) + names
+        if arity == 1:
+            r = rng.choice([0, 1, 2])
+            stc = make_star(2, r)
+            ins = (rng.choice(pool),)
+        else:
+            stc = make_combine(2, 2)
+            ins = (rng.choice(pool), rng.choice(pool))
+        names.append(f"s{i}")
+        stages.append(StencilStage(stc, name=f"s{i}", inputs=ins))
+    # terminal combine consumes every not-yet-consumed stage (+ field 0)
+    consumed = {n for s in stages if s.inputs for n in s.inputs}
+    tail = [n for n in names if n not in consumed] + [fields[0]]
+    if len(tail) == 1:
+        stages.append(StencilStage(make_star(2, 1), name="out",
+                                   inputs=(tail[0],)))
+    else:
+        stages.append(StencilStage(make_combine(2, len(tail)), name="out",
+                                   inputs=tuple(tail)))
+    updates = {fields[0]: "out"}
+    for k in range(1, n_fields):
+        updates[fields[k]] = fields[k - 1]      # rotate
+    prog = StencilProgram(tuple(stages), fields=fields, updates=updates)
+    periodic = [rng.random() < 0.3 for _ in range(2)]
+    bc = tuple("periodic" if p_ else rng.choice(_NONPERIODIC)
+               for p_ in periodic)
+    return (prog, bc, rng.randint(1, 2), rng.choice([1, 2]),
+            rng.randint(1, 3), rng.choice(["engine", "pallas_interpret"]),
+            rng.randint(0, 10_000))
+
+
+_DAG_SEEDED = [_draw_dag_case(random.Random(2000 + i)) for i in range(8)]
+
+
+@pytest.mark.parametrize("case", _DAG_SEEDED,
+                         ids=[f"dag{i}" for i in range(len(_DAG_SEEDED))])
+def test_random_dag_matches_oracle(case):
+    prog, bc, par_time, par_vec, iters, backend, seed = case
+    if backend == "engine":
+        par_vec = 1
+    rad = max(1, sum(s.stencil.radius for s in prog.stages))
+    stream = 3 * rad * par_time + 5
+    problem = StencilProblem(prog, (stream, 13), boundary=bc)
+    state = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(seed), problem.state_shape, jnp.float32, 0.5, 2.0))
+    want = _np_dag_oracle(problem, state, iters)
+    p = plan(problem, RunConfig(backend=backend, par_time=par_time,
+                                bsize=2 * rad * par_time + 4,
+                                par_vec=par_vec))
+    np.testing.assert_allclose(np.asarray(p.run(state, iters=iters)),
+                               want, rtol=3e-5, atol=3e-5)
+
+
+# --- the linear fast path IS the DAG path -------------------------------------
+
+def test_linear_chain_bit_identical_through_dag_executor():
+    """A linear program run through the chain wrapper and through the DAG
+    wrapper (its chain_dag form) must agree BIT FOR BIT — the acceptance
+    criterion that the refactor left PR 6's linear kernels untouched."""
+    from repro.core.blocking import BlockGeometry
+    from repro.kernels.ops import (pack_dag_coeffs, pack_program_coeffs,
+                                   run_pallas_chain, run_pallas_dag)
+    from repro.programs import chain_dag
+    problem = StencilProblem(
+        [StencilStage(make_star(2, 1)), StencilStage("diffusion2d")],
+        (24, 18), boundary=("clamp", "reflect"))
+    geom = BlockGeometry(2, (24, 18), problem.stencil.radius, 2, (9,),
+                         par_vec=1)
+    g = jax.random.uniform(jax.random.PRNGKey(13), (24, 18), jnp.float32,
+                           0.5, 2.0)
+    cf = problem.resolve_coeffs(dtype=jnp.float32)
+    dag = chain_dag(problem.exec_stages)
+    a = run_pallas_chain(problem.exec_stages, geom, g,
+                         pack_program_coeffs(problem.exec_stages, cf), 5,
+                         None, interpret=True)
+    b = run_pallas_dag(dag, geom, g, pack_dag_coeffs(dag, cf), 5, None,
+                       interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b)), \
+        "chain and DAG executors diverged on a linear program"
+
+
+# --- DAG validation: every malformed wiring fails at construction -------------
+
+def test_dag_cycle_rejected():
+    s = make_star(2, 1)
+    with pytest.raises(ValueError, match="[Cc]ycle"):
+        StencilProgram((StencilStage(s, name="a", inputs=("b",)),
+                        StencilStage(s, name="b", inputs=("a",))))
+
+
+def test_dag_dangling_input_rejected():
+    with pytest.raises(ValueError, match="nope"):
+        StencilProgram((StencilStage(make_star(2, 1), name="a",
+                                     inputs=("nope",)),))
+
+
+def test_dag_arity_mismatch_rejected():
+    with pytest.raises(ValueError, match="2 .*1|1 .*2|arity|inputs"):
+        StencilStage(make_combine(2, 2), name="m", inputs=("u",))
+
+
+def test_dag_unused_stage_rejected():
+    s = make_star(2, 1)
+    with pytest.raises(ValueError, match="never consumed"):
+        StencilProgram((StencilStage(s, name="dead", inputs=("u",)),
+                        StencilStage(s, name="live", inputs=("u",))),
+                       updates={"u": "live"})
+
+
+def test_dag_bad_update_target_rejected():
+    with pytest.raises(ValueError):
+        StencilProgram((StencilStage(make_star(2, 1), name="a",
+                                     inputs=("u",)),),
+                       updates={"u": "ghost"})
+
+
+def test_multi_stage_without_names_needs_explicit_inputs():
+    """A multi-input stage downstream of an unnamed fan-out cannot guess its
+    wiring — construction must demand explicit inputs."""
+    with pytest.raises(ValueError, match="inputs"):
+        StencilProgram((StencilStage(make_star(2, 1)),
+                        StencilStage(make_combine(2, 2))))
+
+
+def test_dag_mixed_periodicity_across_branches_rejected():
+    """Periodicity is structural (wrap layout, stream extension, the ring):
+    two parallel DAG branches cannot disagree on an axis' periodicity."""
+    s = make_star(2, 1)
+    prog = StencilProgram(
+        (StencilStage(s, name="a", inputs=("u",),
+                      boundary=("periodic", "clamp")),
+         StencilStage(s, name="b", inputs=("u",), boundary="clamp"),
+         StencilStage(make_combine(2, 2), name="m", inputs=("a", "b"))))
+    with pytest.raises(ValueError, match="periodic"):
+        StencilProblem(prog, (16, 16))
+
+
+# --- cache hygiene for DAG programs -------------------------------------------
+
+def _pr6_fingerprint(prog):
+    """The pre-DAG hashing algorithm, verbatim: stage fingerprints + (name,
+    coeffs, BC token) only.  Linear programs MUST still hash to this."""
+    import hashlib
+    h = hashlib.sha1()
+    for s in prog.stages:
+        btok = (s.boundary.token() if hasattr(s.boundary, "token")
+                else repr(s.boundary))
+        h.update(stencil_fingerprint(s.stencil).encode())
+        h.update(repr((s.name, s.coeffs, btok)).encode())
+    return h.hexdigest()[:8]
+
+
+def test_linear_program_keeps_pre_dag_fingerprint():
+    prob = StencilProblem(
+        [StencilStage("diffusion2d"), StencilStage(make_star(2, 1))],
+        (24, 24), boundary=("clamp", "reflect"))
+    assert not prob.is_dag
+    assert stencil_fingerprint(prob.stencil) == _pr6_fingerprint(prob.stencil)
+
+
+def test_dag_wiring_splits_fingerprint():
+    shape = (20, 16)
+    lin = StencilProblem([StencilStage("diffusion2d"),
+                          StencilStage("diffusion2d")], shape)
+    dag = StencilProblem(_residual_program(), shape)
+    wave = StencilProblem(_wave2d_program(), shape)
+    fps = {stencil_fingerprint(p.stencil) for p in (lin, dag, wave)}
+    assert len(fps) == 3
+    # and the exec keys split too (different compiled graphs)
+    assert (_exec_key("engine", lin, None) != _exec_key("engine", dag, None))
+    assert (_exec_key("engine", dag, None) != _exec_key("engine", wave, None))
+
+
+def test_dtype_splits_keys_for_dag_programs():
+    """Satellite regression: dtype is part of both cache keys for *program*
+    problems, DAG-shaped included."""
+    f32 = StencilProblem(_wave2d_program(), (24, 24), dtype="float32")
+    b16 = StencilProblem(_wave2d_program(), (24, 24), dtype="bfloat16")
+    cfg = _engine_cfg()
+    dev = cfg.resolved_device()
+    assert (schedule_key(f32, cfg, dev, 1, None, salt="s")
+            != schedule_key(b16, cfg, dev, 1, None, salt="s"))
+    assert _exec_key("engine", f32, None) != _exec_key("engine", b16, None)
+
+
+def test_dag_exec_cache_never_serves_across_dtypes():
+    clear_exec_cache()
+    try:
+        problem32 = StencilProblem(_wave2d_program(), (18, 16),
+                                   dtype="float32")
+        problem16 = StencilProblem(_wave2d_program(), (18, 16),
+                                   dtype="bfloat16")
+        base = jax.random.uniform(jax.random.PRNGKey(14),
+                                  problem32.state_shape, jnp.float32, 0.5, 2.0)
+        p32 = plan(problem32, _engine_cfg(bsize=8))
+        out32 = p32.run(base, iters=2)
+        misses = exec_cache_stats()["misses"]
+        p16 = plan(problem16, _engine_cfg(bsize=8))
+        out16 = p16.run(base.astype(jnp.bfloat16), iters=2)
+        assert exec_cache_stats()["misses"] == misses + 1
+        assert out32.dtype == jnp.float32 and out16.dtype == jnp.bfloat16
+    finally:
+        clear_exec_cache()
+
+
+# --- distributed DAG (subprocess: fake multi-device view) ---------------------
+
+def test_distributed_dag_matches_oracle():
+    script = os.path.join(os.path.dirname(__file__),
+                          "dag_distributed_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL OK" in out.stdout
