@@ -36,10 +36,24 @@ from repro.api.schedule_cache import ScheduleCache
 from repro.api.tuner import TunedCandidate, tune
 from repro.programs import StencilProgram, StencilStage
 
+#: serving-subsystem names re-exported lazily from ``repro.serve`` —
+#: lazily because ``repro.serve`` itself imports this package, and because
+#: plain plan/run users should not pay the asyncio import
+_SERVE_EXPORTS = ("BucketConfig", "ServeResult", "ServiceConfig",
+                  "ServiceMetrics", "StencilRequest", "StencilService",
+                  "from_config", "serve")
+
 __all__ = [
     "Backend", "BackendProgram", "BoundaryCondition", "RunConfig",
     "ScheduleCache", "StencilPlan", "StencilProblem", "StencilProgram",
     "StencilStage", "TunedCandidate", "as_program", "clear_exec_cache",
     "exec_cache_stats", "get_backend", "list_backends", "plan",
-    "register_backend", "tune",
+    "register_backend", "tune", *_SERVE_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    if name in _SERVE_EXPORTS:
+        import repro.serve as _serve
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -145,6 +145,10 @@ def list_backends() -> list:
 
 _EXEC_CACHE: Dict[tuple, Callable] = {}
 _EXEC_STATS = {"hits": 0, "misses": 0}
+#: per-key hit/miss breakdown — the global totals cannot distinguish "one
+#: hot executable" from "N executables each compiled once" (batch-fill vs
+#: cache-thrash); this can, and the serving metrics snapshot exports it
+_EXEC_KEY_STATS: Dict[tuple, Dict[str, int]] = {}
 
 #: how many times each cached program's Python body was (re)traced — the
 #: observable proof that an executable-cache hit skipped a re-trace
@@ -157,11 +161,21 @@ def _note_trace(tag: str) -> None:
     TRACE_COUNTS[tag] += 1
 
 
+def _key_str(key: tuple) -> str:
+    """Human-scannable rendering of an executable-cache key for reports
+    (the raw tuple mixes nested tuples and tagged strings)."""
+    return " ".join(str(part) for part in key)
+
+
 def exec_cache_stats() -> dict:
-    """Executable-cache observability: entry count, hit/miss totals, and the
-    per-backend trace counts."""
+    """Executable-cache observability: entry count, hit/miss totals, the
+    per-backend trace counts, and the per-key hit/miss breakdown
+    (``by_key``) — so a metrics snapshot can tell a saturated hot program
+    from a thrashing key population."""
     return {"size": len(_EXEC_CACHE), "hits": _EXEC_STATS["hits"],
-            "misses": _EXEC_STATS["misses"], "traces": dict(TRACE_COUNTS)}
+            "misses": _EXEC_STATS["misses"], "traces": dict(TRACE_COUNTS),
+            "by_key": {_key_str(k): dict(v)
+                       for k, v in _EXEC_KEY_STATS.items()}}
 
 
 def clear_exec_cache() -> None:
@@ -170,6 +184,7 @@ def clear_exec_cache() -> None:
     _EXEC_CACHE.clear()
     _EXEC_STATS["hits"] = 0
     _EXEC_STATS["misses"] = 0
+    _EXEC_KEY_STATS.clear()
     TRACE_COUNTS.clear()
 
 
@@ -180,12 +195,16 @@ def _program_cache(use_cache: bool) -> Callable:
     call."""
     if use_cache:
         def get(key, build):
+            per_key = _EXEC_KEY_STATS.setdefault(
+                key, {"hits": 0, "misses": 0})
             fn = _EXEC_CACHE.get(key)
             if fn is None:
                 _EXEC_STATS["misses"] += 1
+                per_key["misses"] += 1
                 fn = _EXEC_CACHE[key] = build()
             else:
                 _EXEC_STATS["hits"] += 1
+                per_key["hits"] += 1
             return fn
     else:
         local: Dict[tuple, Callable] = {}

@@ -13,6 +13,7 @@ import dataclasses
 import math
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.api import schedule_cache, tuner
@@ -273,7 +274,18 @@ class StencilPlan:
     def _coeff_payload(self, coeffs):
         """Resolve run-time coefficients into the backend payload: a plain
         dict for single-stage problems (the legacy custom-backend contract),
-        a tuple of per-stage dicts for programs."""
+        a tuple of per-stage dicts for programs.  The no-override payload is
+        resolved once and memoized — it is the common case on the serving
+        hot path, and re-resolving materializes fresh jnp scalars per call."""
+        if coeffs is None:
+            cached = getattr(self, "_default_payload", None)
+            if cached is None:
+                resolved = self.problem.resolve_coeffs(
+                    None, dtype=self.problem.jnp_dtype)
+                cached = (resolved[0] if self.problem.n_stages == 1
+                          else resolved)
+                object.__setattr__(self, "_default_payload", cached)
+            return cached
         resolved = self.problem.resolve_coeffs(coeffs,
                                                dtype=self.problem.jnp_dtype)
         return resolved[0] if self.problem.n_stages == 1 else resolved
@@ -328,6 +340,52 @@ class StencilPlan:
                 else aux[b]) for b in range(grids.shape[0])]
             return jnp.stack(outs)
         return self._execute_batch(grids, coeffs, iters, aux)
+
+    def prewarm(self, batch_sizes=(1,), *, iters: int = 1, coeffs=None,
+                single: bool = True) -> dict:
+        """Compile (and warm) the executables this plan will need, before
+        traffic arrives.
+
+        Until now warm-up was an undocumented side effect of the first
+        ``run``/``run_batch`` call — the first request of every batch size
+        paid the trace+compile cost.  ``prewarm`` makes it explicit: it
+        pushes zero grids through ``run_batch`` for every size in
+        ``batch_sizes`` (and through ``run`` when ``single=True``), which
+        populates the process-level executable cache, so same-key plans —
+        including this one — serve every listed batch size with zero new
+        traces.  ``iters=1`` keeps each warming run to a single super-step.
+
+        Aux-taking stencils warm the *per-batch* aux mode — each batch
+        member carrying its own aux grid — because that is the mode the
+        serving path uses (per-request aux grids stacked); a shared-aux
+        ``run_batch`` call compiles its own executable on first use.
+
+        Returns ``{"single": seconds} | {B: seconds}`` per warmed entry
+        (compile + one warm execution each)."""
+        import time as _time
+        if int(iters) < 1:
+            raise ValueError(f"prewarm iters must be >= 1, got {iters}")
+        zeros = jnp.zeros(self.problem.state_shape, self.problem.jnp_dtype)
+        aux = (jnp.zeros(self.problem.shape, self.problem.jnp_dtype)
+               if self.problem.needs_aux else None)
+        timings: dict = {}
+        if single:
+            t0 = _time.perf_counter()
+            jax.block_until_ready(self.run(zeros, iters, coeffs, aux=aux))
+            timings["single"] = _time.perf_counter() - t0
+        for b in sorted({int(b) for b in batch_sizes}):
+            if b < 1:
+                raise ValueError(f"batch sizes must be >= 1, got {b}")
+            aux_b = (jnp.zeros((b,) + self.problem.shape,
+                               self.problem.jnp_dtype)
+                     if self.problem.needs_aux else None)
+            t0 = _time.perf_counter()
+            jax.block_until_ready(self.run_batch(
+                jnp.zeros((b,) + self.problem.state_shape,
+                          self.problem.jnp_dtype),
+                iters, coeffs, aux=aux_b))
+            timings[b] = _time.perf_counter() - t0
+        return timings
 
     # --- introspection ------------------------------------------------------
     def predicted(self, iters: Optional[int] = None,

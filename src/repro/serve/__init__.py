@@ -1,0 +1,41 @@
+"""``repro.serve`` — async stencil serving over the ``plan()`` substrate.
+
+Admission -> coalesce -> padded ``run_batch``::
+
+    from repro.serve import StencilRequest, from_config
+
+    service = await from_config({
+        "buckets": [{"problem": {"stencil": "diffusion2d",
+                                 "shape": [256, 512]},
+                     "run": {"backend": "engine", "autotune": True},
+                     "max_batch": 8, "max_wait_ms": 2.0}],
+    })
+    out = await service.submit(StencilRequest("diffusion2d", grid, iters=50))
+    print(service.snapshot()["latency_ms"])
+    await service.stop()
+
+Requests bucket by (stencil/program fingerprint, state shape, boundary
+condition, dtype); each bucket coalesces compatible requests into one
+``run_batch`` launch, padded along the batch axis to a pre-warmed batch
+class — results are bit-identical to per-request ``plan().run()`` wherever
+the backend's ``run_batch`` is (everywhere but periodic-BC Pallas reshapes,
+which are ulp-close).  Queues are bounded: overload answers
+``ServiceOverloaded`` with a retry-after hint, never a silent drop.
+"""
+from repro.serve.batcher import BucketState, PendingRequest
+from repro.serve.config import BucketConfig, ServiceConfig
+from repro.serve.metrics import ServiceMetrics, percentile
+from repro.serve.request import (DeadlineExceeded, NoMatchingBucket,
+                                 ServeError, ServeResult, ServiceClosed,
+                                 ServiceOverloaded, StencilRequest,
+                                 bucket_key)
+from repro.serve.service import (StencilService, coeffs_signature,
+                                 from_config, serve)
+
+__all__ = [
+    "BucketConfig", "BucketState", "DeadlineExceeded", "NoMatchingBucket",
+    "PendingRequest", "ServeError", "ServeResult", "ServiceClosed",
+    "ServiceConfig", "ServiceMetrics", "ServiceOverloaded", "StencilRequest",
+    "StencilService", "bucket_key", "coeffs_signature", "from_config",
+    "percentile", "serve",
+]

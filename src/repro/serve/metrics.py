@@ -1,0 +1,145 @@
+"""Serving observability: counters, latency percentiles, batch-fill, JSON.
+
+``ServiceMetrics`` is updated only from the event-loop thread (admission
+and delivery both run there), so it needs no locking; ``snapshot()`` folds
+in the process-level executable-cache statistics — including the per-key
+hit/miss breakdown — so batch-fill problems and cache thrash are
+distinguishable from one JSON document.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from pathlib import Path
+from typing import Dict, Optional
+
+
+def percentile(samples, q: float) -> Optional[float]:
+    """Nearest-rank percentile (q in [0, 100]) of an unsorted sample list."""
+    if not samples:
+        return None
+    s = sorted(samples)
+    if len(s) == 1:
+        return float(s[0])
+    rank = max(0, min(len(s) - 1, round(q / 100.0 * (len(s) - 1))))
+    return float(s[rank])
+
+
+#: rejection kinds — every non-served request lands in exactly one counter,
+#: which is what "never silently dropped" means operationally
+REJECT_KINDS = ("overload", "deadline", "no_bucket", "closed")
+
+
+class ServiceMetrics:
+    """Mutable service telemetry; ``snapshot()`` renders it immutably."""
+
+    def __init__(self, clock=time.monotonic, window: int = 4096):
+        self._clock = clock
+        self._window = window
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every counter and sample window (benchmark warm-up passes
+        reset before the measured interval; pre-warm timings survive via
+        :meth:`note_prewarm` being re-recorded at boot only)."""
+        self.started_at: Optional[float] = None
+        self.submitted = 0
+        self.completed = 0
+        self.rejected: Dict[str, int] = {k: 0 for k in REJECT_KINDS}
+        self.batches = 0
+        self.rounds = 0
+        self.busy_s = 0.0
+        #: delivered cell-updates (sum over completed requests of
+        #: prod(shape) * iters) — the serving-throughput numerator
+        self.cells = 0
+        self.prewarm_s: Dict[str, float] = {}
+        self.queue_depth: Dict[str, int] = {}
+        self._latency_s = deque(maxlen=self._window)
+        self._fills = deque(maxlen=self._window)
+        self._batch_sizes = deque(maxlen=self._window)
+
+    # --- recording (event-loop thread only) ---------------------------------
+    def note_started(self) -> None:
+        self.started_at = self._clock()
+
+    def note_submitted(self) -> None:
+        self.submitted += 1
+
+    def note_rejected(self, kind: str) -> None:
+        self.rejected[kind] += 1
+
+    def note_depth(self, bucket: str, depth: int) -> None:
+        self.queue_depth[bucket] = depth
+
+    def note_prewarm(self, bucket: str, seconds: float) -> None:
+        self.prewarm_s[bucket] = seconds
+
+    def note_batch(self, real: int, padded: int, rounds: int,
+                   exec_s: float) -> None:
+        self.batches += 1
+        self.rounds += rounds
+        self.busy_s += exec_s
+        self._fills.append(real / padded)
+        self._batch_sizes.append(real)
+
+    def note_completed(self, latency_s: float, cell_updates: int) -> None:
+        self.completed += 1
+        self.cells += cell_updates
+        self._latency_s.append(latency_s)
+
+    # --- reporting ----------------------------------------------------------
+    @property
+    def batch_fill(self) -> Optional[float]:
+        if not self._fills:
+            return None
+        return sum(self._fills) / len(self._fills)
+
+    def snapshot(self) -> dict:
+        """One JSON-serializable document of everything above, plus the
+        executable-cache statistics (global and per-key)."""
+        from repro.api.backends import exec_cache_stats
+        now = self._clock()
+        lat = list(self._latency_s)
+        wall = (now - self.started_at) if self.started_at is not None else None
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": dict(self.rejected),
+            "rejected_total": sum(self.rejected.values()),
+            "in_flight": (self.submitted - self.completed
+                          - sum(self.rejected.values())),
+            "batches": self.batches,
+            "rounds": self.rounds,
+            "batch_fill": self.batch_fill,
+            "batch_size_mean": (sum(self._batch_sizes)
+                                / len(self._batch_sizes)
+                                if self._batch_sizes else None),
+            "latency_ms": {
+                "p50": _ms(percentile(lat, 50)),
+                "p90": _ms(percentile(lat, 90)),
+                "p99": _ms(percentile(lat, 99)),
+                "max": _ms(max(lat)) if lat else None,
+                "n": len(lat),
+            },
+            "cells": self.cells,
+            "busy_s": self.busy_s,
+            "wall_s": wall,
+            "cells_s_busy": self.cells / self.busy_s if self.busy_s else None,
+            "cells_s_wall": (self.cells / wall if wall else None),
+            "queue_depth": dict(self.queue_depth),
+            "prewarm_s": dict(self.prewarm_s),
+            "exec_cache": exec_cache_stats(),
+        }
+
+    def write_json(self, path) -> Path:
+        """Snapshot to a JSON file (parents created); returns the path."""
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.snapshot(), indent=1, sort_keys=True)
+                     + "\n")
+        return p
+
+
+def _ms(seconds: Optional[float]) -> Optional[float]:
+    return None if seconds is None else seconds * 1e3

@@ -1,0 +1,447 @@
+"""The asyncio stencil service: admission -> coalesce -> padded run_batch.
+
+Request lifecycle::
+
+    submit(StencilRequest)                       (event loop)
+      └─ bucket lookup by (fingerprint, state shape, BC, dtype)
+         └─ bounded-queue admission  — full -> ServiceOverloaded(retry_after)
+            └─ per-bucket worker coalesces under (max_batch, max_wait_ms)
+               └─ deadline sweep     — expired -> DeadlineExceeded
+                  └─ batch padded to a pre-warmed batch class (edge
+                     replication along the batch axis — bit-exact) and
+                     advanced by staged run_batch rounds  (compute thread)
+                     └─ futures resolved with ServeResult   (event loop)
+
+With ``max_concurrent_batches > 1`` compute runs in worker threads
+(``asyncio.to_thread``) so launches overlap and admission stays responsive
+while the device crunches; with a single launch slot the thread hop would
+only add context switches to the critical path, so compute runs inline on
+the loop by default (``ServiceConfig.offload_compute`` overrides either
+way).
+Shutdown is graceful: ``stop()`` refuses new admissions, flushes every
+queued request (launching immediately, windows ignored), and joins the
+workers — bounded queues make the drain bounded.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import StencilPlan, plan as make_plan
+from repro.serve.batcher import BucketState, PendingRequest
+from repro.serve.config import BucketConfig, ServiceConfig
+from repro.serve.metrics import ServiceMetrics
+from repro.serve.request import (DeadlineExceeded, NoMatchingBucket,
+                                 ServeResult, ServiceClosed,
+                                 ServiceOverloaded, StencilRequest)
+
+
+#: signature of a request with no coefficient overrides — computed without
+#: resolving (resolution materializes per-stage jnp scalars and ``float()``
+#: blocks on each one: ~0.4 ms of admission latency per request, on the
+#: event-loop thread).  Default-coeff requests are the common case and all
+#: resolve identically within a bucket, so a sentinel groups them exactly.
+_DEFAULT_SIG = ("@default-coeffs",)
+
+
+def coeffs_signature(problem, coeffs):
+    """Hashable identity of the *resolved* coefficient payload.  Two
+    requests coalesce into one ``run_batch`` call only when these agree —
+    the call takes a single coefficient set for the whole batch.  (A
+    request passing overrides that happen to equal the defaults lands in a
+    different sub-group than a ``coeffs=None`` request: a fill loss, never
+    a correctness loss.)"""
+    if not coeffs:
+        return _DEFAULT_SIG
+    resolved = problem.resolve_coeffs(coeffs)
+    parts = []
+    for stage in resolved:
+        for name in sorted(stage):
+            v = stage[name]
+            try:
+                parts.append((name, float(v)))
+            except (TypeError, ValueError):     # array-valued coefficient
+                a = np.asarray(v)
+                parts.append((name, a.shape, a.tobytes()))
+    return tuple(parts)
+
+
+def _stage(arrays, padded: int, dtype) -> np.ndarray:
+    """Host-side batch assembly: member arrays (numpy or device) into one
+    contiguous ``(padded, *shape)`` numpy block, edge-replicating the last
+    real member along the batch axis."""
+    members = [np.asarray(a, dtype) for a in arrays]
+    members += [members[-1]] * (padded - len(members))
+    return np.stack(members)
+
+
+class _Bucket:
+    """Runtime state of one configured bucket."""
+
+    def __init__(self, cfg: BucketConfig):
+        self.cfg = cfg
+        self.state = BucketState(cfg)
+        self.plan: Optional[StencilPlan] = None
+        self.wake: Optional[asyncio.Event] = None   # bound at start()
+        self.task: Optional[asyncio.Task] = None
+        #: trailing per-launch seconds (retry-after estimation)
+        self.last_batch_s: float = 0.0
+
+
+class StencilService:
+    """Bucketed, coalescing, pre-warmed stencil server.
+
+    Build one directly and ``await service.start()``, or use the
+    :func:`serve` / :func:`from_config` factories.  ``clock`` is injectable
+    for deterministic tests (must agree with the loop's notion of elapsed
+    real time, since coalescing windows sleep on the loop)."""
+
+    def __init__(self, config: Union[ServiceConfig, dict, str, list], *,
+                 clock=time.monotonic):
+        self.config = ServiceConfig.make(config)
+        self._clock = clock
+        self.metrics = ServiceMetrics(clock=clock)
+        self._buckets: Dict[tuple, _Bucket] = {}
+        for bcfg in self.config.buckets:
+            self._buckets[bcfg.key] = _Bucket(bcfg)
+        self._started = False
+        self._closing = False
+        self._closed = False
+        self._seq = 0
+        #: offload auto-policy: a worker thread only pays for itself when
+        #: launches can overlap; with one launch slot the hop just inserts
+        #: two context switches into every launch's critical path
+        self._offload = (self.config.offload_compute
+                         if self.config.offload_compute is not None
+                         else self.config.max_concurrent_batches > 1)
+        self._sem: Optional[asyncio.Semaphore] = None
+        #: in-flight coalesced launches (tasks) — awaited by stop()
+        self._launches: set = set()
+
+    # --- lifecycle ----------------------------------------------------------
+    async def start(self, prewarm: bool = True) -> "StencilService":
+        """Boot: build every bucket's plan, optionally pre-warm the
+        executables for the declared batch classes, spawn the workers."""
+        if self._started:
+            raise RuntimeError("service already started")
+        self._sem = asyncio.Semaphore(self.config.max_concurrent_batches)
+        for b in self._buckets.values():
+            # plan() may consult the schedule cache / run the measured
+            # tuner — keep the loop responsive while it does
+            b.plan = await asyncio.to_thread(
+                make_plan, b.cfg.problem, b.cfg.run)
+            if prewarm:
+                t0 = self._clock()
+                await asyncio.to_thread(self._prewarm_bucket, b)
+                self.metrics.note_prewarm(b.cfg.name, self._clock() - t0)
+        for b in self._buckets.values():
+            b.wake = asyncio.Event()
+            b.task = asyncio.create_task(self._worker(b),
+                                         name=f"serve-{b.cfg.name}")
+        self._started = True
+        self.metrics.note_started()
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Graceful shutdown: refuse new admissions, flush queued requests
+        (``drain=True``) or fail them with :class:`ServiceClosed`, join the
+        workers."""
+        if self._closed:
+            return
+        self._closing = True
+        if not drain:
+            for b in self._buckets.values():
+                while b.state.pending:
+                    rec = b.state.pending.popleft()
+                    self._fail(rec, ServiceClosed("service stopped"), "closed")
+        for b in self._buckets.values():
+            if b.wake is not None:
+                b.wake.set()
+        tasks = [b.task for b in self._buckets.values() if b.task is not None]
+        if tasks:
+            done, pending = await asyncio.wait(
+                tasks, timeout=self.config.drain_timeout_s)
+            for t in pending:
+                t.cancel()
+            if pending:
+                await asyncio.gather(*pending, return_exceptions=True)
+        # the workers only *dispatch* launches; join the in-flight ones so
+        # every already-admitted request gets its answer before we close
+        if self._launches:
+            await asyncio.gather(*list(self._launches),
+                                 return_exceptions=True)
+        # anything a cancelled worker left behind still gets an answer
+        for b in self._buckets.values():
+            while b.state.pending:
+                rec = b.state.pending.popleft()
+                self._fail(rec, ServiceClosed("drain timed out"), "closed")
+        self._closed = True
+
+    async def __aenter__(self) -> "StencilService":
+        if not self._started:
+            await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # --- admission ----------------------------------------------------------
+    async def submit(self, request: StencilRequest) -> ServeResult:
+        """Admit one request and await its result.  Raises the typed
+        rejections (:class:`ServiceOverloaded`, :class:`DeadlineExceeded`,
+        :class:`NoMatchingBucket`, :class:`ServiceClosed`) — admission
+        errors synchronously, queued failures through the future."""
+        return await self.submit_nowait(request)
+
+    def submit_nowait(self, request: StencilRequest) -> "asyncio.Future":
+        """Admit without awaiting: returns the result future (open-loop
+        load generation), raising admission rejections immediately."""
+        if not self._started:
+            raise RuntimeError("service not started — await start() first")
+        now = self._clock()
+        self.metrics.note_submitted()
+        if self._closing:
+            self.metrics.note_rejected("closed")
+            raise ServiceClosed("service is draining; resubmit elsewhere")
+        if not isinstance(request, StencilRequest):
+            raise TypeError(f"submit takes a StencilRequest, "
+                            f"got {type(request).__name__}")
+        b = self._buckets.get(request.bucket_key)
+        if b is None:
+            self.metrics.note_rejected("no_bucket")
+            raise NoMatchingBucket(
+                f"no bucket serves {request.problem.stencil.name} "
+                f"{request.problem.state_shape} "
+                f"bc={request.problem.bc.token()} "
+                f"dtype={request.problem.dtype}; declared: "
+                f"{[bk.cfg.name for bk in self._buckets.values()]}")
+        sig = coeffs_signature(request.problem, request.coeffs)
+        self._seq += 1
+        rec = PendingRequest(
+            seq=self._seq, request=request, submitted_at=now,
+            expires_at=(now + request.deadline_s
+                        if request.deadline_s is not None else None),
+            coeffs_sig=sig, iters=request.iters,
+            future=asyncio.get_event_loop().create_future())
+        if not b.state.admit(rec, now):
+            self.metrics.note_rejected("overload")
+            raise ServiceOverloaded(
+                f"bucket {b.cfg.name!r} queue is full "
+                f"({b.cfg.queue_cap} pending)",
+                retry_after_s=self._retry_after(b))
+        depth = b.state.depth()
+        self.metrics.note_depth(b.cfg.name, depth)
+        # wake the worker only when this admission can change its decision:
+        # the queue just became non-empty (arm the window) or a full batch
+        # may now exist (early launch — a full coeff-subgroup implies depth
+        # >= max_batch).  Admissions inside an armed window never shorten
+        # it, so waking the worker for each one is pure churn.
+        if depth == 1 or depth >= b.cfg.max_batch:
+            b.wake.set()
+        return rec.future
+
+    def _retry_after(self, b: _Bucket) -> float:
+        """Backpressure hint: queued launches ahead x trailing launch time,
+        floored at one coalescing window."""
+        launches_ahead = max(
+            1, -(-b.state.depth() // b.cfg.max_batch))   # ceil div
+        est = launches_ahead * (b.last_batch_s or b.cfg.max_wait_s)
+        return max(est, b.cfg.max_wait_s)
+
+    # --- the per-bucket worker ----------------------------------------------
+    async def _worker(self, b: _Bucket) -> None:
+        state = b.state
+        while True:
+            now = self._clock()
+            if state.depth() == 0:
+                if self._closing:
+                    return
+                b.wake.clear()
+                await b.wake.wait()
+                continue
+            due = state.ready_at(now)
+            if not self._closing and due is not None and due > now:
+                # coalescing window still open: sleep until it expires or
+                # a new admission re-evaluates (a full batch launches early)
+                b.wake.clear()
+                try:
+                    await asyncio.wait_for(b.wake.wait(), due - now)
+                except asyncio.TimeoutError:
+                    pass
+                continue
+            batch, expired = state.take_batch(now)
+            for rec in expired:
+                self._fail(rec, DeadlineExceeded(
+                    f"deadline expired after "
+                    f"{now - rec.submitted_at:.3f}s in queue "
+                    f"(bucket {b.cfg.name!r})"), "deadline")
+            self.metrics.note_depth(b.cfg.name, state.depth())
+            if not batch:
+                continue
+            # dispatch without awaiting completion: the worker goes straight
+            # back to assembling the next batch, so batch assembly overlaps
+            # device compute (up to max_concurrent_batches in flight — the
+            # semaphore is the backpressure on dispatch, not completion)
+            await self._sem.acquire()
+            task = asyncio.create_task(self._launch(b, batch),
+                                       name=f"launch-{b.cfg.name}")
+            self._launches.add(task)
+            task.add_done_callback(self._launches.discard)
+
+    async def _launch(self, b: _Bucket,
+                      batch: List[PendingRequest]) -> None:
+        """One coalesced launch: compute (inline, or in a worker thread
+        when offloading — see ``ServiceConfig.offload_compute``), then
+        resolve every member future on the loop thread.  Holds one
+        ``max_concurrent_batches`` slot (acquired by the caller)."""
+        try:
+            t0 = self._clock()
+            try:
+                if self._offload:
+                    outs, padded, rounds = await asyncio.to_thread(
+                        self._run_batch, b, batch)
+                else:
+                    outs, padded, rounds = self._run_batch(b, batch)
+            except Exception as e:          # noqa: BLE001 — fail, don't drop
+                for rec in batch:
+                    self._fail_exec(rec, e)
+                return
+            exec_s = self._clock() - t0
+            b.last_batch_s = exec_s
+            self.metrics.note_batch(len(batch), padded, rounds, exec_s)
+            now = self._clock()
+            fill = len(batch) / padded
+            for rec, out in zip(batch, outs):
+                if rec.future.cancelled():
+                    continue
+                latency = now - rec.submitted_at
+                shape = rec.request.problem.shape
+                cells = rec.iters
+                for d in shape:
+                    cells *= d
+                self.metrics.note_completed(latency, cells)
+                rec.future.set_result(ServeResult(
+                    grid=out, iters=rec.iters, latency_s=latency,
+                    bucket=b.cfg.name, batch_size=len(batch),
+                    batch_fill=fill, rounds=rounds))
+        finally:
+            self._sem.release()
+
+    def _fail(self, rec: PendingRequest, exc: Exception, kind: str) -> None:
+        self.metrics.note_rejected(kind)
+        if rec.future is not None and not rec.future.cancelled():
+            rec.future.set_exception(exc)
+
+    def _fail_exec(self, rec: PendingRequest, exc: Exception) -> None:
+        """A launch failure is not a rejection — surface the original error
+        on every member's future."""
+        if rec.future is not None and not rec.future.cancelled():
+            rec.future.set_exception(exc)
+
+    # --- compute (worker thread) --------------------------------------------
+    def _prewarm_bucket(self, b: _Bucket) -> None:
+        """Push one zero-grid launch through :meth:`_run_batch` for every
+        declared batch class: compiles the backend executables (what
+        ``StencilPlan.prewarm`` covers) AND the serving-side stack/slice
+        ops, so the first real launch of any class re-traces nothing."""
+        prob = b.plan.problem
+        zeros = jnp.zeros(prob.state_shape, prob.jnp_dtype)
+        aux = (jnp.zeros(prob.shape, prob.jnp_dtype)
+               if prob.needs_aux else None)
+        req = StencilRequest(prob, zeros, 1, aux=aux)
+        for c in b.cfg.batch_classes:
+            recs = [PendingRequest(seq=-1, request=req, submitted_at=0.0,
+                                   expires_at=None, coeffs_sig=None,
+                                   iters=1) for _ in range(c)]
+            outs, _, _ = self._run_batch(b, recs)
+            jax.block_until_ready(outs[-1])
+
+    def _run_batch(self, b: _Bucket, batch: List[PendingRequest]):
+        """One coalesced launch: stack, pad to a batch class, advance by
+        staged rounds, slice each member out at its own iteration count.
+
+        Bit-exactness: batch members are independent under every backend's
+        ``run_batch`` (verified by the throughput suite), so padding the
+        batch axis by replicating the last real member — "edge" padding of
+        the ``(B, *state)`` tensor — changes no real member's result, and
+        staged advance (``run k1 then k2-k1``) applies the identical
+        per-iteration arithmetic as one ``run k2`` call."""
+        p = b.plan
+        prob = p.problem
+        dtype = prob.jnp_dtype
+        padded = b.cfg.pad_to_class(len(batch))
+        # pad by replicating the last member BEFORE the stack, and stage
+        # the batch on the host: np.stack + one device transfer is ~4x
+        # cheaper than stacking B device arrays (which compiles one
+        # concatenate per batch class and dispatches B member conversions),
+        # and a repeat+concatenate pad pair would compile per (real,
+        # padded) shape combination (~60 ms each, first use)
+        grids = jnp.asarray(_stage(
+            [r.request.grid for r in batch], padded, dtype))
+        aux = None
+        if prob.needs_aux:
+            aux = jnp.asarray(_stage(
+                [r.request.aux for r in batch], padded, dtype))
+        coeffs = batch[0].request.coeffs    # members share the resolved sig
+        stops = sorted({r.iters for r in batch})
+        outs: Dict[int, Any] = {}
+        cur, prev = grids, 0
+        for it in stops:
+            cur = p.run_batch(cur, it - prev, coeffs, aux=aux)
+            prev = it
+            # one host materialization per round (it also syncs the round,
+            # like block_until_ready would): member results become free
+            # numpy views instead of B separate device slice dispatches
+            host = np.asarray(cur)
+            for i, rec in enumerate(batch):
+                if rec.iters == it:
+                    outs[i] = host[i]
+        return [outs[i] for i in range(len(batch))], padded, len(stops)
+
+    # --- observability ------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Metrics snapshot, extended with per-bucket configuration and
+        live queue depth."""
+        snap = self.metrics.snapshot()
+        snap["buckets"] = {
+            b.cfg.name: {
+                "backend": b.cfg.run.backend,
+                "shape": list(b.cfg.problem.shape),
+                "dtype": b.cfg.problem.dtype,
+                "bc": b.cfg.problem.bc.token(),
+                "max_batch": b.cfg.max_batch,
+                "max_wait_ms": b.cfg.max_wait_ms,
+                "queue_cap": b.cfg.queue_cap,
+                "batch_classes": list(b.cfg.batch_classes),
+                "depth": b.state.depth(),
+                "last_batch_s": b.last_batch_s,
+            } for b in self._buckets.values()
+        }
+        return snap
+
+    @property
+    def buckets(self) -> Dict[str, BucketConfig]:
+        return {b.cfg.name: b.cfg for b in self._buckets.values()}
+
+
+async def serve(config, *, prewarm: bool = True,
+                clock=time.monotonic) -> StencilService:
+    """Build and boot a :class:`StencilService` (plans built, executables
+    pre-warmed for every declared batch class, workers running)."""
+    service = StencilService(config, clock=clock)
+    await service.start(prewarm=prewarm)
+    return service
+
+
+async def from_config(spec, *, prewarm: bool = True,
+                      clock=time.monotonic) -> StencilService:
+    """Declarative boot: dict / JSON string / ``ServiceConfig`` -> running
+    service (the ``model_factory`` idiom — the whole service is one JSON
+    document)."""
+    return await serve(ServiceConfig.make(spec), prewarm=prewarm,
+                       clock=clock)

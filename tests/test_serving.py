@@ -1,0 +1,534 @@
+"""Serving-subsystem tests: batcher determinism, backpressure, deadlines,
+drain, padded-bucket bit-identity, config factory, prewarm, metrics.
+
+The coalescing/backpressure/deadline logic lives in the clock-free
+``repro.serve.batcher`` core, so the policy tests drive it with a
+hand-rolled clock — no sleeps, no asyncio, no arrays.  The service tests
+then exercise the asyncio layer end to end on the engine backend with tiny
+grids and pinned schedules (no tuner).
+"""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (RunConfig, StencilProblem, clear_exec_cache,
+                       exec_cache_stats, plan)
+from repro.serve import (BucketConfig, BucketState, DeadlineExceeded,
+                         NoMatchingBucket, PendingRequest, ServiceClosed,
+                         ServiceConfig, ServiceOverloaded, StencilRequest,
+                         StencilService, bucket_key, coeffs_signature,
+                         from_config, percentile, serve)
+
+SHAPE = (12, 32)
+RUN = {"backend": "engine", "par_time": 2, "bsize": 16}
+
+
+def run_async(coro):
+    return asyncio.run(coro)
+
+
+def make_bucket(**kw) -> BucketConfig:
+    spec = dict(problem={"stencil": "diffusion2d", "shape": list(SHAPE)},
+                run=dict(RUN), max_batch=4, max_wait_ms=5.0, queue_cap=16)
+    spec.update(kw)
+    return BucketConfig(**spec)
+
+
+def rec(seq, now=0.0, sig="a", iters=4, expires_at=None) -> PendingRequest:
+    return PendingRequest(seq=seq, request=None, submitted_at=now,
+                          expires_at=expires_at, coeffs_sig=sig, iters=iters)
+
+
+def grids_for(n, shape=SHAPE, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.uniform(jax.random.fold_in(key, i), shape,
+                               jnp.float32, 0.5, 2.0) for i in range(n)]
+
+
+# --- batcher core: deterministic-clock policy tests --------------------------
+
+class TestBucketState:
+    def test_window_arms_on_first_admit(self):
+        bs = BucketState(make_bucket(max_wait_ms=10.0))
+        assert bs.ready_at(now=0.0) is None
+        assert bs.admit(rec(1), now=5.0)
+        # window = first-admit time + max_wait, regardless of later admits
+        assert bs.ready_at(now=5.0) == pytest.approx(5.010)
+        assert bs.admit(rec(2), now=5.008)
+        assert bs.ready_at(now=5.008) == pytest.approx(5.010)
+        assert not bs.ready(now=5.009)
+        assert bs.ready(now=5.010)
+
+    def test_full_batch_launches_early(self):
+        bs = BucketState(make_bucket(max_batch=3, max_wait_ms=1000.0))
+        for i in range(2):
+            bs.admit(rec(i), now=0.0)
+        assert not bs.ready(now=0.0)          # window far away, batch short
+        bs.admit(rec(2), now=0.0)
+        assert bs.ready(now=0.0)              # max_batch pending: launch now
+        batch, expired = bs.take_batch(now=0.0)
+        assert [r.seq for r in batch] == [0, 1, 2] and not expired
+        assert bs.ready_at(now=0.0) is None   # queue drained, window unarmed
+
+    def test_draining_ignores_window(self):
+        bs = BucketState(make_bucket(max_wait_ms=1000.0))
+        bs.admit(rec(1), now=0.0)
+        assert not bs.ready(now=0.0)
+        assert bs.ready(now=0.0, draining=True)
+
+    def test_queue_cap_backpressure(self):
+        bs = BucketState(make_bucket(queue_cap=3, max_batch=8))
+        assert all(bs.admit(rec(i), now=0.0) for i in range(3))
+        assert not bs.admit(rec(3), now=0.0)   # full: refused, not enqueued
+        assert bs.depth() == 3
+
+    def test_coeffs_sig_subgroups(self):
+        bs = BucketState(make_bucket(max_batch=8))
+        for i, sig in enumerate("aabab"):
+            bs.admit(rec(i, sig=sig), now=0.0)
+        batch, _ = bs.take_batch(now=7.0)
+        # head-of-line group only, FIFO order; 'b' requests stay queued
+        assert [r.seq for r in batch] == [0, 1, 3]
+        assert [r.seq for r in bs.pending] == [2, 4]
+        # the remainder re-arms the window at take time
+        assert bs.ready_at(now=7.0) == pytest.approx(7.0 + 5e-3)
+        batch2, _ = bs.take_batch(now=7.1)
+        assert [r.seq for r in batch2] == [2, 4]
+
+    def test_max_rounds_caps_distinct_iters(self):
+        bs = BucketState(make_bucket(max_batch=8, max_rounds=2))
+        for i, iters in enumerate([4, 8, 4, 2, 8]):
+            bs.admit(rec(i, iters=iters), now=0.0)
+        batch, _ = bs.take_batch(now=0.0)
+        # iters=2 would be a third distinct value: left for the next launch;
+        # repeats of already-admitted values still join
+        assert [r.seq for r in batch] == [0, 1, 2, 4]
+        assert [r.seq for r in bs.pending] == [3]
+
+    def test_deadline_sweep(self):
+        bs = BucketState(make_bucket(max_batch=8))
+        bs.admit(rec(0, expires_at=1.0), now=0.0)
+        bs.admit(rec(1), now=0.0)
+        bs.admit(rec(2, expires_at=9.0), now=0.0)
+        batch, expired = bs.take_batch(now=2.0)
+        assert [r.seq for r in expired] == [0]
+        assert [r.seq for r in batch] == [1, 2]
+
+
+# --- config factory ----------------------------------------------------------
+
+class TestConfigFactory:
+    def test_dict_and_json_forms(self):
+        d = {"buckets": [{"problem": {"stencil": "diffusion2d",
+                                      "shape": list(SHAPE)},
+                          "run": dict(RUN), "max_batch": 4}]}
+        for spec in (d, json.dumps(d)):
+            cfg = ServiceConfig.make(spec)
+            (b,) = cfg.buckets
+            assert isinstance(b.problem, StencilProblem)
+            assert isinstance(b.run, RunConfig)
+            assert b.run.backend == "engine"
+            assert b.name == "diffusion2d@12x32"
+            assert b.batch_classes == (1, 2, 4)
+
+    def test_bucket_list_form_and_passthrough(self):
+        cfg = ServiceConfig.make([make_bucket()])
+        assert ServiceConfig.make(cfg) is cfg
+
+    def test_explicit_objects_pass_through(self):
+        b = BucketConfig(problem=StencilProblem("diffusion2d", SHAPE),
+                         run=RunConfig(**RUN))
+        assert b.problem.shape == SHAPE
+        assert b.batch_classes == (1, 2, 4, 8)
+
+    def test_batch_classes_validation(self):
+        with pytest.raises(ValueError, match="pad up to"):
+            make_bucket(max_batch=8, batch_classes=(1, 2, 4))
+        b = make_bucket(max_batch=6, batch_classes=(2, 6))
+        assert b.pad_to_class(1) == 2 and b.pad_to_class(3) == 6
+
+    def test_duplicate_buckets_rejected(self):
+        with pytest.raises(ValueError, match="serve the same"):
+            ServiceConfig(buckets=(make_bucket(), make_bucket(max_batch=2)))
+
+    def test_bad_specs_rejected(self):
+        with pytest.raises(ValueError, match="unknown stencil"):
+            make_bucket(problem={"stencil": "nope", "shape": [8, 8]})
+        with pytest.raises(ValueError, match="at least one bucket"):
+            ServiceConfig(buckets=())
+        with pytest.raises(ValueError, match="max_wait_ms"):
+            make_bucket(max_wait_ms=-1)
+        with pytest.raises(ValueError, match="queue_cap"):
+            make_bucket(queue_cap=0)
+
+
+# --- request validation ------------------------------------------------------
+
+class TestRequest:
+    def test_normalizes_name_to_problem(self):
+        g = jnp.zeros(SHAPE)
+        r = StencilRequest("diffusion2d", g, iters=3)
+        assert isinstance(r.problem, StencilProblem)
+        assert r.bucket_key == bucket_key(StencilProblem("diffusion2d",
+                                                         SHAPE))
+
+    def test_rejects_bad_fields(self):
+        g = jnp.zeros(SHAPE)
+        with pytest.raises(ValueError, match="iters"):
+            StencilRequest("diffusion2d", g, iters=0)
+        with pytest.raises(ValueError, match="deadline_s"):
+            StencilRequest("diffusion2d", g, iters=1, deadline_s=0)
+        with pytest.raises(ValueError, match="state"):
+            StencilRequest(StencilProblem("diffusion2d", (8, 8)), g, iters=1)
+        with pytest.raises(ValueError, match="needs an aux"):
+            StencilRequest("hotspot2d", g, iters=1)
+        with pytest.raises(ValueError, match="takes no aux"):
+            StencilRequest("diffusion2d", g, iters=1, aux=g)
+
+    def test_coeffs_signature_groups(self):
+        prob = StencilProblem("diffusion2d", SHAPE)
+        assert (coeffs_signature(prob, None)
+                == coeffs_signature(prob, {}))
+        assert (coeffs_signature(prob, {"cc": 0.25})
+                != coeffs_signature(prob, None))
+        with pytest.raises(ValueError, match="unknown coefficients"):
+            coeffs_signature(prob, {"zz": 1.0})
+
+    def test_bc_splits_bucket_key(self):
+        a = bucket_key(StencilProblem("diffusion2d", SHAPE))
+        b = bucket_key(StencilProblem("diffusion2d", SHAPE,
+                                      boundary="periodic"))
+        assert a != b
+
+
+# --- the live service --------------------------------------------------------
+
+class TestService:
+    def test_bit_identity_across_bc_mixes(self):
+        """Padded-bucket results == per-request plan().run(), bitwise, for
+        clamp / periodic-mix / reflect / constant on the engine backend."""
+        bcs = ["clamp", ("clamp", "periodic"), "reflect", "constant:1.5"]
+
+        async def main():
+            cfg = ServiceConfig(buckets=tuple(
+                make_bucket(problem={"stencil": "diffusion2d",
+                                     "shape": list(SHAPE), "boundary": bc},
+                            max_wait_ms=10.0)
+                for bc in bcs))
+            svc = await serve(cfg, prewarm=False)
+            gs = grids_for(2 * len(bcs))
+            reqs = [StencilRequest(
+                StencilProblem("diffusion2d", SHAPE, boundary=bcs[i % 4]),
+                gs[i], iters=3 + (i % 2)) for i in range(len(gs))]
+            futs = [svc.submit_nowait(r) for r in reqs]
+            results = await asyncio.gather(*futs)
+            await svc.stop()
+            return reqs, results
+
+        reqs, results = run_async(main())
+        for r, res in zip(reqs, results):
+            want = plan(r.problem, RunConfig(**RUN)).run(r.grid, r.iters)
+            np.testing.assert_array_equal(np.asarray(res.grid),
+                                          np.asarray(want))
+
+    def test_staged_advance_mixed_iters(self):
+        """One launch carries heterogeneous iteration counts: members are
+        delivered at their own stop, bit-identical to individual runs."""
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(max_batch=4, max_wait_ms=50.0),)),
+                prewarm=False)
+            gs = grids_for(4)
+            iters = [2, 6, 2, 4]
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, it))
+                    for g, it in zip(gs, iters)]
+            results = await asyncio.gather(*futs)
+            snap = svc.snapshot()
+            await svc.stop()
+            return gs, iters, results, snap
+
+        gs, iters, results, snap = run_async(main())
+        assert snap["batches"] == 1 and snap["rounds"] == 3
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        for g, it, res in zip(gs, iters, results):
+            assert res.rounds == 3 and res.batch_size == 4
+            np.testing.assert_array_equal(np.asarray(res.grid),
+                                          np.asarray(p.run(g, it)))
+
+    def test_batch_padding_to_class_is_exact(self):
+        """3 real requests pad to batch class 4 (edge replication): fill is
+        reported honestly and results stay bitwise-identical."""
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(max_batch=4, max_wait_ms=20.0),)),
+                prewarm=False)
+            gs = grids_for(3)
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 4))
+                    for g in gs]
+            results = await asyncio.gather(*futs)
+            await svc.stop()
+            return gs, results
+
+        gs, results = run_async(main())
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        for g, res in zip(gs, results):
+            assert res.batch_fill == pytest.approx(3 / 4)
+            np.testing.assert_array_equal(np.asarray(res.grid),
+                                          np.asarray(p.run(g, 4)))
+
+    def test_aux_and_coeffs_subgrouping(self):
+        """Per-request hotspot aux grids batch together; a request with
+        different resolved coefficients never shares a launch."""
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(make_bucket(
+                problem={"stencil": "hotspot2d", "shape": list(SHAPE)},
+                max_batch=4, max_wait_ms=20.0),)), prewarm=False)
+            gs = grids_for(3)
+            auxs = grids_for(3, seed=7)
+            coeffs = [None, None, {"sdc": 0.5}]
+            futs = [svc.submit_nowait(StencilRequest(
+                "hotspot2d", g, 3, coeffs=c, aux=a))
+                for g, a, c in zip(gs, auxs, coeffs)]
+            results = await asyncio.gather(*futs)
+            snap = svc.snapshot()
+            await svc.stop()
+            return gs, auxs, coeffs, results, snap
+
+        gs, auxs, coeffs, results, snap = run_async(main())
+        assert snap["batches"] == 2            # the override launched alone
+        p = plan(StencilProblem("hotspot2d", SHAPE), RunConfig(**RUN))
+        for g, a, c, res in zip(gs, auxs, coeffs, results):
+            np.testing.assert_array_equal(
+                np.asarray(res.grid), np.asarray(p.run(g, 3, c, aux=a)))
+
+    def test_queue_full_backpressure(self):
+        """Admission beyond queue_cap raises ServiceOverloaded with a
+        retry-after hint; queued requests still complete on drain."""
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(queue_cap=3, max_batch=8,
+                            max_wait_ms=60_000.0),)), prewarm=False)
+            gs = grids_for(4)
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 2))
+                    for g in gs[:3]]
+            with pytest.raises(ServiceOverloaded) as ei:
+                svc.submit_nowait(StencilRequest("diffusion2d", gs[3], 2))
+            results = None
+            stop = asyncio.create_task(svc.stop())   # drain ignores window
+            results = await asyncio.gather(*futs)
+            await stop
+            snap = svc.snapshot()
+            return ei.value, results, snap
+
+        err, results, snap = run_async(main())
+        assert err.retry_after_s >= 60.0           # >= the coalescing window
+        assert len(results) == 3
+        assert snap["rejected"]["overload"] == 1
+        assert snap["completed"] == 3
+        # nothing silently dropped: every submit is accounted for
+        assert snap["submitted"] == snap["completed"] \
+            + snap["rejected_total"]
+
+    def test_deadline_expiry(self):
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(max_batch=8, max_wait_ms=80.0),)), prewarm=False)
+            g = grids_for(1)[0]
+            fut = svc.submit_nowait(StencilRequest(
+                "diffusion2d", g, 2, deadline_s=1e-3))
+            ok = svc.submit_nowait(StencilRequest("diffusion2d", g, 2))
+            with pytest.raises(DeadlineExceeded):
+                await fut
+            res = await ok
+            snap = svc.snapshot()
+            await svc.stop()
+            return res, snap
+
+        res, snap = run_async(main())
+        assert res.batch_size == 1                 # the expired one never ran
+        assert snap["rejected"]["deadline"] == 1
+
+    def test_drain_on_shutdown_and_closed(self):
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(max_wait_ms=60_000.0),)), prewarm=False)
+            gs = grids_for(2)
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 2))
+                    for g in gs]
+            await svc.stop()                       # graceful: flushes both
+            results = [f.result() for f in futs]
+            with pytest.raises(ServiceClosed):
+                svc.submit_nowait(StencilRequest("diffusion2d", gs[0], 2))
+            return results
+
+        results = run_async(main())
+        assert len(results) == 2
+
+    def test_no_matching_bucket(self):
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(make_bucket(),)),
+                              prewarm=False)
+            with pytest.raises(NoMatchingBucket, match="declared"):
+                svc.submit_nowait(StencilRequest(
+                    "diffusion2d", jnp.zeros((8, 8), jnp.float32), 2))
+            snap = svc.snapshot()
+            await svc.stop()
+            return snap
+
+        snap = run_async(main())
+        assert snap["rejected"]["no_bucket"] == 1
+
+    def test_prewarm_serves_with_zero_new_traces(self):
+        """Boot-time prewarm compiles every declared batch class; serving
+        traffic then re-traces nothing (the tentpole's cache contract)."""
+        clear_exec_cache()
+
+        async def main():
+            svc = await from_config({"buckets": [
+                {"problem": {"stencil": "diffusion2d", "shape": list(SHAPE)},
+                 "run": dict(RUN), "max_batch": 4, "max_wait_ms": 10.0}]})
+            warmed = exec_cache_stats()["traces"].copy()
+            gs = grids_for(7)
+            # two launches: a full class-4 batch and a 3 -> class-4 pad
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 3))
+                    for g in gs]
+            await asyncio.gather(*futs)
+            traced = exec_cache_stats()["traces"]
+            snap = svc.snapshot()
+            await svc.stop()
+            return warmed, traced, snap
+
+        warmed, traced, snap = run_async(main())
+        assert snap["completed"] == 7
+        assert traced == warmed, "serving must not re-trace after prewarm"
+        assert snap["prewarm_s"] and all(
+            s > 0 for s in snap["prewarm_s"].values())
+
+    def test_metrics_snapshot_and_json(self, tmp_path):
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(make_bucket(),)),
+                              prewarm=False)
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 2))
+                    for g in grids_for(4)]
+            await asyncio.gather(*futs)
+            path = svc.metrics.write_json(tmp_path / "m" / "snap.json")
+            snap = svc.snapshot()
+            await svc.stop()
+            return path, snap
+
+        path, snap = run_async(main())
+        loaded = json.loads(path.read_text())
+        for k in ("submitted", "completed", "rejected", "latency_ms",
+                  "batch_fill", "cells", "exec_cache", "queue_depth"):
+            assert k in loaded
+        assert loaded["latency_ms"]["p50"] <= loaded["latency_ms"]["p99"]
+        assert snap["cells"] == 4 * 2 * SHAPE[0] * SHAPE[1]
+        b = snap["buckets"]["diffusion2d@12x32"]
+        assert b["batch_classes"] == [1, 2, 4] and b["depth"] == 0
+        # the per-key breakdown (satellite fix) reaches the snapshot
+        assert any(v["misses"] >= 1
+                   for v in snap["exec_cache"]["by_key"].values())
+
+    def test_open_loop_seeded_integration(self):
+        """Seeded open-loop arrival process on the engine backend: every
+        submit resolves (result or typed rejection), served results are
+        bit-identical to per-request runs, and overload rejections carry
+        retry-after hints."""
+        rng = np.random.default_rng(42)
+        n = 24
+        gaps = rng.exponential(2e-3, n)
+        iters = rng.choice([2, 4], n)
+
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(
+                make_bucket(max_batch=4, max_wait_ms=2.0, queue_cap=6),)),
+                prewarm=False)
+            gs = grids_for(n)
+            outcomes = []
+
+            async def one(i):
+                try:
+                    fut = svc.submit_nowait(StencilRequest(
+                        "diffusion2d", gs[i], int(iters[i])))
+                except ServiceOverloaded as e:
+                    outcomes.append(("rejected", i, e.retry_after_s))
+                    return
+                outcomes.append(("served", i, await fut))
+
+            tasks = []
+            for i in range(n):
+                await asyncio.sleep(float(gaps[i]))
+                tasks.append(asyncio.create_task(one(i)))
+            await asyncio.gather(*tasks)
+            snap = svc.snapshot()
+            await svc.stop()
+            return gs, outcomes, snap
+
+        gs, outcomes, snap = run_async(main())
+        assert len(outcomes) == n
+        served = [o for o in outcomes if o[0] == "served"]
+        rejected = [o for o in outcomes if o[0] == "rejected"]
+        assert snap["completed"] == len(served)
+        assert snap["rejected"]["overload"] == len(rejected)
+        assert all(r[2] > 0 for r in rejected)
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        for _, i, res in served[:6]:
+            np.testing.assert_array_equal(
+                np.asarray(res.grid),
+                np.asarray(p.run(gs[i], int(iters[i]))))
+
+
+# --- plan.prewarm + per-key cache stats (satellites) -------------------------
+
+class TestPrewarmAndStats:
+    def test_plan_prewarm_compiles_then_hits(self):
+        clear_exec_cache()
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        t1 = p.prewarm(batch_sizes=(1, 2))
+        assert set(t1) == {"single", 1, 2} and all(
+            v > 0 for v in t1.values())
+        s1 = exec_cache_stats()
+        # a same-key plan prewarming again compiles nothing new
+        p2 = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        p2.prewarm(batch_sizes=(1, 2))
+        s2 = exec_cache_stats()
+        assert s2["size"] == s1["size"]
+        assert s2["traces"] == s1["traces"]
+        assert s2["hits"] > s1["hits"]
+
+    def test_plan_prewarm_validates(self):
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        with pytest.raises(ValueError, match="batch sizes"):
+            p.prewarm(batch_sizes=(0,))
+        with pytest.raises(ValueError, match="iters"):
+            p.prewarm(iters=0)
+
+    def test_exec_cache_per_key_breakdown(self):
+        clear_exec_cache()
+        # plan build resolves the single-run executable: one miss
+        p = plan(StencilProblem("diffusion2d", SHAPE), RunConfig(**RUN))
+        g = grids_for(1)[0]
+        p.run_batch(jnp.stack([g, g]), 2)  # batched key: miss
+        p.run_batch(jnp.stack([g, g]), 4)  # dynamic iters: same key, a hit
+        plan(StencilProblem("diffusion2d", SHAPE),
+             RunConfig(**RUN))             # same-key rebuild: a hit
+        stats = exec_cache_stats()
+        assert sum(v["misses"] for v in stats["by_key"].values()) \
+            == stats["misses"]
+        assert sum(v["hits"] for v in stats["by_key"].values()) \
+            == stats["hits"]
+        assert any(v["hits"] >= 1 for v in stats["by_key"].values())
+        assert len(stats["by_key"]) == stats["size"] == 2
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 50) is None
+    assert percentile([3.0], 99) == 3.0
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50, abs=1)
+    assert percentile(xs, 99) == pytest.approx(99, abs=1)
+    assert percentile(xs, 0) == 1 and percentile(xs, 100) == 100
