@@ -78,8 +78,11 @@ from repro.api.problem import StencilProblem
 #: (grid, coeffs, iters, aux) -> final grid
 ExecuteFn = Callable[..., jnp.ndarray]
 
-#: dtypes the Pallas streaming kernels support (plan-time validation)
-PALLAS_SUPPORTED_DTYPES = ("float32",)
+#: dtypes the Pallas streaming kernels support (plan-time validation):
+#: f32, and bf16 storage with f32 accumulation inside the PE chain — see
+#: ``repro.core.precision`` for the policy and ``kernels/builder.py`` for
+#: the window-read / output-DMA casts that implement it
+PALLAS_SUPPORTED_DTYPES = ("float32", "bfloat16")
 
 
 class Backend(Protocol):

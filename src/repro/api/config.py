@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple, Union
 
+from repro.core import precision
 from repro.core.perf_model import DEVICES, Device
 
 #: Accepted ``RunConfig.autotune`` modes (``False`` disables; the legacy
@@ -46,7 +47,11 @@ class RunConfig:
     par_vec: Optional[int] = None
     autotune: Union[bool, str] = False
     device: Union[Device, str] = "tpu_v5e"
-    cell_bytes: int = 4
+    #: storage bytes per cell used for traffic/VMEM pricing. ``None`` (the
+    #: default) derives it from the problem's storage dtype via
+    #: :func:`repro.core.precision.cell_bytes` (4 for f32, 2 for bf16); an
+    #: explicit int overrides — see :meth:`resolved_cell_bytes`.
+    cell_bytes: Optional[int] = None
     par_time_max: int = 64
     iters_hint: int = 100        # iteration count used for ranking/prediction
     mesh: Optional[object] = None          # jax.sharding.Mesh (distributed)
@@ -104,6 +109,13 @@ class RunConfig:
                 self, "axis_map",
                 tuple((a,) if isinstance(a, str) else tuple(a) if a else None
                       for a in self.axis_map))
+
+    def resolved_cell_bytes(self, dtype="float32") -> int:
+        """The cell bytes traffic/VMEM pricing and cache keys use: the
+        explicit override when set, else the storage dtype's itemsize."""
+        if self.cell_bytes is not None:
+            return int(self.cell_bytes)
+        return precision.cell_bytes(dtype)
 
     def resolved_device(self) -> Device:
         if isinstance(self.device, Device):

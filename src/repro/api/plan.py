@@ -70,7 +70,8 @@ def _candidate_shortlist(problem: StencilProblem, config: RunConfig,
         par_vec = 1
     cands = perf_model.autotune(
         problem.stencil, problem.shape, config.iters_hint, device,
-        config.cell_bytes, config.par_time_max, n_chips, chip_grid,
+        config.resolved_cell_bytes(problem.dtype),
+        config.par_time_max, n_chips, chip_grid,
         par_time=config.par_time,
         bsize=config.normalized_bsize(problem.ndim),
         par_vec=par_vec, top_k=top_k,
@@ -130,7 +131,9 @@ def _resolve_measured(problem: StencilProblem, config: RunConfig,
                     raise ValueError("mangled schedule-cache entry")
                 pred = perf_model.predict(
                     problem.stencil, problem.shape, config.iters_hint, bsize,
-                    par_time, device, config.cell_bytes, n_chips, chip_grid,
+                    par_time, device,
+                    config.resolved_cell_bytes(problem.dtype),
+                    n_chips, chip_grid,
                     bc=problem.structural_bc, par_vec=par_vec)
             except (KeyError, TypeError, ValueError):
                 entry = None
@@ -277,17 +280,19 @@ class StencilPlan:
         a tuple of per-stage dicts for programs.  The no-override payload is
         resolved once and memoized — it is the common case on the serving
         hot path, and re-resolving materializes fresh jnp scalars per call."""
+        # coefficients are resolved in the ACCUMULATION dtype, not storage:
+        # bf16 grids multiply f32 coefficients inside the f32 PE arithmetic
+        # (repro.core.precision); for f32 problems the two dtypes coincide
+        dtype = self.problem.accum_dtype
         if coeffs is None:
             cached = getattr(self, "_default_payload", None)
             if cached is None:
-                resolved = self.problem.resolve_coeffs(
-                    None, dtype=self.problem.jnp_dtype)
+                resolved = self.problem.resolve_coeffs(None, dtype=dtype)
                 cached = (resolved[0] if self.problem.n_stages == 1
                           else resolved)
                 object.__setattr__(self, "_default_payload", cached)
             return cached
-        resolved = self.problem.resolve_coeffs(coeffs,
-                                               dtype=self.problem.jnp_dtype)
+        resolved = self.problem.resolve_coeffs(coeffs, dtype=dtype)
         return resolved[0] if self.problem.n_stages == 1 else resolved
 
     def run_batch(self, grids, iters: int, coeffs=None, *,
@@ -401,7 +406,8 @@ class StencilPlan:
             self.problem.stencil, self.problem.shape,
             iters if iters is not None else self.config.iters_hint,
             geom.bsize, geom.par_time, device or self.device,
-            self.config.cell_bytes, self.n_chips, self.chip_grid,
+            self.config.resolved_cell_bytes(self.problem.dtype),
+            self.n_chips, self.chip_grid,
             batch=batch, bc=self.problem.structural_bc, par_vec=geom.par_vec)
 
     def traffic_report(self, iters: Optional[int] = None) -> dict:
@@ -410,7 +416,7 @@ class StencilPlan:
         from repro.kernels.ops import dma_traffic_bytes
         geom = self._require_geometry("traffic_report()")
         st = self.problem.stencil
-        cb = self.config.cell_bytes
+        cb = self.config.resolved_cell_bytes(self.problem.dtype)
         bc = self.problem.structural_bc
         # a periodic streaming axis is billed on the extended stream the
         # kernels actually move (the materialized wrap), matching predict()

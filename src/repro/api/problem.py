@@ -12,6 +12,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.core import precision
 from repro.core.boundary import BCSpec, BoundaryCondition
 from repro.core.stencils import STENCILS, Stencil, default_coeffs
 from repro.programs import StencilProgram, StencilStage
@@ -99,7 +100,8 @@ class StencilProblem:
             program = StencilProgram((StencilStage(st, boundary=bc),))
         object.__setattr__(self, "stencil", st)
         object.__setattr__(self, "_program", program)
-        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+        # accept np.dtype / jnp.bfloat16 / "bf16" / string forms uniformly
+        object.__setattr__(self, "dtype", precision.normalize_dtype(self.dtype))
         if self.aux is not None and bool(self.aux) != st.has_aux:
             raise ValueError(
                 f"aux={self.aux} conflicts with {st.name} "
@@ -222,3 +224,16 @@ class StencilProblem:
     @property
     def jnp_dtype(self):
         return jnp.dtype(self.dtype)
+
+    @property
+    def cell_bytes(self) -> int:
+        """Storage bytes per cell — what HBM/halo traffic scales with
+        (2 for bf16, 4 for f32)."""
+        return precision.cell_bytes(self.dtype)
+
+    @property
+    def accum_dtype(self):
+        """The dtype stage arithmetic runs in: f32 for sub-32-bit float
+        storage (bf16), the storage dtype itself otherwise.  See
+        ``repro.core.precision``."""
+        return precision.accum_dtype(self.dtype)

@@ -130,7 +130,8 @@ def schedule_key(problem, config, device, n_chips: int, chip_grid,
         # a stream extension): a winner tuned under clamp must never be
         # served to a periodic plan
         f"bc={problem.bc.token()}",
-        f"cb={config.cell_bytes}", f"backend={config.backend}",
+        f"cb={config.resolved_cell_bytes(problem.dtype)}",
+        f"backend={config.backend}",
         # interpret-mode timings have no relation to compiled ordering:
         # never let one serve the other from the cache
         f"interp={int(bool(config.interpret))}",

@@ -35,8 +35,9 @@ import dataclasses
 import math
 from typing import Sequence, Tuple
 
-LANE = 128      # f32 lanes per VREG row on TPU
-SUBLANE = 8
+LANE = 128      # lanes per VREG row on TPU (dtype-independent)
+SUBLANE = 8     # sublanes of the 4-byte (f32) minimum tile; 16-bit tiles
+                # use 16 — see repro.core.precision.sublanes_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,8 +191,14 @@ class BlockGeometry:
             n_in = n_out = 1
             pt = self.par_time
 
+        # Mosaic's minimum-tile sublane count is dtype-dependent: 8 for
+        # 4-byte cells, 16 for bf16, 32 for 1-byte (packed tiles) — thin
+        # bf16 buffers pad to 16 sublanes, so the V that stops wasting
+        # sublanes doubles (mirrored by perf_model's sub_eff pricing)
+        sublanes = max(8, 32 // max(1, cell_bytes))
+
         def pad8(n: int) -> int:
-            return -(-n // SUBLANE) * SUBLANE
+            return -(-n // sublanes) * sublanes
 
         def padl(n: int) -> int:
             return -(-n // LANE) * LANE

@@ -29,7 +29,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import boundary
+from repro.core import boundary, precision
 from repro.core.blocking import BlockGeometry
 from repro.core.stencils import Stencil
 
@@ -158,9 +158,14 @@ def _block_getter(block: jnp.ndarray, r: int, bc=None):
 
 def _block_substep(stencil: Stencil, block: jnp.ndarray, coeffs: dict,
                    aux_block, bc=None) -> jnp.ndarray:
-    """One plain stencil step on a block (see :func:`_block_getter`)."""
+    """One plain stencil step on a block (see :func:`_block_getter`).
+
+    Storage/accumulation policy (``repro.core.precision``): bf16 blocks
+    widen to f32 for the stage arithmetic and round back to storage once
+    per application; f32 passes through apply() untouched."""
     get = _block_getter(block, stencil.radius, bc)
-    return stencil.apply(get, coeffs, aux_block)
+    return precision.apply_stage(stencil, get, coeffs, aux_block,
+                                 block.dtype)
 
 
 def _block_substep_dag(stencil: Stencil, blocks, coeffs: dict,
@@ -170,8 +175,9 @@ def _block_substep_dag(stencil: Stencil, blocks, coeffs: dict,
     receive a tuple of getters."""
     r = stencil.radius
     gets = [_block_getter(b, r, bc) for b in blocks]
-    return stencil.apply(tuple(gets) if stencil.arity > 1 else gets[0],
-                         coeffs, aux_block)
+    return precision.apply_stage(
+        stencil, tuple(gets) if stencil.arity > 1 else gets[0],
+        coeffs, aux_block, blocks[0].dtype)
 
 
 @partial(jax.jit, static_argnames=("stages", "geom"))

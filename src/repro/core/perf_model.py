@@ -26,15 +26,27 @@ import dataclasses
 import math
 from typing import Sequence
 
-from repro.core.blocking import (BlockGeometry, LANE, SUBLANE, bsize_feasible,
+from repro.core.blocking import (BlockGeometry, bsize_feasible,
                                  choose_bsize_candidates, extended_geometry,
                                  superstep_traffic_bytes)
+from repro.core.precision import sublanes_for
 from repro.core.stencils import Stencil
 
-#: ``par_vec`` sweep of :func:`autotune` — powers of two around the 8-sublane
-#: f32 tile (V=8 fills every sublane; V=16 halves the DMA descriptor count
-#: again at 2x the window VMEM).
+#: baseline ``par_vec`` sweep of :func:`autotune` — powers of two around the
+#: 8-sublane f32 tile (V=8 fills every sublane; V=16 halves the DMA
+#: descriptor count again at 2x the window VMEM).  16-bit dtypes extend to
+#: V=32 — see :func:`par_vec_candidates`.
 PAR_VEC_CANDIDATES = (1, 2, 4, 8, 16)
+
+
+def par_vec_candidates(cell_bytes: int = 4):
+    """The ``par_vec`` sweep for a given cell width.  Sub-4-byte dtypes get
+    taller minimum tiles (16 sublanes for bf16), doubling the V that fills a
+    tile's sublanes — the sweep ceiling doubles with it (V=32 for 16-bit
+    cells, the bf16 analogue of f32's V=16)."""
+    if cell_bytes <= 2:
+        return PAR_VEC_CANDIDATES + (32,)
+    return PAR_VEC_CANDIDATES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,8 +175,11 @@ def predict(stencil: Stencil, dims: Sequence[int], iters: int,
     # sublane utilization of the per-tick compute tile: 1D/2D slabs are
     # (V,)/(V, bsize) — V sublanes of the 8-sublane f32 tile; 3D slabs are
     # (V, bsize_y, bsize_x) — the y extent fills the sublanes
+    # the minimum-tile sublane count is dtype-dependent: 8 for 4-byte cells,
+    # 16 for bf16 — a (V, bsize) bf16 tile needs V=16 to fill its sublanes
+    sublanes = sublanes_for(cell_bytes)
     sub = bsize[0] if len(dims) == 3 else par_vec
-    sub_eff = min(sub, SUBLANE) / SUBLANE
+    sub_eff = min(sub, sublanes) / sublanes
     cells_per_super = batch * geom_t.stream_dim * math.prod(
         n * b for n, b in zip(geom.bnum, geom.bsize))
     flops_per_super = cells_per_super * par_time * stencil.flop_pcu
@@ -212,7 +227,7 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
              par_time: int | None = None,
              bsize: Sequence[int] | None = None,
              par_vec: int | None = None,
-             par_vecs: Sequence[int] = PAR_VEC_CANDIDATES,
+             par_vecs: Sequence[int] | None = None,
              top_k: int | None = None, bc=None) -> list:
     """Design-space pruning (paper §5.3): enumerate power-of-two bsize ×
     par_time × par_vec, drop configs whose working set exceeds the VMEM
@@ -221,7 +236,8 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
     A pinned ``par_time``, ``bsize`` or ``par_vec`` constrains the sweep to
     exactly that value (the paper's tuned depths, e.g. 36, need not be powers
     of two); only the free dimension(s) are enumerated — ``par_vec`` over
-    :data:`PAR_VEC_CANDIDATES` by default.  ``top_k`` keeps only the
+    :func:`par_vec_candidates` for the cell width by default (V<=16 for
+    f32, V<=32 for 16-bit cells).  ``top_k`` keeps only the
     best-ranked predictions — the shortlist the measured tuner
     (``repro.api.tuner``) times on real hardware.  May return ``[]`` when
     nothing is feasible — callers must not index blindly."""
@@ -232,6 +248,9 @@ def autotune(stencil: Stencil, dims: Sequence[int], iters: int,
         while pt <= par_time_max:
             pts.append(pt)
             pt *= 2
+    if par_vecs is None:
+        # 16-bit cells sweep up to V=32 (the 16-sublane tile ceiling)
+        par_vecs = par_vec_candidates(cell_bytes)
     pvs = [par_vec] if par_vec is not None else list(par_vecs)
     cands = []
     for pt in pts:

@@ -1,0 +1,164 @@
+"""Mixed-precision policy — storage dtypes, f32 accumulation, ulp tolerances.
+
+One module owns every dtype-dependent decision the system makes, so the
+kernel builder, the pure-JAX engine, the oracle, the perf model, and the
+conformance tests can never drift apart:
+
+  * **Storage vs accumulation.**  Grids live in HBM/VMEM in the problem's
+    *storage* dtype (``StencilProblem.dtype``); every stage application
+    computes in the *accumulation* dtype.  For 16-bit floats (bf16) the
+    accumulation dtype is f32: taps are widened on window read, the stencil
+    arithmetic (multiply-adds against f32 coefficients) runs in f32, and the
+    result is rounded back to storage exactly once per stage application —
+    the cast on the output DMA.  32-bit (and wider) floats accumulate in
+    their own dtype, so the f32 path is bit-identical to the pre-bf16 code.
+    Rounding once per stage application is the semantics ALL backends
+    implement (oracle / engine / Pallas / distributed), which is what makes
+    a cross-backend bf16 conformance matrix meaningful at ulp-level
+    tolerances.
+
+  * **Tile shapes.**  Mosaic's minimum VMEM tile is ``(sublanes, 128)``
+    lanes with a dtype-dependent sublane count — 8 for 4-byte, 16 for
+    2-byte, 32 for 1-byte cells (packed tiles).  :func:`sublanes_for` is
+    the single definition; ``blocking.vmem_bytes`` pads with it and
+    ``perf_model.predict`` prices sublane utilization against it.  Halving
+    the cell bytes therefore *doubles* the ``par_vec`` sweet spot (V=16
+    fills a bf16 tile the way V=8 fills an f32 tile) and the sweep ceiling
+    (:func:`repro.core.perf_model.par_vec_candidates` extends to V=32 for
+    16-bit tiles).
+
+  * **Tolerances.**  The conformance harness (``tests/test_precision.py``)
+    asserts every backend against an f64-promoted numpy oracle under the
+    explicit per-dtype ulp budgets of :data:`ULPS_PER_ITER` — see
+    :func:`tolerance` for the exact formula and README "Precision" for the
+    documented table.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+#: storage dtypes the full backend matrix (including the Pallas kernels)
+#: supports; the engine/reference backends additionally run any float dtype
+SUPPORTED_DTYPES: Tuple[str, ...] = ("float32", "bfloat16")
+
+#: the accumulation dtype of every sub-32-bit float storage dtype
+ACCUM_DTYPE = jnp.float32
+
+#: machine epsilon (one ulp at 1.0) per supported storage dtype
+MACHINE_EPS = {
+    "float32": 2.0 ** -23,
+    "bfloat16": 2.0 ** -8,
+    "float64": 2.0 ** -52,
+}
+
+#: per-(fused-)iteration ulp budget of the conformance harness: the maximum
+#: error growth per program iteration, in ulps of the *storage* dtype,
+#: backed by margin measured against the f64-promoted oracle (see
+#: tests/test_precision.py).  f32 stages accumulate in f32 (error ~ a few
+#: ulps/iter of rounding + reassociation); bf16 stages accumulate in f32 but
+#: round to bf16 once per stage application, so the per-iteration budget in
+#: *bf16* ulps is actually smaller — each step contributes at most ~1/2 ulp
+#: of output rounding plus shrunken inherited error (diffusion-type updates
+#: are near-convex combinations).
+ULPS_PER_ITER = {
+    "float32": 16.0,
+    "bfloat16": 4.0,
+    "float64": 16.0,
+}
+
+
+def normalize_dtype(spec) -> str:
+    """Canonical dtype name for any accepted spec form: a string
+    (``"bfloat16"``/``"bf16"``), a ``np.dtype``, a numpy/ml_dtypes scalar
+    type, or ``jnp.bfloat16``/``jnp.float32``.  The single normalization
+    used by :class:`~repro.api.problem.StencilProblem` and the serving
+    request path, so every spelling lands in the same bucket/cache key."""
+    if isinstance(spec, str) and spec in ("bf16", "half-bfloat"):
+        spec = "bfloat16"
+    return jnp.dtype(spec).name
+
+
+def cell_bytes(dtype) -> int:
+    """Storage bytes per grid cell — what HBM/halo traffic and VMEM
+    footprints scale with (4 for f32, 2 for bf16)."""
+    return int(jnp.dtype(dtype).itemsize)
+
+
+def sublanes_for(cb: int) -> int:
+    """Sublane count of the minimum Mosaic tile for a ``cb``-byte dtype:
+    (8, 128) f32, (16, 128) bf16, (32, 128) int8/fp8 — the second-to-last
+    tile dim grows as cells shrink, the 128-lane last dim is fixed."""
+    return max(8, 32 // max(1, int(cb)))
+
+
+def sublanes_of(dtype) -> int:
+    return sublanes_for(cell_bytes(dtype))
+
+
+def accum_dtype(dtype):
+    """The compute dtype of one stage application: f32 for sub-32-bit
+    floats, the storage dtype itself otherwise (so f32/f64 are untouched)."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating) and dt.itemsize < 4:
+        return ACCUM_DTYPE
+    return dt
+
+
+def needs_accum_cast(dtype) -> bool:
+    """True when storage and accumulation dtypes differ (bf16: cast taps up
+    on read, round the stage result back down on write)."""
+    return jnp.dtype(accum_dtype(dtype)) != jnp.dtype(dtype)
+
+
+def promote_getter(get):
+    """Wrap a neighbor getter so every tap is widened to the accumulation
+    dtype before it enters the stencil arithmetic."""
+    def wide(off):
+        return get(off).astype(ACCUM_DTYPE)
+    return wide
+
+
+def apply_stage(stencil, get_or_gets, coeffs, aux, storage_dtype):
+    """One stage application under the storage/accumulation policy: the
+    single choke point the oracle (``kernels/ref.py``) and the engine
+    (``core/engine.py``) route through.
+
+    For f32 (and any >= 32-bit float) this is *exactly*
+    ``stencil.apply(...)`` — no casts are inserted, so those paths stay
+    bit-identical to the pre-bf16 code.  For bf16 storage: taps widen to
+    f32, the arithmetic runs in f32 (coefficients are resolved in f32 by
+    the plan), and the result rounds to bf16 once.  The Pallas kernel
+    builder implements the same policy with its own casts (window-read /
+    output-DMA) — see ``kernels/builder.py``."""
+    if not needs_accum_cast(storage_dtype):
+        return stencil.apply(get_or_gets, coeffs, aux)
+    if isinstance(get_or_gets, tuple):
+        gets = tuple(promote_getter(g) for g in get_or_gets)
+    else:
+        gets = promote_getter(get_or_gets)
+    if aux is not None:
+        aux = aux.astype(ACCUM_DTYPE)
+    return stencil.apply(gets, coeffs, aux).astype(jnp.dtype(storage_dtype))
+
+
+def tolerance(dtype, iters: int = 1, stages: int = 1,
+              scale: Optional[float] = None) -> dict:
+    """``{"rtol": ..., "atol": ...}`` for comparing a ``dtype`` result of
+    ``iters`` program iterations (x ``stages`` stage applications each)
+    against the f64-promoted oracle.
+
+    The budget is ``ULPS_PER_ITER[dtype] * iters * stages`` ulps: per-step
+    rounding errors of near-convex stencil updates compound at most
+    linearly (each step's inherited error passes through a convex
+    combination, gaining <= 1/2 output-rounding ulp), so a linear-in-steps
+    ulp budget with the documented per-dtype base is a sound, explicit
+    bound — not a fitted fudge factor.  ``scale`` sets the absolute floor
+    ``atol = rtol * scale`` for fields whose magnitude is far from 1
+    (Hotspot temperatures ~80: pass ``scale=100``); default 1."""
+    name = jnp.dtype(dtype).name
+    eps = MACHINE_EPS[name]
+    ulps = ULPS_PER_ITER[name] * max(1, int(iters)) * max(1, int(stages))
+    rtol = ulps * eps
+    return {"rtol": rtol, "atol": rtol * (scale if scale else 1.0)}

@@ -46,11 +46,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 
+from repro.core import precision
 from repro.core.blocking import BlockGeometry, stream_extension
 from repro.programs import (DagNode, DagSpec, chain_dag, dag_layout,
                             unroll_dag)
@@ -76,7 +78,17 @@ def _chain_lags(chain, par_vec: int):
     return rs, list(itertools.accumulate(rs))
 
 
-def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
+def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int,
+                sdtype=jnp.float32):
+    # mixed precision (repro.core.precision): every VMEM buffer — windows,
+    # DMA slabs — holds the STORAGE dtype ``sdtype``; stage arithmetic runs
+    # in f32.  For bf16 that means: widen the concatenated window read (and
+    # the aux slab) to f32, apply the stencil against the f32 coefficients,
+    # round the result back to bf16 exactly once per entry — the same
+    # once-per-stage-application rounding the oracle/engine implement.  For
+    # f32 ``needs_cast`` is False and ZERO casts are emitted: the trace is
+    # identical to the pre-bf16 kernel, bit for bit.
+    needs_cast = precision.needs_accum_cast(sdtype)
     nb = geom.ndim - 1                       # blocked (trailing) dims
     V = geom.par_vec
     F = plan.n_streams
@@ -289,6 +301,12 @@ def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
                     bc = entry.bc
                     kind_s = "clamp" if bc is None else bc.kinds[0]
                     fill = 0.0 if bc is None else bc.value
+                    if needs_cast:
+                        # the stream-axis constant fill is applied AFTER the
+                        # widening cast: round it through storage (on host —
+                        # np, not a traced op) so it equals the bf16 padding
+                        # the other backends read
+                        fill = float(np.asarray(fill, jnp.dtype(sdtype)))
                     rec = reclamps[i]
 
                     def cat_of(pid):
@@ -303,7 +321,10 @@ def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
                                  for o in range(-R, R + 1)]
                         if not plan.linear:
                             slabs = [rec(s) for s in slabs]
-                        return jnp.concatenate(slabs, axis=0)
+                        cat = jnp.concatenate(slabs, axis=0)
+                        # window READ cast: widen storage to the f32
+                        # accumulation dtype before any arithmetic
+                        return cat.astype(jnp.float32) if needs_cast else cat
 
                     def make_get(cat):
                         def stream_tap(ds_):
@@ -362,6 +383,8 @@ def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
                         ja = jnp.clip(j, 0, nslabs - 1)
                         aux_slab = aux_win[(pl.ds((ja % HA) * V, V),)
                                            + blanks]
+                        if needs_cast:
+                            aux_slab = aux_slab.astype(jnp.float32)
                     val = entry.stencil.apply(
                         tuple(gets) if entry.stencil.arity > 1 else gets[0],
                         coeffs_of(entry), aux_slab)
@@ -370,6 +393,11 @@ def _dag_kernel(*refs, plan, lay, geom: BlockGeometry, ns: int, dom: int):
                         # forward their input slab unchanged
                         val = jnp.where(entry.iteration + 1 <= steps, val,
                                         gets[0]((0,) * geom.ndim))
+                    if needs_cast:
+                        # output cast: round to storage ONCE per entry (=
+                        # per stage application) before the value re-enters
+                        # a VMEM window or the output DMA buffer
+                        val = val.astype(sdtype)
 
                 if wins[vid] > 0:
                     # linear chains re-impose the sole consumer's (entry
@@ -416,19 +444,22 @@ def _superstep_dag_impl(dag: DagSpec, geom: BlockGeometry, gp: jnp.ndarray,
     has_aux = any(st.has_aux for st, _, _ in dag.stages)
     BS, CS = geom.bsize, geom.csize
 
+    # every VMEM buffer holds the STORAGE dtype (bf16 windows halve the
+    # working set); the kernel widens reads to f32 for the stage arithmetic
+    sdtype = gp.dtype
     kernel = functools.partial(_dag_kernel, plan=plan, lay=lay, geom=geom,
-                               ns=ns, dom=dom)
+                               ns=ns, dom=dom, sdtype=sdtype)
     # one rolling window per consumed producer value, buffer-depth sized
-    scratch = [pltpu.VMEM((w * V,) + BS, jnp.float32)
+    scratch = [pltpu.VMEM((w * V,) + BS, sdtype)
                for w in lay.wins if w > 0]
     lead = (F,) if multi else ()
-    scratch += [pltpu.VMEM(lead + (2, V) + BS, jnp.float32),  # in dbl buffer
+    scratch += [pltpu.VMEM(lead + (2, V) + BS, sdtype),  # in dbl buffer
                 pltpu.SemaphoreType.DMA(lead + (2,))]
     if has_aux:
-        scratch += [pltpu.VMEM((lay.aux_depth * V,) + BS, jnp.float32),
-                    pltpu.VMEM((2, V) + BS, jnp.float32),
+        scratch += [pltpu.VMEM((lay.aux_depth * V,) + BS, sdtype),
+                    pltpu.VMEM((2, V) + BS, sdtype),
                     pltpu.SemaphoreType.DMA((2,))]
-    scratch += [pltpu.VMEM(lead + (2, V) + CS, jnp.float32),  # out dbl buffer
+    scratch += [pltpu.VMEM(lead + (2, V) + CS, sdtype),  # out dbl buffer
                 pltpu.SemaphoreType.DMA(lead + (2,))]
 
     n_hbm_in = 2 if has_aux else 1
@@ -444,7 +475,7 @@ def _superstep_dag_impl(dag: DagSpec, geom: BlockGeometry, gp: jnp.ndarray,
         + [pl.BlockSpec(memory_space=pl.ANY)] * n_hbm_in,
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=scratch,
-        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(gp.shape, sdtype),
         interpret=interpret,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=(

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import boundary
+from repro.core import boundary, precision
 from repro.core.stencils import Stencil
 
 
@@ -34,9 +34,13 @@ def _padded_getter(grid: jnp.ndarray, r: int, bc=None):
 
 def oracle_step(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
                 aux: jnp.ndarray | None = None, *, bc=None) -> jnp.ndarray:
-    """One time-step over the full grid under ``bc`` (default: clamp)."""
+    """One time-step over the full grid under ``bc`` (default: clamp).
+
+    Storage/accumulation policy (``repro.core.precision``): sub-32-bit
+    grids (bf16) widen to f32 for the stage arithmetic and round back to
+    storage once per application; f32 passes through apply() untouched."""
     get = _padded_getter(grid, stencil.radius, bc)
-    return stencil.apply(get, coeffs, aux)
+    return precision.apply_stage(stencil, get, coeffs, aux, grid.dtype)
 
 
 def oracle_run(stencil: Stencil, grid: jnp.ndarray, coeffs: dict,
@@ -85,8 +89,9 @@ def oracle_dag_step(dag, state: jnp.ndarray, stage_coeffs,
         st, bc_s, refs = dag.stages[si]
         ins = [vals[r] if r >= 0 else fields[~r] for r in refs]
         gets = [_padded_getter(x, st.radius, bc_s) for x in ins]
-        vals[si] = st.apply(tuple(gets) if st.arity > 1 else gets[0],
-                            stage_coeffs[si], aux if st.has_aux else None)
+        vals[si] = precision.apply_stage(
+            st, tuple(gets) if st.arity > 1 else gets[0],
+            stage_coeffs[si], aux if st.has_aux else None, state.dtype)
     new = [vals[u] if u >= 0 else fields[~u] for u in dag.updates]
     return jnp.stack(new) if F > 1 else new[0]
 

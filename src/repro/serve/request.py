@@ -56,10 +56,13 @@ def _normalize_problem(problem, grid) -> StencilProblem:
     if isinstance(problem, StencilProblem):
         return problem
     # name / Stencil / stage-sequence forms: the grid supplies the shape
-    # (single-field only — multi-field programs carry a (F, *shape) state
-    # stack, so their requests must pass a full StencilProblem)
+    # AND the storage dtype — a bf16 grid must land in a bf16 bucket, not
+    # silently inherit the f32 default (single-field only — multi-field
+    # programs carry a (F, *shape) state stack, so their requests must pass
+    # a full StencilProblem)
     shape = tuple(int(d) for d in grid.shape)
-    return StencilProblem(problem, shape)
+    dtype = getattr(grid, "dtype", "float32")
+    return StencilProblem(problem, shape, dtype=dtype)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,69 @@
+"""Distributed mixed-precision conformance check (2-device mesh).
+
+Run in a subprocess with 2 fake CPU devices (tests/test_precision.py) so the
+main pytest process keeps its single-device view.  bf16 storage must survive
+the sharded super-step — halo exchange included — and match the
+single-device reference bit for bit (every backend implements the same
+round-once-per-stage-application policy of ``repro.core.precision``); f32
+must stay bit-identical to the reference as before.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import RunConfig, StencilProblem, plan
+
+
+def check(dtype, bc, axis_map, dims=(16, 32), par_time=2, bsize=16, iters=5):
+    mesh = jax.make_mesh((2,), ("d",))
+    g = jax.random.uniform(jax.random.PRNGKey(3), dims, jnp.float32,
+                           0.5, 2.0).astype(jnp.dtype(dtype))
+    problem = StencilProblem("diffusion2d", dims, dtype=dtype, boundary=bc)
+    dist = plan(problem, RunConfig(backend="distributed", mesh=mesh,
+                                   axis_map=axis_map, par_time=par_time,
+                                   bsize=bsize))
+    ref = plan(problem, RunConfig(backend="reference"))
+    got = np.asarray(dist.run(g, iters).astype(jnp.float32))
+    want = np.asarray(ref.run(g, iters).astype(jnp.float32))
+    assert got.dtype == np.float32
+    assert dist.run(g, 1).dtype == problem.jnp_dtype
+    np.testing.assert_array_equal(
+        got, want, err_msg=f"dtype={dtype} bc={bc} map={axis_map}")
+    print(f"ok distributed {dtype} bc={problem.bc.token()} map={axis_map}")
+
+
+def check_batch(dtype):
+    mesh = jax.make_mesh((2,), ("d",))
+    dims = (16, 32)
+    g = jax.random.uniform(jax.random.PRNGKey(5), dims, jnp.float32,
+                           0.5, 2.0).astype(jnp.dtype(dtype))
+    gs = jnp.stack([g, (g.astype(jnp.float32) * 1.1).astype(g.dtype),
+                    (g.astype(jnp.float32) * 0.9).astype(g.dtype)])
+    problem = StencilProblem("diffusion2d", dims, dtype=dtype,
+                             boundary=("periodic", "reflect"))
+    dist = plan(problem, RunConfig(backend="distributed", mesh=mesh,
+                                   axis_map=(("d",), None), par_time=2,
+                                   bsize=16))
+    ref = plan(problem, RunConfig(backend="reference"))
+    got = dist.run_batch(gs, 4)
+    assert got.dtype == problem.jnp_dtype
+    want = jnp.stack([ref.run(gs[i], 4) for i in range(3)])
+    np.testing.assert_array_equal(
+        np.asarray(got.astype(jnp.float32)),
+        np.asarray(want.astype(jnp.float32)),
+        err_msg=f"run_batch dtype={dtype}")
+    print(f"ok distributed run_batch {dtype}")
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) == 2, jax.devices()
+    for dtype in ("float32", "bfloat16"):
+        check(dtype, "clamp", (("d",), None))           # stream-sharded
+        check(dtype, ("clamp", "periodic"), (None, ("d",)))  # blocked-sharded
+        check(dtype, "reflect", (("d",), None))
+        check_batch(dtype)
+    print("ALL OK")

@@ -11,21 +11,24 @@ import jax.numpy as jnp              # noqa: E402
 import numpy as np                   # noqa: E402
 
 from repro.api import RunConfig, StencilProblem, plan        # noqa: E402
-from repro.core import STENCILS, default_coeffs              # noqa: E402
+from repro.core import STENCILS, default_coeffs, precision   # noqa: E402
 from repro.core.blocking import (BlockGeometry,              # noqa: E402
                                  superstep_traffic_bytes)
 from repro.kernels.ref import oracle_run                     # noqa: E402
 
 
 def _plan_run(stencil, g, c, iters, par_time, bsize, aux=None,
-              backend="pallas_interpret", boundary="clamp", par_vec=1):
-    p = plan(StencilProblem(stencil, tuple(g.shape), boundary=boundary),
+              backend="pallas_interpret", boundary="clamp", par_vec=1,
+              dtype="float32"):
+    p = plan(StencilProblem(stencil, tuple(g.shape), dtype=dtype,
+                            boundary=boundary),
              RunConfig(backend=backend, par_time=par_time, bsize=bsize,
                        par_vec=par_vec))
     return p.run(g, iters, c, aux=aux), p.problem.bc
 
 
 _bc_kind = st.sampled_from(["clamp", "periodic", "reflect", "constant:0.6"])
+_dtype = st.sampled_from(["float32", "bfloat16"])
 
 _geometry2d = st.tuples(
     st.integers(2, 40),            # ny
@@ -36,6 +39,7 @@ _geometry2d = st.tuples(
     st.sampled_from([1, 2, 4, 8]), # par_vec (stream-axis vector width)
     st.sampled_from(["diffusion2d", "hotspot2d"]),
     st.tuples(_bc_kind, _bc_kind), # per-axis BC mix (stream, blocked)
+    _dtype,                        # storage dtype (f32 accumulation always)
 )
 
 
@@ -43,24 +47,29 @@ _geometry2d = st.tuples(
 @given(_geometry2d)
 def test_pallas_equals_oracle_any_geometry(params):
     """Blocking seams can never leak a wrong halo — for ANY per-axis BC mix
-    crossed with ANY (bsize, par_time, par_vec, grid, iters) combination."""
-    ny, nx, iters, par_time, bsize, par_vec, name, bc_mix = params
+    crossed with ANY (bsize, par_time, par_vec, grid, iters, dtype)
+    combination, under the drawn dtype's explicit ulp budget."""
+    ny, nx, iters, par_time, bsize, par_vec, name, bc_mix, dtype = params
     stencil = STENCILS[name]
     if bsize <= 2 * stencil.radius * par_time:
         return
+    sd = jnp.dtype(dtype)
     key = jax.random.PRNGKey(ny * 1000 + nx)
-    g = jax.random.uniform(key, (ny, nx), jnp.float32, 0.5, 2.0)
+    g = jax.random.uniform(key, (ny, nx), jnp.float32, 0.5, 2.0).astype(sd)
     aux = (jax.random.uniform(jax.random.fold_in(key, 7), (ny, nx),
-                              jnp.float32, 0.0, 0.1)
+                              jnp.float32, 0.0, 0.1).astype(sd)
            if stencil.has_aux else None)
     c = default_coeffs(stencil)
     got, bc = _plan_run(stencil, g, c, iters, par_time, bsize, aux,
-                        boundary=bc_mix, par_vec=par_vec)
+                        boundary=bc_mix, par_vec=par_vec, dtype=dtype)
+    assert got.dtype == sd
     want = oracle_run(stencil, g, c, iters, aux, bc=bc)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=3e-5, atol=3e-5,
+    tol = precision.tolerance(dtype, iters)
+    np.testing.assert_allclose(np.asarray(got.astype(jnp.float32)),
+                               np.asarray(want.astype(jnp.float32)), **tol,
                                err_msg=f"bc={bc.token()} pt={par_time} "
-                                       f"bs={bsize} V={par_vec} {ny}x{nx}")
+                                       f"bs={bsize} V={par_vec} {ny}x{nx} "
+                                       f"{dtype}")
 
 
 @settings(max_examples=15, deadline=None)
@@ -109,15 +118,18 @@ def test_blocking_geometry_invariants(dimy, dimx, par_time, rad, bsize):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.integers(2, 30), st.integers(2, 40), st.integers(0, 3))
-def test_diffusion_maximum_principle(ny, nx, seed):
-    """Convex-coefficient diffusion can never exceed initial extrema."""
+@given(st.integers(2, 30), st.integers(2, 40), st.integers(0, 3), _dtype)
+def test_diffusion_maximum_principle(ny, nx, seed, dtype):
+    """Convex-coefficient diffusion can never exceed initial extrema (up to
+    the drawn dtype's per-step output-rounding ulps)."""
     stencil = STENCILS["diffusion2d"]
     g = jax.random.uniform(jax.random.PRNGKey(seed), (ny, nx),
-                           jnp.float32, -1.0, 1.0)
+                           jnp.float32, -1.0, 1.0).astype(jnp.dtype(dtype))
     c = default_coeffs(stencil)   # convex: coefficients sum to 1
-    out, _ = _plan_run(stencil, g, c, 5, 2, 16)
-    assert float(jnp.max(out)) <= float(jnp.max(g)) + 1e-5
+    out, _ = _plan_run(stencil, g, c, 5, 2, 16, dtype=dtype)
+    slack = precision.tolerance(dtype, 5)["atol"]
+    assert float(jnp.max(out.astype(jnp.float32))) \
+        <= float(jnp.max(g.astype(jnp.float32))) + slack
     assert float(jnp.min(out)) >= float(jnp.min(g)) - 1e-5
     assert not bool(jnp.any(jnp.isnan(out)))
 

@@ -235,6 +235,54 @@ class TestService:
             np.testing.assert_array_equal(np.asarray(res.grid),
                                           np.asarray(want))
 
+    def test_mixed_dtype_admission(self):
+        """bf16 and f32 requests for the SAME stencil/shape land in their
+        own buckets (a by-name request inherits its grid's dtype), never
+        co-batch, and each batch is bit-identical to per-request runs in
+        its own storage dtype."""
+        async def main():
+            cfg = ServiceConfig(buckets=tuple(
+                make_bucket(problem={"stencil": "diffusion2d",
+                                     "shape": list(SHAPE), "dtype": dt},
+                            name=f"diff2d-{dt}", max_wait_ms=10.0)
+                for dt in ("float32", "bfloat16")))
+            svc = await serve(cfg, prewarm=False)
+            gs = grids_for(6)
+            grids = [g if i % 2 == 0 else g.astype(jnp.bfloat16)
+                     for i, g in enumerate(gs)]
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 3))
+                    for g in grids]
+            results = await asyncio.gather(*futs)
+            snap = svc.snapshot()
+            await svc.stop()
+            return grids, results, snap
+
+        grids, results, snap = run_async(main())
+        plans = {dt: plan(StencilProblem("diffusion2d", SHAPE, dtype=dt),
+                          RunConfig(**RUN))
+                 for dt in ("float32", "bfloat16")}
+        for g, res in zip(grids, results):
+            dt = jnp.dtype(g.dtype).name
+            assert res.bucket == f"diff2d-{dt}"
+            assert res.batch_size == 3     # only same-dtype peers co-batch
+            assert res.grid.dtype == g.dtype
+            np.testing.assert_array_equal(
+                np.asarray(res.grid.astype(jnp.float32)),
+                np.asarray(plans[dt].run(g, 3).astype(jnp.float32)))
+
+    def test_unmatched_dtype_rejected(self):
+        """An f32-only bucket set must reject a bf16 grid with the typed
+        NoMatchingBucket error — never silently serve it as f32."""
+        async def main():
+            svc = await serve(ServiceConfig(buckets=(make_bucket(),)),
+                              prewarm=False)
+            g16 = jnp.ones(SHAPE, jnp.bfloat16)
+            with pytest.raises(NoMatchingBucket):
+                await svc.submit(StencilRequest("diffusion2d", g16, 2))
+            await svc.stop()
+
+        run_async(main())
+
     def test_staged_advance_mixed_iters(self):
         """One launch carries heterogeneous iteration counts: members are
         delivered at their own stop, bit-identical to individual runs."""

@@ -246,11 +246,21 @@ def test_exec_cache_opt_out_still_memoizes_within_a_plan():
 
 @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
 def test_pallas_rejects_unsupported_dtype_at_plan_time(backend):
-    problem = StencilProblem("diffusion2d", DIMS2, dtype="bfloat16")
+    # bf16 joined the supported set (bf16 storage + f32 accumulation); f16
+    # remains unsupported and must still fail at plan time, naming what IS
+    problem = StencilProblem("diffusion2d", DIMS2, dtype="float16")
     with pytest.raises(ValueError) as ei:
         plan(problem, _cfg(backend))
     msg = str(ei.value)
     assert "float32" in msg and "bfloat16" in msg   # names what IS supported
+    assert "float16" in msg
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret"])
+def test_pallas_accepts_bf16_at_plan_time(backend):
+    problem = StencilProblem("diffusion2d", DIMS2, dtype="bfloat16")
+    p = plan(problem, _cfg(backend))          # must not raise
+    assert p.problem.dtype == "bfloat16"
 
 
 # --- perf model: batch dimension ---------------------------------------------
