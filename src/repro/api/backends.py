@@ -74,9 +74,25 @@ import jax.numpy as jnp
 from repro.core.blocking import BlockGeometry
 from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
+from repro.resilience.faults import (corrupt_point, fault_point,
+                                     register_point)
 
 #: (grid, coeffs, iters, aux) -> final grid
 ExecuteFn = Callable[..., jnp.ndarray]
+
+# --- fault-injection seams (repro.resilience; no-ops with no plan active) ----
+FP_EXECUTE = register_point(
+    "backend.execute", "before any backend's single-grid execute")
+FP_EXECUTE_RESULT = register_point(
+    "backend.execute.result", "a single-grid result passes through "
+    "(action='nan' poisons it)")
+FP_EXECUTE_BATCH = register_point(
+    "backend.execute_batch", "before any backend's batched execute")
+FP_EXECUTE_BATCH_RESULT = register_point(
+    "backend.execute_batch.result", "a batched result passes through "
+    "(action='nan' + member=i poisons one member)")
+FP_EXEC_CACHE = register_point(
+    "exec_cache.get", "on every process-level executable-cache lookup")
 
 #: dtypes the Pallas streaming kernels support (plan-time validation):
 #: f32, and bf16 storage with f32 accumulation inside the PE chain — see
@@ -109,13 +125,42 @@ class BackendProgram:
 
 
 def as_program(obj: Union[ExecuteFn, BackendProgram]) -> BackendProgram:
-    """Normalize a factory's return value (bare callable or program)."""
+    """Normalize a factory's return value (bare callable or program), and
+    thread the resilience seams through it: every backend — built-in or
+    custom-registered — gets the ``backend.execute*`` injection points for
+    free, so the whole failure matrix is testable against any of them."""
     if isinstance(obj, BackendProgram):
-        return obj
-    if not callable(obj):
+        program = obj
+    elif callable(obj):
+        program = BackendProgram(execute=obj)
+    else:
         raise TypeError(f"backend factory returned {type(obj).__name__}; "
                         "expected a callable or BackendProgram")
-    return BackendProgram(execute=obj)
+    return _instrument(program)
+
+
+def _instrument(program: BackendProgram) -> BackendProgram:
+    """Wrap the entry points with their fault seams (idempotent)."""
+    if getattr(program.execute, "_fault_instrumented", False):
+        return program
+    inner, inner_batch = program.execute, program.execute_batch
+
+    def execute(grid, coeffs, iters, aux=None):
+        fault_point(FP_EXECUTE)
+        return corrupt_point(FP_EXECUTE_RESULT,
+                             inner(grid, coeffs, iters, aux))
+    execute._fault_instrumented = True
+
+    execute_batch = None
+    if inner_batch is not None:
+        def execute_batch(grids, coeffs, iters, aux=None):
+            fault_point(FP_EXECUTE_BATCH, {"batch": grids.shape[0]})
+            return corrupt_point(FP_EXECUTE_BATCH_RESULT,
+                                 inner_batch(grids, coeffs, iters, aux),
+                                 {"batch": grids.shape[0]})
+        execute_batch._fault_instrumented = True
+
+    return BackendProgram(execute=execute, execute_batch=execute_batch)
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -198,6 +243,7 @@ def _program_cache(use_cache: bool) -> Callable:
     call."""
     if use_cache:
         def get(key, build):
+            fault_point(FP_EXEC_CACHE, {"key": key})
             per_key = _EXEC_KEY_STATS.setdefault(
                 key, {"hits": 0, "misses": 0})
             fn = _EXEC_CACHE.get(key)

@@ -240,7 +240,8 @@ class StencilPlan:
 
     # --- execution ----------------------------------------------------------
     def run(self, grid, iters: int, coeffs=None, *,
-            aux=None) -> jnp.ndarray:
+            aux=None, checkpoint_every: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None) -> jnp.ndarray:
         """Advance ``grid`` by ``iters`` time-steps (program iterations —
         each applies every stage in order).
 
@@ -251,7 +252,24 @@ class StencilPlan:
         (required iff any stage has an aux stream).  Multi-field programs
         take (and return) the ``(n_fields, *shape)`` field stack —
         ``problem.state_shape`` — fields in declaration order.  The plan is
-        reusable: call ``run`` any number of times, with any ``iters``."""
+        reusable: call ``run`` any number of times, with any ``iters``.
+
+        ``checkpoint_every`` + ``checkpoint_dir`` make the run restartable
+        (:func:`repro.resilience.run_checkpointed`): state is persisted
+        atomically every (super-step-aligned) ``checkpoint_every``
+        iterations, and a killed process that calls ``run`` again with the
+        same directory resumes from the last complete step — the final grid
+        is bit-identical to an uninterrupted run, even when the resume
+        happens on a different mesh (the grid re-shards on entry)."""
+        if (checkpoint_every is None) != (checkpoint_dir is None):
+            raise ValueError("checkpoint_every and checkpoint_dir go "
+                             "together — pass both or neither")
+        if checkpoint_dir is not None:
+            from repro.resilience.checkpoint_run import run_checkpointed
+            return run_checkpointed(
+                self, grid, iters, coeffs, aux=aux,
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir).grid
         grid = jnp.asarray(grid, self.problem.jnp_dtype)
         if tuple(grid.shape) != self.problem.state_shape:
             raise ValueError(f"grid shape {grid.shape} != problem state "

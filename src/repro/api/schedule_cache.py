@@ -24,6 +24,7 @@ entry) is always safe — the only cost is re-tuning on the next miss.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -32,6 +33,22 @@ import time
 import warnings
 from pathlib import Path
 from typing import Optional, Union
+
+from repro.resilience.faults import fault_point, register_point
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: writes fall back to merge-no-lock
+    fcntl = None
+
+#: inside ``_load``'s degradation envelope: an injected ``OSError`` here
+#: behaves exactly like a flaky filesystem — the cache treats it as a miss
+#: (re-tune), never a crash
+FP_LOAD = register_point(
+    "schedule_cache.get", "on every schedule-cache file read (inject "
+    "exc=OSError to model a real filesystem failure)")
+FP_PUT = register_point(
+    "schedule_cache.put", "before a measured winner is persisted")
 
 #: Bump when the on-disk entry layout changes (not for code changes — those
 #: are covered by the content salt).
@@ -168,6 +185,7 @@ class ScheduleCache:
 
     def _load(self) -> dict:
         try:
+            fault_point(FP_LOAD, {"path": str(self.path)})
             with open(self.path) as f:
                 data = json.load(f)
         except (OSError, ValueError):
@@ -182,21 +200,55 @@ class ScheduleCache:
         entry = self._load().get(key)
         return dict(entry) if isinstance(entry, dict) else None
 
+    @contextlib.contextmanager
+    def _write_lock(self):
+        """Exclusive advisory lock over the cache file's writers.
+
+        Without it, two concurrent ``plan()`` processes race the
+        read-modify-write in :meth:`put`: both load, both write, and the
+        ``os.replace`` that lands second silently drops the other's freshly
+        measured entry.  ``flock`` on a sidecar ``.lock`` file serializes
+        the load→merge→replace critical section (the sidecar, not the cache
+        file itself, because ``os.replace`` swaps the cache inode out from
+        under any lock held on it).  Non-POSIX hosts (no ``fcntl``) fall
+        back to merging immediately before the replace — a much smaller
+        window than the old load-at-entry, not a guarantee."""
+        if fcntl is None:
+            yield
+            return
+        lock_path = self.path.with_name(self.path.name + ".lock")
+        with open(lock_path, "a") as lockf:
+            fcntl.flock(lockf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lockf, fcntl.LOCK_UN)
+
     def put(self, key: str, entry: dict) -> None:
         """Persist ``entry``; an unwritable path degrades to a warning — the
         cache is an optimization, and a write failure must not discard the
-        freshly measured winner by crashing ``plan()``."""
+        freshly measured winner by crashing ``plan()``.
+
+        Concurrent-writer safe: the on-disk state is (re)loaded and merged
+        with this entry *inside* the write lock, immediately before the
+        atomic ``os.replace`` — two processes tuning different problems
+        both keep their winners (regression-tested with real concurrent
+        processes in tests/test_resilience.py)."""
         tmp = None
         try:
-            entries = self._load()
-            entries[key] = dict(entry, saved_at=time.time())
+            fault_point(FP_PUT, {"path": str(self.path), "key": key})
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
-                                       prefix=self.path.name, suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump({"version": CACHE_FORMAT_VERSION,
-                           "entries": entries}, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
+            with self._write_lock():
+                entries = self._load()      # fresh read, under the lock
+                entries[key] = dict(entry, saved_at=time.time())
+                fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                           prefix=self.path.name,
+                                           suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump({"version": CACHE_FORMAT_VERSION,
+                               "entries": entries}, f, indent=1,
+                              sort_keys=True)
+                os.replace(tmp, self.path)
         except OSError as e:
             if tmp is not None:
                 try:

@@ -1,5 +1,6 @@
-from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+from repro.checkpoint.checkpoint import (CheckpointManager, complete_steps,
+                                         latest_step, restore_latest_valid,
                                          restore_pytree, save_pytree)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_pytree",
-           "save_pytree"]
+__all__ = ["CheckpointManager", "complete_steps", "latest_step",
+           "restore_latest_valid", "restore_pytree", "save_pytree"]

@@ -21,10 +21,23 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.resilience.faults import fault_point, register_point
+
+#: fires after the shards+manifest land in ``step_N.tmp`` but BEFORE the
+#: atomic rename publishes them — an injected crash here is exactly the
+#: kill-mid-save the atomicity guarantee is about (the .tmp never shadows
+#: the previous good step)
+FP_SAVE = register_point(
+    "checkpoint.save", "before the step_N.tmp -> step_N atomic publish")
+FP_RESTORE = register_point(
+    "checkpoint.restore", "at the start of one step's restore (a firing "
+    "models a corrupt/unreadable step; restore_latest_valid falls back)")
 
 
 _STORAGE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -75,6 +88,7 @@ def save_pytree(tree: Any, directory: str, step: int, host_id: int = 0,
     }
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump(manifest, f)
+    fault_point(FP_SAVE, {"step": step, "directory": directory})
     if host_id == 0:
         if os.path.exists(final):
             shutil.rmtree(final)
@@ -82,20 +96,29 @@ def save_pytree(tree: Any, directory: str, step: int, host_id: int = 0,
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def complete_steps(directory: str) -> list:
+    """Published (non-``.tmp``, manifest-bearing) step numbers, ascending.
+    "Published" is necessary but not sufficient — a step can still fail
+    integrity at restore; :func:`restore_latest_valid` handles that."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, name, "MANIFEST.json")):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = complete_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_pytree(template: Any, directory: str, step: int,
                    host_id: int = 0, shardings=None) -> Any:
     path = os.path.join(directory, f"step_{step:08d}")
+    fault_point(FP_RESTORE, {"step": step, "directory": directory})
     with open(os.path.join(path, "MANIFEST.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, f"shard_{host_id:05d}.npz"))
@@ -122,6 +145,25 @@ def restore_pytree(template: Any, directory: str, step: int,
     if shardings is not None:
         restored = jax.device_put(restored, shardings)
     return restored
+
+
+def restore_latest_valid(template: Any, directory: str, host_id: int = 0,
+                         shardings=None):
+    """Restore the newest step that actually restores: a corrupt manifest,
+    truncated/mangled shard, failed checksum, or missing leaf **falls back
+    to the previous complete step** (with a warning) instead of crashing the
+    restart — the resume path's contract.  Returns ``(tree, step)`` or
+    ``(None, None)`` when no step in the directory is restorable."""
+    for step in reversed(complete_steps(directory)):
+        try:
+            return restore_pytree(template, directory, step, host_id,
+                                  shardings), step
+        except Exception as e:      # noqa: BLE001 — any broken step: skip it
+            warnings.warn(
+                f"checkpoint step {step} in {directory!r} is unusable "
+                f"({type(e).__name__}: {e}); falling back to the previous "
+                f"complete step", RuntimeWarning, stacklevel=2)
+    return None, None
 
 
 class CheckpointManager:
@@ -162,8 +204,7 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def restore_latest(self, template: Any, shardings=None):
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None
-        return restore_pytree(template, self.directory, step, self.host_id,
-                              shardings), step
+        """Newest *restorable* step (corrupt/truncated steps fall back to
+        the previous complete one — see :func:`restore_latest_valid`)."""
+        return restore_latest_valid(template, self.directory, self.host_id,
+                                    shardings)

@@ -45,6 +45,15 @@ from repro.core.engine import (blocked_superstep, blocked_superstep_chain,
                                blocked_superstep_dag)
 from repro.core.stencils import Stencil
 from repro.programs import DagSpec, dag_radius
+from repro.resilience.faults import fault_point, register_point
+
+#: fires when a halo exchange is *built* — i.e. at trace time, once per
+#: compiled program per sharded axis, NOT once per super-step (the exchange
+#: itself runs inside jit).  An injected raise here models a mesh/collective
+#: setup failure, which is how ICI faults actually surface to the host.
+FP_EXCHANGE = register_point(
+    "distributed.exchange", "at halo-exchange build (trace) time — models a "
+    "collective/mesh setup failure")
 
 
 def _linear_index(axis_names: Tuple[str, ...]) -> jnp.ndarray:
@@ -73,6 +82,8 @@ def _exchange_halo(x: jnp.ndarray, grid_axis: int,
     shard 0's leading halo is shard n-1's trailing strip, which IS the
     global periodic neighbor (no true-edge handling left to do locally).
     """
+    fault_point(FP_EXCHANGE, {"axis": grid_axis, "halo": h,
+                              "periodic": periodic})
     n = _axis_total(axis_names)
     lead = jax.lax.slice_in_dim(x, 0, h, axis=grid_axis)
     trail = jax.lax.slice_in_dim(x, x.shape[grid_axis] - h,

@@ -1,0 +1,39 @@
+"""``repro.resilience`` — the failure layer: what fails, what survives,
+what resumes.
+
+Four pieces, designed to be used together (DESIGN.md §2.7):
+
+* **Deterministic fault injection** (:mod:`~repro.resilience.faults`):
+  named injection points threaded through the hot seams — backend
+  execute/execute_batch, the serving launch path, schedule/executable cache
+  reads, the distributed exchange, checkpoint save/restore — driven by a
+  seedable :class:`FaultPlan`, so every failure mode below is testable
+  without real hardware faults.
+* **Numerical health guards** (:mod:`~repro.resilience.health`):
+  :class:`HealthPolicy` NaN/Inf/amplitude checks on super-step boundaries,
+  cheap enough to be on by default in serving; structured
+  :class:`NumericalFault` / :class:`LaunchFailed` errors.
+* **Retries + circuit breaking** (:mod:`~repro.resilience.retry`):
+  capped-exponential :class:`RetryPolicy` per launch, per-bucket
+  :class:`CircuitBreaker` degrading coalesced -> per-request -> reject.
+* **Checkpointed long runs** (:mod:`~repro.resilience.checkpoint_run`):
+  ``StencilPlan.run(..., checkpoint_every=, checkpoint_dir=)`` chunked over
+  the atomic ``repro.checkpoint`` substrate — a SIGKILL'd run resumes from
+  the last complete super-step, bit-identically, on any mesh.
+"""
+from repro.resilience.checkpoint_run import CheckpointedRun, run_checkpointed
+from repro.resilience.faults import (FaultPlan, FaultSpec, InjectedFault,
+                                     active_plan, corrupt_point, fault_point,
+                                     register_point, registered_points)
+from repro.resilience.health import (CheckpointMismatch, HealthPolicy,
+                                     LaunchFailed, NumericalFault,
+                                     ResilienceError)
+from repro.resilience.retry import BreakerConfig, CircuitBreaker, RetryPolicy
+
+__all__ = [
+    "BreakerConfig", "CheckpointMismatch", "CheckpointedRun",
+    "CircuitBreaker", "FaultPlan", "FaultSpec", "HealthPolicy",
+    "InjectedFault", "LaunchFailed", "NumericalFault", "ResilienceError",
+    "RetryPolicy", "active_plan", "corrupt_point", "fault_point",
+    "register_point", "registered_points", "run_checkpointed",
+]

@@ -1,0 +1,126 @@
+"""Numerical health guards: NaN/Inf/amplitude-blowup detection.
+
+A :class:`HealthPolicy` is the cheap invariant check that runs on super-step
+boundaries: "is this grid still finite, and is its amplitude still sane?"
+It costs two reductions over the grid (an ``isfinite`` all-reduce and a
+``max(abs)``), which is noise next to a super-step's compute — cheap enough
+to be **on by default in serving** — and it is what turns a silent
+NaN-producing request into a structured, per-request
+:class:`NumericalFault` instead of a poisoned batch.
+
+The exceptions here are the resilience layer's vocabulary; ``repro.serve``
+subclasses them into its ``ServeError`` hierarchy so a serving client can
+catch either family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class ResilienceError(Exception):
+    """Base class of the resilience layer's structured failures."""
+
+
+class NumericalFault(ResilienceError):
+    """A grid failed its health check.  ``kind`` is ``"nan"``, ``"inf"`` or
+    ``"blowup"``; ``member`` is the batch index when the check ran on one
+    member of a coalesced launch; ``max_abs`` is the observed amplitude."""
+
+    def __init__(self, message: str, *, kind: str = "nan",
+                 member: Optional[int] = None,
+                 max_abs: Optional[float] = None):
+        super().__init__(message)
+        self.kind = kind
+        self.member = member
+        self.max_abs = max_abs
+
+
+class LaunchFailed(ResilienceError):
+    """A launch (or rebuild on its behalf) kept failing after the retry
+    budget was spent.  ``attempts`` counts tries; ``__cause__`` carries the
+    last underlying error."""
+
+    def __init__(self, message: str, *, attempts: int = 1):
+        super().__init__(message)
+        self.attempts = attempts
+
+
+class CheckpointMismatch(ResilienceError):
+    """A checkpoint directory holds state for a different computation
+    (fingerprint / shape / dtype disagree) — resuming from it would
+    silently compute garbage, so it is refused loudly."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """When (and how hard) to judge a grid unhealthy.
+
+    Parameters
+    ----------
+    check_nonfinite:
+        Fail on any NaN or Inf cell (the default, and the cheap half).
+    max_abs:
+        Absolute amplitude ceiling: a finite grid whose ``max(|x|)``
+        exceeds this fails with ``kind="blowup"`` (diverging schemes grow
+        for many iterations before they overflow to Inf — this catches
+        them at the super-step boundary where they first go wrong).
+        ``None`` disables the amplitude check.
+    enabled:
+        Master switch; a disabled policy's :meth:`check` is a no-op.
+    """
+    check_nonfinite: bool = True
+    max_abs: Optional[float] = None
+    enabled: bool = True
+
+    @classmethod
+    def make(cls, spec) -> "HealthPolicy":
+        """Normalize config forms: policy | dict | bool | None (defaults)."""
+        if isinstance(spec, cls):
+            return spec
+        if spec is None or spec is True:
+            return cls()
+        if spec is False:
+            return cls(enabled=False)
+        if isinstance(spec, dict):
+            return cls(**spec)
+        raise ValueError(f"health spec must be a HealthPolicy, dict or bool, "
+                         f"got {type(spec).__name__}")
+
+    # --- checks --------------------------------------------------------------
+    def fault_of(self, grid, *, member: Optional[int] = None,
+                 where: str = "") -> Optional[NumericalFault]:
+        """The :class:`NumericalFault` this grid deserves, or ``None``.
+        Runs on the host (one ``np.asarray`` view of an already-materialized
+        grid is free; a device grid pays one transfer)."""
+        if not self.enabled:
+            return None
+        a = np.asarray(grid)
+        # bf16 & friends: numpy reductions need a native float view
+        if a.dtype.kind not in "fc":
+            a = a.astype(np.float32)
+        tag = f" in {where}" if where else ""
+        at = "" if member is None else f" (batch member {member})"
+        if self.check_nonfinite:
+            if np.isnan(a).any():
+                return NumericalFault(f"NaN cells{tag}{at}", kind="nan",
+                                      member=member)
+            if np.isinf(a).any():
+                return NumericalFault(f"Inf cells{tag}{at}", kind="inf",
+                                      member=member)
+        if self.max_abs is not None and a.size:
+            m = float(np.max(np.abs(a)))
+            if m > self.max_abs:
+                return NumericalFault(
+                    f"amplitude blowup{tag}{at}: max|x|={m:.3e} > "
+                    f"{self.max_abs:.3e}", kind="blowup", member=member,
+                    max_abs=m)
+        return None
+
+    def check(self, grid, *, where: str = "") -> None:
+        """Raise the grid's :class:`NumericalFault`, if any."""
+        fault = self.fault_of(grid, where=where)
+        if fault is not None:
+            raise fault

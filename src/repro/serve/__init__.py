@@ -21,11 +21,20 @@ class — results are bit-identical to per-request ``plan().run()`` wherever
 the backend's ``run_batch`` is (everywhere but periodic-BC Pallas reshapes,
 which are ulp-close).  Queues are bounded: overload answers
 ``ServiceOverloaded`` with a retry-after hint, never a silent drop.
+
+Failure model (DESIGN.md §2.7): launches retry under a capped-exponential
+budget; a still-failing coalesced launch is bisected so only the poison
+request(s) fail (:class:`LaunchFailed`) while healthy neighbors are served;
+delivered results pass a per-member numerical health check (on by default)
+that quarantines NaN/Inf/blowup members with :class:`NumericalFault`; a
+per-bucket circuit breaker degrades a persistently failing bucket from
+coalesced to per-request launches, then to rejection with retry-after.
 """
 from repro.serve.batcher import BucketState, PendingRequest
 from repro.serve.config import BucketConfig, ServiceConfig
 from repro.serve.metrics import ServiceMetrics, percentile
-from repro.serve.request import (DeadlineExceeded, NoMatchingBucket,
+from repro.serve.request import (DeadlineExceeded, LaunchFailed,
+                                 NoMatchingBucket, NumericalFault,
                                  ServeError, ServeResult, ServiceClosed,
                                  ServiceOverloaded, StencilRequest,
                                  bucket_key)
@@ -33,9 +42,9 @@ from repro.serve.service import (StencilService, coeffs_signature,
                                  from_config, serve)
 
 __all__ = [
-    "BucketConfig", "BucketState", "DeadlineExceeded", "NoMatchingBucket",
-    "PendingRequest", "ServeError", "ServeResult", "ServiceClosed",
-    "ServiceConfig", "ServiceMetrics", "ServiceOverloaded", "StencilRequest",
-    "StencilService", "bucket_key", "coeffs_signature", "from_config",
-    "percentile", "serve",
+    "BucketConfig", "BucketState", "DeadlineExceeded", "LaunchFailed",
+    "NoMatchingBucket", "NumericalFault", "PendingRequest", "ServeError",
+    "ServeResult", "ServiceClosed", "ServiceConfig", "ServiceMetrics",
+    "ServiceOverloaded", "StencilRequest", "StencilService", "bucket_key",
+    "coeffs_signature", "from_config", "percentile", "serve",
 ]

@@ -95,7 +95,7 @@ class BucketState:
                     return True
         return False
 
-    def take_batch(self, now: float
+    def take_batch(self, now: float, limit: Optional[int] = None
                    ) -> Tuple[List[PendingRequest], List[PendingRequest]]:
         """Assemble one launch: ``(batch, expired)``.
 
@@ -103,7 +103,13 @@ class BucketState:
         the head-of-line request plus FIFO requests sharing its coefficient
         signature, capped at ``max_batch`` members and ``max_rounds``
         distinct iteration counts.  Skipped requests keep their order; a
-        non-empty remainder re-arms the window at ``now``."""
+        non-empty remainder re-arms the window at ``now``.
+
+        ``limit`` caps the launch below ``max_batch`` — the circuit
+        breaker's degraded mode passes 1 so a flaky backend sees blast
+        radius 1 per launch instead of a whole coalesced batch."""
+        cap = self.cfg.max_batch if limit is None \
+            else min(limit, self.cfg.max_batch)
         expired = [r for r in self.pending
                    if r.expires_at is not None and r.expires_at <= now]
         if expired:
@@ -116,7 +122,7 @@ class BucketState:
             iters_set = set()
             kept: List[PendingRequest] = []
             for rec in self.pending:
-                if len(batch) >= self.cfg.max_batch:
+                if len(batch) >= cap:
                     kept.append(rec)
                     continue
                 if rec.coeffs_sig != head_sig:

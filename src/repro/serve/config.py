@@ -27,6 +27,7 @@ from typing import Optional, Tuple, Union
 
 from repro.api.config import RunConfig
 from repro.api.problem import StencilProblem
+from repro.resilience import BreakerConfig, HealthPolicy, RetryPolicy
 
 from repro.serve.request import bucket_key
 
@@ -185,13 +186,41 @@ class ServiceConfig:
     thread hop only adds context switches to the critical path.
     ``drain_timeout_s`` bounds graceful shutdown: ``stop()`` flushes every
     admitted request, then gives up after this long.
+
+    Resilience policy (DESIGN.md §2.7; all three accept an instance, a
+    kwargs dict, a bool, or ``None`` for the defaults):
+
+    * ``health`` — per-request numerical health check on delivered results
+      (:class:`~repro.resilience.HealthPolicy`; **on by default** — two
+      host reductions per member is noise next to a launch).  A member that
+      fails is quarantined with :class:`~repro.serve.request.
+      NumericalFault`; healthy co-batched neighbors are delivered
+      unchanged, bit-identical to a fault-free run.
+    * ``retry`` — capped-exponential launch retry budget
+      (:class:`~repro.resilience.RetryPolicy`; ``False`` = no retries).
+      When a multi-member launch spends it, the batch is bisected to
+      isolate the poison member(s); the healthy remainder is retried.
+    * ``breaker`` — per-bucket circuit breaker
+      (:class:`~repro.resilience.BreakerConfig`; ``False`` disables):
+      consecutive launch failures degrade the bucket from coalesced to
+      per-request launches, then to rejecting admissions with retry-after.
+    * ``checkpoint_dir`` — root directory for serving-side checkpointed
+      requests (``StencilRequest.checkpoint_key``); ``None`` (default)
+      rejects such requests at admission.
     """
     buckets: Tuple[Union[BucketConfig, dict], ...] = ()
     max_concurrent_batches: int = 1
     offload_compute: Optional[bool] = None
     drain_timeout_s: float = 30.0
+    health: Union[HealthPolicy, dict, bool, None] = None
+    retry: Union[RetryPolicy, dict, bool, None] = None
+    breaker: Union[BreakerConfig, dict, bool, None] = None
+    checkpoint_dir: Optional[str] = None
 
     def __post_init__(self):
+        object.__setattr__(self, "health", HealthPolicy.make(self.health))
+        object.__setattr__(self, "retry", RetryPolicy.make(self.retry))
+        object.__setattr__(self, "breaker", BreakerConfig.make(self.breaker))
         buckets = tuple(BucketConfig.make(b) for b in self.buckets)
         if not buckets:
             raise ValueError("a service needs at least one bucket")

@@ -27,8 +27,17 @@ def percentile(samples, q: float) -> Optional[float]:
 
 
 #: rejection kinds — every non-served request lands in exactly one counter,
-#: which is what "never silently dropped" means operationally
-REJECT_KINDS = ("overload", "deadline", "no_bucket", "closed")
+#: which is what "never silently dropped" means operationally.  "breaker"
+#: is the circuit breaker shedding load while a bucket's backend is down.
+REJECT_KINDS = ("overload", "deadline", "no_bucket", "closed", "breaker")
+
+#: failure kinds — requests that were *admitted and launched* but could not
+#: be served: the launch kept erroring after its retry budget
+#: ("launch_failed") or the result failed the numerical health check
+#: ("numerical_fault").  Disjoint from both ``completed`` and ``rejected``,
+#: so conservation reads
+#: ``submitted == completed + rejected + failed + in_flight``.
+FAIL_KINDS = ("launch_failed", "numerical_fault")
 
 
 class ServiceMetrics:
@@ -47,6 +56,17 @@ class ServiceMetrics:
         self.submitted = 0
         self.completed = 0
         self.rejected: Dict[str, int] = {k: 0 for k in REJECT_KINDS}
+        self.failed: Dict[str, int] = {k: 0 for k in FAIL_KINDS}
+        #: requests failed by the *per-member* health check while their
+        #: co-batched neighbors were delivered (a subset of
+        #: ``failed["numerical_fault"]`` — solo numerical faults count in
+        #: the kind counter but not here)
+        self.quarantined = 0
+        #: launch retries spent (attempts beyond the first, incl. bisection
+        #: sub-launches after a coalesced launch failed)
+        self.retries = 0
+        #: latest circuit-breaker state per bucket ("closed" when none)
+        self.breaker: Dict[str, str] = {}
         self.batches = 0
         self.rounds = 0
         self.busy_s = 0.0
@@ -68,6 +88,20 @@ class ServiceMetrics:
 
     def note_rejected(self, kind: str) -> None:
         self.rejected[kind] += 1
+
+    def note_failed(self, kind: str, quarantined: bool = False) -> None:
+        """One admitted-and-launched request failed (see ``FAIL_KINDS``);
+        ``quarantined=True`` when its healthy co-batched neighbors were
+        still delivered."""
+        self.failed[kind] += 1
+        if quarantined:
+            self.quarantined += 1
+
+    def note_retry(self, n: int = 1) -> None:
+        self.retries += n
+
+    def note_breaker(self, bucket: str, mode: str) -> None:
+        self.breaker[bucket] = mode
 
     def note_depth(self, bucket: str, depth: int) -> None:
         self.queue_depth[bucket] = depth
@@ -107,8 +141,18 @@ class ServiceMetrics:
             "completed": self.completed,
             "rejected": dict(self.rejected),
             "rejected_total": sum(self.rejected.values()),
+            "failed": dict(self.failed),
+            "failed_total": sum(self.failed.values()),
+            "quarantined": self.quarantined,
+            "retries": self.retries,
+            "breaker": dict(self.breaker),
+            # conservation: submitted == completed + rejected + failed +
+            # in_flight — asserted by the test suite after every drain, so
+            # a request that fell through a crack shows up as a nonzero
+            # in_flight on an idle service
             "in_flight": (self.submitted - self.completed
-                          - sum(self.rejected.values())),
+                          - sum(self.rejected.values())
+                          - sum(self.failed.values())),
             "batches": self.batches,
             "rounds": self.rounds,
             "batch_fill": self.batch_fill,

@@ -14,6 +14,8 @@ from typing import Any, Optional, Union
 
 from repro.api.problem import StencilProblem
 from repro.api.schedule_cache import stencil_fingerprint
+from repro.resilience.health import LaunchFailed as _LaunchFailed
+from repro.resilience.health import NumericalFault as _NumericalFault
 
 
 # --- typed rejections --------------------------------------------------------
@@ -48,6 +50,21 @@ class NoMatchingBucket(ServeError):
 
 class ServiceClosed(ServeError):
     """The service is draining or stopped; no new admissions."""
+
+
+class LaunchFailed(ServeError, _LaunchFailed):
+    """A coalesced launch kept failing after its whole retry budget (and,
+    for multi-member batches, after bisection isolated this request as a
+    culprit).  Subclasses both :class:`ServeError` and the resilience
+    layer's ``LaunchFailed`` so clients can catch either family;
+    ``attempts`` counts tries, ``__cause__`` carries the last error."""
+
+
+class NumericalFault(ServeError, _NumericalFault):
+    """This request's result failed the bucket's numerical health check
+    (NaN/Inf cells or amplitude blowup) — the *request* is quarantined and
+    failed; healthy co-batched neighbors are delivered unchanged.  Carries
+    the resilience fault's ``kind`` / ``member`` / ``max_abs`` fields."""
 
 
 # --- the request/result pair -------------------------------------------------
@@ -92,6 +109,18 @@ class StencilRequest:
         Relative deadline: if the request is still queued this many seconds
         after submission, it fails with :class:`DeadlineExceeded` instead
         of launching.
+    checkpoint_key:
+        Opt into checkpointed execution: the run is chunked and each chunk's
+        state lands atomically under
+        ``<ServiceConfig.checkpoint_dir>/<checkpoint_key>`` — resubmitting
+        the *same key* after a crash (the service's, or an injected one)
+        resumes from the last complete super-step instead of starting over.
+        Keys name the computation, so they must be unique per logical run.
+        A checkpointed request never coalesces with other traffic (its
+        launch is stateful) and requires ``checkpoint_every``.
+    checkpoint_every:
+        Checkpoint cadence in program iterations (rounded up to the plan's
+        super-step length, so chunk seams stay bit-exact).
     """
     problem: Union[StencilProblem, str, Any]
     grid: Any
@@ -99,6 +128,8 @@ class StencilRequest:
     coeffs: Optional[Any] = None
     aux: Optional[Any] = None
     deadline_s: Optional[float] = None
+    checkpoint_key: Optional[str] = None
+    checkpoint_every: Optional[int] = None
 
     def __post_init__(self):
         self.problem = _normalize_problem(self.problem, self.grid)
@@ -125,6 +156,23 @@ class StencilRequest:
         elif self.aux is not None:
             raise ValueError(
                 f"{self.problem.stencil.name} takes no aux grid")
+        if self.checkpoint_key is not None:
+            if not isinstance(self.checkpoint_key, str) \
+                    or not self.checkpoint_key \
+                    or "/" in self.checkpoint_key \
+                    or self.checkpoint_key in (".", ".."):
+                raise ValueError(
+                    f"checkpoint_key must be a non-empty path-component "
+                    f"string, got {self.checkpoint_key!r}")
+            if self.checkpoint_every is None:
+                raise ValueError(
+                    "a checkpointed request needs checkpoint_every")
+            self.checkpoint_every = int(self.checkpoint_every)
+            if self.checkpoint_every < 1:
+                raise ValueError(f"checkpoint_every must be >= 1, "
+                                 f"got {self.checkpoint_every}")
+        elif self.checkpoint_every is not None:
+            raise ValueError("checkpoint_every requires checkpoint_key")
 
     @property
     def bucket_key(self) -> tuple:

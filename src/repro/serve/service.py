@@ -25,6 +25,7 @@ workers — bounded queues make the drain bounded.
 from __future__ import annotations
 
 import asyncio
+import os
 import time
 from typing import Any, Dict, List, Optional, Union
 
@@ -33,12 +34,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import StencilPlan, plan as make_plan
+from repro.resilience.checkpoint_run import run_checkpointed
+from repro.resilience.faults import fault_point, register_point
+from repro.resilience.health import CheckpointMismatch
+from repro.resilience.health import NumericalFault as _ResNumericalFault
+from repro.resilience.retry import CircuitBreaker
 from repro.serve.batcher import BucketState, PendingRequest
 from repro.serve.config import BucketConfig, ServiceConfig
 from repro.serve.metrics import ServiceMetrics
-from repro.serve.request import (DeadlineExceeded, NoMatchingBucket,
+from repro.serve.request import (DeadlineExceeded, LaunchFailed,
+                                 NoMatchingBucket, NumericalFault,
                                  ServeResult, ServiceClosed,
                                  ServiceOverloaded, StencilRequest)
+
+#: fires at the head of every coalesced launch's compute (possibly on a
+#: worker thread) — the serving-path injection seam: a raise here exercises
+#: retry -> bisection -> breaker without touching any backend internals
+FP_LAUNCH = register_point(
+    "serve.launch", "at the head of a coalesced run_batch launch "
+    "(ctx: bucket, batch size, member seqs)")
 
 
 #: signature of a request with no coefficient overrides — computed without
@@ -83,7 +97,7 @@ def _stage(arrays, padded: int, dtype) -> np.ndarray:
 class _Bucket:
     """Runtime state of one configured bucket."""
 
-    def __init__(self, cfg: BucketConfig):
+    def __init__(self, cfg: BucketConfig, breaker: Optional[CircuitBreaker]):
         self.cfg = cfg
         self.state = BucketState(cfg)
         self.plan: Optional[StencilPlan] = None
@@ -91,6 +105,8 @@ class _Bucket:
         self.task: Optional[asyncio.Task] = None
         #: trailing per-launch seconds (retry-after estimation)
         self.last_batch_s: float = 0.0
+        #: per-bucket circuit breaker (None when disabled in ServiceConfig)
+        self.breaker = breaker
 
 
 class StencilService:
@@ -108,7 +124,9 @@ class StencilService:
         self.metrics = ServiceMetrics(clock=clock)
         self._buckets: Dict[tuple, _Bucket] = {}
         for bcfg in self.config.buckets:
-            self._buckets[bcfg.key] = _Bucket(bcfg)
+            breaker = (CircuitBreaker(self.config.breaker)
+                       if self.config.breaker is not None else None)
+            self._buckets[bcfg.key] = _Bucket(bcfg, breaker)
         self._started = False
         self._closing = False
         self._closed = False
@@ -143,6 +161,9 @@ class StencilService:
             b.wake = asyncio.Event()
             b.task = asyncio.create_task(self._worker(b),
                                          name=f"serve-{b.cfg.name}")
+            self.metrics.note_breaker(
+                b.cfg.name, "disabled" if b.breaker is None
+                else b.breaker.mode(self._clock()))
         self._started = True
         self.metrics.note_started()
         return self
@@ -203,14 +224,16 @@ class StencilService:
         load generation), raising admission rejections immediately."""
         if not self._started:
             raise RuntimeError("service not started — await start() first")
+        if not isinstance(request, StencilRequest):
+            # caller bug, checked before the submit counter moves — a
+            # non-request must not show up as forever-in-flight
+            raise TypeError(f"submit takes a StencilRequest, "
+                            f"got {type(request).__name__}")
         now = self._clock()
         self.metrics.note_submitted()
         if self._closing:
             self.metrics.note_rejected("closed")
             raise ServiceClosed("service is draining; resubmit elsewhere")
-        if not isinstance(request, StencilRequest):
-            raise TypeError(f"submit takes a StencilRequest, "
-                            f"got {type(request).__name__}")
         b = self._buckets.get(request.bucket_key)
         if b is None:
             self.metrics.note_rejected("no_bucket")
@@ -220,8 +243,26 @@ class StencilService:
                 f"bc={request.problem.bc.token()} "
                 f"dtype={request.problem.dtype}; declared: "
                 f"{[bk.cfg.name for bk in self._buckets.values()]}")
+        if b.breaker is not None and not b.breaker.admits(now):
+            self.metrics.note_rejected("breaker")
+            self.metrics.note_breaker(b.cfg.name, b.breaker.mode(now))
+            raise ServiceOverloaded(
+                f"bucket {b.cfg.name!r} circuit breaker is open (backend "
+                f"kept failing); retry after the cooldown",
+                retry_after_s=b.breaker.retry_after_s(now))
+        if request.checkpoint_key is not None \
+                and self.config.checkpoint_dir is None:
+            self.metrics.note_rejected("no_bucket")
+            raise NoMatchingBucket(
+                "request has checkpoint_key but the service has no "
+                "checkpoint_dir configured (ServiceConfig.checkpoint_dir)")
         sig = coeffs_signature(request.problem, request.coeffs)
         self._seq += 1
+        if request.checkpoint_key is not None:
+            # a checkpointed launch is stateful (it writes its own resume
+            # directory), so it must never coalesce with other traffic —
+            # a per-admission unique signature makes it a batch of one
+            sig = (sig, ("@ckpt", request.checkpoint_key, self._seq))
         rec = PendingRequest(
             seq=self._seq, request=request, submitted_at=now,
             expires_at=(now + request.deadline_s
@@ -274,7 +315,11 @@ class StencilService:
                 except asyncio.TimeoutError:
                     pass
                 continue
-            batch, expired = state.take_batch(now)
+            # degraded/probing breaker: launch one request at a time so a
+            # flaky backend gets blast radius 1 (open rejects at admission)
+            limit = (1 if b.breaker is not None
+                     and b.breaker.mode(now) != "closed" else None)
+            batch, expired = state.take_batch(now, limit=limit)
             for rec in expired:
                 self._fail(rec, DeadlineExceeded(
                     f"deadline expired after "
@@ -295,53 +340,149 @@ class StencilService:
 
     async def _launch(self, b: _Bucket,
                       batch: List[PendingRequest]) -> None:
-        """One coalesced launch: compute (inline, or in a worker thread
-        when offloading — see ``ServiceConfig.offload_compute``), then
-        resolve every member future on the loop thread.  Holds one
+        """One coalesced launch through the resilience pipeline (retry ->
+        bisect -> quarantine; see :meth:`_resilient_batch`).  Holds one
         ``max_concurrent_batches`` slot (acquired by the caller)."""
         try:
-            t0 = self._clock()
-            try:
-                if self._offload:
-                    outs, padded, rounds = await asyncio.to_thread(
-                        self._run_batch, b, batch)
-                else:
-                    outs, padded, rounds = self._run_batch(b, batch)
-            except Exception as e:          # noqa: BLE001 — fail, don't drop
-                for rec in batch:
-                    self._fail_exec(rec, e)
-                return
-            exec_s = self._clock() - t0
-            b.last_batch_s = exec_s
-            self.metrics.note_batch(len(batch), padded, rounds, exec_s)
-            now = self._clock()
-            fill = len(batch) / padded
-            for rec, out in zip(batch, outs):
-                if rec.future.cancelled():
-                    continue
-                latency = now - rec.submitted_at
-                shape = rec.request.problem.shape
-                cells = rec.iters
-                for d in shape:
-                    cells *= d
-                self.metrics.note_completed(latency, cells)
-                rec.future.set_result(ServeResult(
-                    grid=out, iters=rec.iters, latency_s=latency,
-                    bucket=b.cfg.name, batch_size=len(batch),
-                    batch_fill=fill, rounds=rounds))
+            await self._resilient_batch(b, batch)
         finally:
             self._sem.release()
+
+    async def _resilient_batch(self, b: _Bucket,
+                               batch: List[PendingRequest]) -> None:
+        """Launch ``batch``; every member ends resolved or failed — never
+        dropped.  The resilience ladder (DESIGN.md §2.7):
+
+        1. the launch is attempted under the service retry budget
+           (capped exponential backoff, ``ServiceConfig.retry``);
+        2. a launch that spends the budget is **bisected**: each half is
+           relaunched independently (recursively), so the poison member(s)
+           fail alone with :class:`LaunchFailed` and the healthy remainder
+           — retried as smaller launches — is still served, bit-identical
+           (sub-batch launches are bit-exact, see ``_run_batch``);
+        3. delivered members pass the per-member health check
+           (``ServiceConfig.health``); an unhealthy one is quarantined with
+           :class:`NumericalFault` while its neighbors deliver normally
+           (members are independent, so one member's NaN is its own);
+        4. the bucket's circuit breaker sees infrastructure outcomes only
+           (launch success/failure after retries — never numerical faults,
+           which are the request's fault, not the backend's).
+        """
+        t0 = self._clock()
+        try:
+            outs, padded, rounds = await self._attempt_with_retry(b, batch)
+        except Exception as e:              # noqa: BLE001 — fail, don't drop
+            infra = not isinstance(e, (_ResNumericalFault,
+                                       CheckpointMismatch))
+            if infra:
+                self._note_breaker(b, failed=True)
+            if len(batch) > 1 and infra:
+                mid = len(batch) // 2
+                await self._resilient_batch(b, batch[:mid])
+                await self._resilient_batch(b, batch[mid:])
+                return
+            for rec in batch:
+                self._fail_exec(rec, *self._classify(e))
+            return
+        self._note_breaker(b, failed=False)
+        exec_s = self._clock() - t0
+        b.last_batch_s = exec_s
+        self.metrics.note_batch(len(batch), padded, rounds, exec_s)
+        now = self._clock()
+        fill = len(batch) / padded
+        health = self.config.health
+        for i, (rec, out) in enumerate(zip(batch, outs)):
+            fault = health.fault_of(out, member=i,
+                                    where=f"bucket {b.cfg.name!r}")
+            if fault is not None:
+                self._fail_exec(
+                    rec, NumericalFault(str(fault), kind=fault.kind,
+                                        member=i, max_abs=fault.max_abs),
+                    "numerical_fault", quarantined=len(batch) > 1)
+                continue
+            if rec.future.cancelled():
+                continue
+            latency = now - rec.submitted_at
+            shape = rec.request.problem.shape
+            cells = rec.iters
+            for d in shape:
+                cells *= d
+            self.metrics.note_completed(latency, cells)
+            rec.future.set_result(ServeResult(
+                grid=out, iters=rec.iters, latency_s=latency,
+                bucket=b.cfg.name, batch_size=len(batch),
+                batch_fill=fill, rounds=rounds))
+
+    async def _attempt_with_retry(self, b: _Bucket,
+                                  batch: List[PendingRequest]):
+        """Run :meth:`_run_batch` under the retry budget.  Deterministic
+        request-side failures (a health fault inside a checkpointed run, a
+        checkpoint identity mismatch) are not retried — the same inputs
+        would fail the same way; everything else backs off exponentially
+        and, when the budget is spent, raises with the last error as
+        ``__cause__`` (the caller bisects or fails the members)."""
+        policy = self.config.retry
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                if self._offload:
+                    return await asyncio.to_thread(self._run_batch, b, batch)
+                return self._run_batch(b, batch)
+            except (_ResNumericalFault, CheckpointMismatch):
+                raise
+            except Exception as e:          # noqa: BLE001 — judged below
+                if attempt >= policy.max_attempts:
+                    raise LaunchFailed(
+                        f"bucket {b.cfg.name!r} launch of {len(batch)} "
+                        f"request(s) failed {attempt}x "
+                        f"({type(e).__name__}: {e})",
+                        attempts=attempt) from e
+                self.metrics.note_retry()
+                await asyncio.sleep(policy.backoff_s(attempt))
+
+    def _note_breaker(self, b: _Bucket, failed: bool) -> None:
+        if b.breaker is None:
+            return
+        now = self._clock()
+        if failed:
+            b.breaker.on_failure(now)
+        else:
+            b.breaker.on_success(now)
+        mode = b.breaker.mode(now)
+        self.metrics.note_breaker(b.cfg.name, mode)
+        if mode != "closed":
+            # degraded/open decisions are made at take_batch/admission
+            # time; wake the worker so an already-armed window re-evaluates
+            b.wake.set()
 
     def _fail(self, rec: PendingRequest, exc: Exception, kind: str) -> None:
         self.metrics.note_rejected(kind)
         if rec.future is not None and not rec.future.cancelled():
             rec.future.set_exception(exc)
 
-    def _fail_exec(self, rec: PendingRequest, exc: Exception) -> None:
-        """A launch failure is not a rejection — surface the original error
-        on every member's future."""
+    def _fail_exec(self, rec: PendingRequest, exc: Exception, kind: str,
+                   quarantined: bool = False) -> None:
+        """A launch failure is not a rejection — it lands in the ``failed``
+        counters (``kind`` in ``metrics.FAIL_KINDS``) and surfaces the
+        typed error on the member's future."""
+        self.metrics.note_failed(kind, quarantined=quarantined)
         if rec.future is not None and not rec.future.cancelled():
             rec.future.set_exception(exc)
+
+    @staticmethod
+    def _classify(e: Exception):
+        """(exception-to-surface, FAIL_KINDS counter) for a terminal launch
+        error on a single request."""
+        if isinstance(e, _ResNumericalFault):
+            return (NumericalFault(str(e), kind=e.kind, member=e.member,
+                                   max_abs=e.max_abs), "numerical_fault")
+        if isinstance(e, CheckpointMismatch):
+            return e, "launch_failed"
+        if isinstance(e, LaunchFailed):
+            return e, "launch_failed"
+        return (LaunchFailed(f"launch failed: {type(e).__name__}: {e}"),
+                "launch_failed")
 
     # --- compute (worker thread) --------------------------------------------
     def _prewarm_bucket(self, b: _Bucket) -> None:
@@ -371,6 +512,10 @@ class StencilService:
         the ``(B, *state)`` tensor — changes no real member's result, and
         staged advance (``run k1 then k2-k1``) applies the identical
         per-iteration arithmetic as one ``run k2`` call."""
+        fault_point(FP_LAUNCH, {"bucket": b.cfg.name, "batch": len(batch),
+                                "seqs": tuple(r.seq for r in batch)})
+        if batch[0].request.checkpoint_key is not None:
+            return self._run_checkpointed(b, batch[0])
         p = b.plan
         prob = p.problem
         dtype = prob.jnp_dtype
@@ -403,6 +548,23 @@ class StencilService:
                     outs[i] = host[i]
         return [outs[i] for i in range(len(batch))], padded, len(stops)
 
+    def _run_checkpointed(self, b: _Bucket, rec: PendingRequest):
+        """Serving-side checkpointed execution: one stateful request,
+        chunked through :func:`repro.resilience.run_checkpointed` under
+        ``<checkpoint_dir>/<checkpoint_key>``.  A crashed service (or an
+        injected SIGKILL) resumes the same key from the last complete
+        super-step on resubmission — bit-identically, because chunk seams
+        are aligned to super-step seams.  Same ``(outs, padded, rounds)``
+        shape as a coalesced launch; ``rounds`` reports the chunks run."""
+        req = rec.request
+        res = run_checkpointed(
+            b.plan, req.grid, rec.iters, req.coeffs, aux=req.aux,
+            checkpoint_every=req.checkpoint_every,
+            checkpoint_dir=os.path.join(self.config.checkpoint_dir,
+                                        req.checkpoint_key),
+            health=self.config.health)
+        return [np.asarray(res.grid)], 1, max(1, res.chunks_run)
+
     # --- observability ------------------------------------------------------
     def snapshot(self) -> dict:
         """Metrics snapshot, extended with per-bucket configuration and
@@ -420,6 +582,8 @@ class StencilService:
                 "batch_classes": list(b.cfg.batch_classes),
                 "depth": b.state.depth(),
                 "last_batch_s": b.last_batch_s,
+                "breaker": ("disabled" if b.breaker is None
+                            else b.breaker.mode(self._clock())),
             } for b in self._buckets.values()
         }
         return snap

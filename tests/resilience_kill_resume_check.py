@@ -1,0 +1,67 @@
+"""Crash-resume check for checkpointed runs (run in a subprocess).
+
+``crash`` mode installs a ``kill`` fault at the ``checkpoint.save`` seam —
+the process SIGKILLs itself mid-save (after the shards land in
+``step_N.tmp``, before the atomic publish), exactly a crashed host.
+``resume`` mode reruns the same call against the same directory: it must
+restore the last *complete* step and print the final grid's sha256, which
+the parent compares against an uninterrupted run.
+
+Usage: resilience_kill_resume_check.py {crash|resume|fresh} <checkpoint_dir>
+"""
+import hashlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.checkpoint  # noqa: F401 — registers the checkpoint.* points
+from repro.api import RunConfig, StencilProblem, plan
+from repro.resilience import FaultPlan, FaultSpec, run_checkpointed
+
+SHAPE = (16, 24)
+ITERS = 8
+EVERY = 2          # engine par_time=2 below -> chunk seams at 2, 4, 6, 8
+RUN = RunConfig(backend="engine", par_time=2, bsize=16, cache=False)
+
+
+def make_plan():
+    return plan(StencilProblem("diffusion2d", SHAPE), RUN)
+
+
+def grid():
+    return jax.random.uniform(jax.random.PRNGKey(7), SHAPE,
+                              jnp.float32, 0.5, 2.0)
+
+
+def main():
+    mode, ckdir = sys.argv[1], sys.argv[2]
+    p = make_plan()
+    g = grid()
+    if mode == "fresh":
+        out = p.run(g, ITERS)
+        print("sha256:" + hashlib.sha256(
+            np.ascontiguousarray(np.asarray(out)).tobytes()).hexdigest())
+        return
+    if mode == "crash":
+        # die inside the SECOND save (step 4): step 2 is already published,
+        # step 4 is left as an unpublished .tmp
+        FaultPlan([FaultSpec("checkpoint.save", action="kill",
+                             nth=2)]).install()
+        run_checkpointed(p, g, ITERS, checkpoint_every=EVERY,
+                         checkpoint_dir=ckdir)
+        raise SystemExit("kill fault did not fire")      # pragma: no cover
+    if mode == "resume":
+        res = run_checkpointed(p, g, ITERS, checkpoint_every=EVERY,
+                               checkpoint_dir=ckdir)
+        print(f"resumed_from:{res.resumed_from}")
+        print("sha256:" + hashlib.sha256(
+            np.ascontiguousarray(
+                np.asarray(res.grid)).tobytes()).hexdigest())
+        return
+    raise SystemExit(f"unknown mode {mode!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Concurrent-writer loop for the schedule-cache race regression test.
+
+Each invocation puts ``count`` distinct entries (``<prefix>-<i>``) into the
+shared cache file as fast as it can.  The parent test runs two of these
+concurrently and asserts no entry was lost — the read-modify-write in
+``ScheduleCache.put`` merges with the on-disk state under an exclusive
+lock immediately before its atomic replace, so concurrent writers must
+never clobber each other's entries.
+
+Usage: schedule_cache_race_check.py <cache_path> <prefix> <count>
+"""
+import sys
+
+from repro.api.schedule_cache import ScheduleCache
+
+
+def main():
+    path, prefix, count = sys.argv[1], sys.argv[2], int(sys.argv[3])
+    cache = ScheduleCache(path)
+    for i in range(count):
+        cache.put(f"{prefix}-{i}", {"par_time": i, "writer": prefix})
+    print("DONE", prefix)
+
+
+if __name__ == "__main__":
+    main()

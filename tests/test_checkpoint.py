@@ -1,0 +1,111 @@
+"""Checkpoint-substrate robustness: broken-step fallback and elastic
+(different-mesh) restore.
+
+``restore_latest_valid`` is the resume path's entry point; these tests
+damage the newest step every way a real filesystem does — corrupt
+manifest, truncated shard, flipped bytes, missing leaf — and assert the
+restore falls back to the previous *complete* step instead of crashing the
+restart.  The mesh test saves from a single-device world and restores onto
+a 2-device mesh in a subprocess (bit-identically) — the elastic-restart
+contract.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (complete_steps, restore_latest_valid,
+                              save_pytree)
+
+
+def tree_for(step: int) -> dict:
+    rng = np.random.default_rng(step)
+    return {"grid": rng.normal(size=(8, 6)).astype(np.float32),
+            "t": np.asarray(step, np.int32)}
+
+
+def step_dir(d, step: int) -> str:
+    return os.path.join(d, f"step_{step:08d}")
+
+
+def save_two(d) -> None:
+    save_pytree(tree_for(4), d, 4)
+    save_pytree(tree_for(8), d, 8)
+
+
+def assert_restores(d, want_step: int) -> None:
+    with pytest.warns(RuntimeWarning, match="unusable"):
+        tree, step = restore_latest_valid(tree_for(0), d)
+    assert step == want_step
+    want = tree_for(want_step)
+    assert (tree["grid"] == want["grid"]).all()
+    assert tree["t"] == want["t"]
+
+
+class TestBrokenStepFallback:
+    def test_corrupt_manifest_falls_back(self, tmp_path):
+        d = str(tmp_path)
+        save_two(d)
+        with open(os.path.join(step_dir(d, 8), "MANIFEST.json"), "w") as f:
+            f.write("{not json")
+        assert_restores(d, 4)
+
+    def test_truncated_shard_falls_back(self, tmp_path):
+        d = str(tmp_path)
+        save_two(d)
+        shard = os.path.join(step_dir(d, 8), "shard_00000.npz")
+        with open(shard, "r+b") as f:
+            f.truncate(os.path.getsize(shard) // 2)
+        assert_restores(d, 4)
+
+    def test_flipped_payload_bytes_fail_checksum(self, tmp_path):
+        d = str(tmp_path)
+        save_two(d)
+        shard = os.path.join(step_dir(d, 8), "shard_00000.npz")
+        data = bytearray(open(shard, "rb").read())
+        data[-20] ^= 0xFF        # flip a payload byte, keep the zip valid
+        open(shard, "wb").write(bytes(data))
+        assert_restores(d, 4)
+
+    def test_missing_shard_falls_back(self, tmp_path):
+        d = str(tmp_path)
+        save_two(d)
+        os.unlink(os.path.join(step_dir(d, 8), "shard_00000.npz"))
+        assert_restores(d, 4)
+
+    def test_every_step_broken_returns_none(self, tmp_path):
+        d = str(tmp_path)
+        save_pytree(tree_for(4), d, 4)
+        with open(os.path.join(step_dir(d, 4), "MANIFEST.json"), "w") as f:
+            f.write("garbage")
+        with pytest.warns(RuntimeWarning, match="unusable"):
+            tree, step = restore_latest_valid(tree_for(0), d)
+        assert tree is None and step is None
+        assert restore_latest_valid(tree_for(0), str(tmp_path / "nope")) \
+            == (None, None)
+
+    def test_complete_steps_skips_tmp(self, tmp_path):
+        d = str(tmp_path)
+        save_two(d)
+        os.makedirs(os.path.join(d, "step_00000012.tmp"))
+        assert complete_steps(d) == [4, 8]
+
+
+def test_restore_onto_two_device_mesh_is_bit_identical(tmp_path):
+    """Save single-device, restore sharded over a 2-fake-device mesh in a
+    subprocess (the main process must keep its single-device view)."""
+    d = str(tmp_path)
+    grid = np.random.default_rng(0).normal(size=(8, 6)).astype(np.float32)
+    save_pytree({"grid": grid}, d, 6)
+    np.save(os.path.join(d, "expected.npy"), grid)
+    script = os.path.join(os.path.dirname(__file__),
+                          "checkpoint_mesh_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, script, d, "6"], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL OK" in out.stdout

@@ -1,0 +1,575 @@
+"""Resilience-layer tests: deterministic fault injection, health guards,
+retry/breaker policy, serving chaos matrix, checkpointed-run resume.
+
+The chaos matrix drives the *whole serving stack* once per registered
+injection point with a transient fault installed, and asserts the two
+operational invariants the layer exists for: the service never hangs
+(every workload runs under an asyncio timeout) and never silently drops a
+request (metrics conservation after drain:
+``submitted == completed + rejected + failed`` and ``in_flight == 0``).
+The SIGKILL test crashes a real subprocess mid-checkpoint-save and asserts
+the resumed run's final grid is bit-identical to an uninterrupted one.
+"""
+import asyncio
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint  # noqa: F401 — registers the checkpoint.* points
+import repro.core.distributed  # noqa: F401 — registers its injection point
+from repro.api import RunConfig, StencilProblem, plan
+from repro.api.schedule_cache import ScheduleCache
+from repro.resilience import (BreakerConfig, CircuitBreaker, FaultPlan,
+                              FaultSpec, HealthPolicy, InjectedFault,
+                              NumericalFault, RetryPolicy, active_plan,
+                              corrupt_point, fault_point, registered_points,
+                              run_checkpointed)
+from repro.resilience.health import CheckpointMismatch
+from repro.serve import (LaunchFailed as ServeLaunchFailed,
+                         NumericalFault as ServeNumericalFault,
+                         ServiceConfig, ServiceOverloaded, StencilRequest,
+                         StencilService)
+
+SHAPE = (12, 32)
+RUN = {"backend": "engine", "par_time": 2, "bsize": 16, "cache": False}
+BUCKET = {"problem": {"stencil": "diffusion2d", "shape": list(SHAPE)},
+          "run": dict(RUN), "max_batch": 4, "max_wait_ms": 1.0,
+          "queue_cap": 16}
+FAST_RETRY = {"max_attempts": 2, "base_backoff_s": 0.001}
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+@pytest.fixture(autouse=True)
+def no_leaked_plan():
+    """A test that forgets to uninstall its plan must not poison the rest
+    of the suite."""
+    yield
+    p = active_plan()
+    if p is not None:
+        p.uninstall()
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return env
+
+
+def run_async(coro, timeout=120.0):
+    """Every serving workload runs under a hard timeout: 'the service never
+    hangs' is an assertion here, not a hope."""
+    async def guarded():
+        return await asyncio.wait_for(coro, timeout)
+    return asyncio.run(guarded())
+
+
+def assert_conserved(snap):
+    assert snap["in_flight"] == 0, snap
+    assert snap["submitted"] == (snap["completed"] + snap["rejected_total"]
+                                 + snap["failed_total"]), snap
+
+
+def grid_for(seed=0, shape=SHAPE):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                              jnp.float32, 0.5, 2.0)
+
+
+# --- fault plans: determinism ------------------------------------------------
+
+class TestFaultPlan:
+    def test_unknown_point_rejected_strict(self):
+        with pytest.raises(ValueError, match="unknown injection point"):
+            FaultPlan([FaultSpec("no.such.seam")]).install()
+        FaultPlan([FaultSpec("no.such.seam")], strict=False).install() \
+            .uninstall()
+
+    def test_nth_fires_exactly_once_and_replays(self):
+        spec = FaultSpec("serve.launch", nth=3)
+        plan_ = FaultPlan([spec])
+        for _ in range(2):                      # reinstall replays identically
+            with plan_.active():
+                fired_at = []
+                for i in range(1, 6):
+                    try:
+                        fault_point("serve.launch")
+                    except InjectedFault:
+                        fired_at.append(i)
+                assert fired_at == [3]
+                assert plan_.calls("serve.launch") == 5
+
+    def test_probability_stream_is_deterministic(self):
+        def fires(seed):
+            out = []
+            with FaultPlan([FaultSpec("serve.launch", p=0.3,
+                                      max_fires=None)],
+                           seed=seed).active():
+                for i in range(50):
+                    try:
+                        fault_point("serve.launch")
+                    except InjectedFault:
+                        out.append(i)
+            return out
+        a, b, c = fires(7), fires(7), fires(8)
+        assert a == b                       # same seed: identical firings
+        assert a != c                       # different seed: different stream
+        assert 0 < len(a) < 50              # actually probabilistic
+
+    def test_match_predicate_pins_the_target(self):
+        with FaultPlan([FaultSpec("serve.launch", max_fires=None,
+                                  match=lambda ctx: 3 in ctx.get("seqs", ())),
+                        ]).active() as p:
+            fault_point("serve.launch", {"seqs": (1, 2)})      # no fire
+            with pytest.raises(InjectedFault):
+                fault_point("serve.launch", {"seqs": (3, 4)})
+            assert [f[2] for f in p.fired] == [2]
+
+    def test_corrupt_point_poisons_requested_member(self):
+        v = jnp.ones((3, 4, 5))
+        with FaultPlan([FaultSpec("backend.execute_batch.result",
+                                  action="nan", member=1)]).active():
+            out = corrupt_point("backend.execute_batch.result", v)
+        out = np.asarray(out)
+        assert np.isnan(out[1]).sum() == 1
+        assert not np.isnan(out[0]).any() and not np.isnan(out[2]).any()
+        # member rows other than the poisoned cell are bit-intact
+        assert (out[1].ravel()[1:] == 1.0).all()
+
+    def test_registry_covers_the_hot_seams(self):
+        pts = registered_points()
+        for want in ("backend.execute", "backend.execute_batch",
+                     "backend.execute_batch.result", "exec_cache.get",
+                     "schedule_cache.get", "schedule_cache.put",
+                     "serve.launch", "checkpoint.save", "checkpoint.restore",
+                     "distributed.exchange"):
+            assert want in pts, f"{want} missing from {sorted(pts)}"
+
+
+# --- health / retry / breaker policy -----------------------------------------
+
+class TestHealthPolicy:
+    def test_detects_nan_inf_blowup(self):
+        g = np.ones((4, 4), np.float32)
+        pol = HealthPolicy(max_abs=10.0)
+        assert pol.fault_of(g) is None
+        assert pol.fault_of(np.where(np.eye(4) > 0, np.nan, g)).kind == "nan"
+        assert pol.fault_of(np.where(np.eye(4) > 0, np.inf, g)).kind == "inf"
+        f = pol.fault_of(g * 100.0)
+        assert f.kind == "blowup" and f.max_abs == pytest.approx(100.0)
+
+    def test_bf16_and_member_tagging(self):
+        import ml_dtypes
+        g = np.ones((4,), ml_dtypes.bfloat16)
+        assert HealthPolicy().fault_of(g) is None
+        g[2] = np.nan
+        f = HealthPolicy().fault_of(g, member=5)
+        assert f is not None and f.member == 5 and "member 5" in str(f)
+
+    def test_disabled_is_a_noop(self):
+        g = np.full((2, 2), np.nan, np.float32)
+        assert HealthPolicy.make(False).fault_of(g) is None
+        HealthPolicy.make(False).check(g)           # no raise
+
+    def test_check_raises(self):
+        with pytest.raises(NumericalFault):
+            HealthPolicy().check(np.array([np.inf], np.float32))
+
+
+class TestRetryAndBreaker:
+    def test_backoff_caps(self):
+        pol = RetryPolicy(max_attempts=5, base_backoff_s=0.1,
+                          max_backoff_s=0.35)
+        assert [pol.backoff_s(k) for k in (1, 2, 3, 4)] == \
+            pytest.approx([0.1, 0.2, 0.35, 0.35])
+        assert RetryPolicy.make(False).max_attempts == 1
+
+    def test_breaker_state_machine(self):
+        cb = CircuitBreaker(BreakerConfig(fail_threshold=2, open_threshold=2,
+                                          recovery_successes=2,
+                                          open_cooldown_s=5.0))
+        t = 0.0
+        assert cb.mode(t) == "closed"
+        cb.on_failure(t); cb.on_failure(t)
+        assert cb.mode(t) == "degraded"
+        cb.on_failure(t)
+        assert cb.mode(t) == "degraded"             # threshold not reached
+        cb.on_failure(t)
+        assert cb.mode(t) == "open" and not cb.admits(t)
+        assert cb.retry_after_s(t) == pytest.approx(5.0)
+        # cooldown elapses: probe traffic again (degraded)
+        assert cb.mode(6.0) == "degraded" and cb.admits(6.0)
+        cb.on_success(6.0)
+        assert cb.mode(6.0) == "degraded"
+        cb.on_success(6.1)
+        assert cb.mode(6.1) == "closed"
+        # a success resets the failure streak
+        cb.on_failure(7.0); cb.on_success(7.1); cb.on_failure(7.2)
+        assert cb.mode(7.2) == "closed"
+        assert [s for s, _ in cb.transitions] == \
+            ["degraded", "open", "degraded", "closed"]
+
+
+# --- serving: quarantine, bisection, breaker, chaos matrix -------------------
+
+def service_config(**kw):
+    spec = dict(buckets=[dict(BUCKET)], retry=dict(FAST_RETRY))
+    spec.update(kw)
+    return ServiceConfig.make(spec)
+
+
+async def run_workload(svc, n=6, iters=(2, 4), seed0=0):
+    reqs = [StencilRequest("diffusion2d", grid_for(seed0 + i),
+                           iters[i % len(iters)]) for i in range(n)]
+    futs = [svc.submit_nowait(r) for r in reqs]
+    return await asyncio.gather(*futs, return_exceptions=True)
+
+
+class TestServingResilience:
+    def test_nan_member_is_quarantined_neighbors_bit_identical(self):
+        async def main():
+            svc = await StencilService(service_config()).start(prewarm=False)
+            # fault-free reference results, one per seed
+            clean = await run_workload(svc, n=3, iters=(4,))
+            fplan = FaultPlan([FaultSpec("backend.execute_batch.result",
+                                         action="nan", nth=1, member=1)])
+            with fplan.active():
+                res = await run_workload(svc, n=3, iters=(4,))
+            snap = svc.snapshot()
+            await svc.stop()
+            return clean, res, snap, svc.snapshot()
+        clean, res, snap, final = run_async(main())
+        assert all(isinstance(r, type(clean[0])) for r in clean)
+        assert isinstance(res[1], ServeNumericalFault)
+        assert isinstance(res[1], NumericalFault)       # resilience family
+        assert res[1].kind == "nan" and res[1].member == 1
+        # the two healthy members rode the SAME poisoned launch and are
+        # bit-identical to the fault-free run
+        assert res[0].batch_size == 3
+        for i in (0, 2):
+            assert (np.asarray(res[i].grid)
+                    == np.asarray(clean[i].grid)).all()
+        assert snap["failed"]["numerical_fault"] == 1
+        assert snap["quarantined"] == 1
+        assert_conserved(final)
+
+    def test_bisection_isolates_the_poison_request(self):
+        async def main():
+            svc = await StencilService(service_config()).start(prewarm=False)
+            # every launch whose member set contains seq 3 fails forever:
+            # bisection must corner seq 3 alone and serve the rest
+            fplan = FaultPlan([FaultSpec(
+                "serve.launch", max_fires=None,
+                match=lambda ctx: 3 in ctx.get("seqs", ()))])
+            with fplan.active():
+                res = await run_workload(svc, n=4, iters=(4,))
+            snap = svc.snapshot()
+            await svc.stop()
+            return res, snap, svc.snapshot()
+        res, snap, final = run_async(main())
+        kinds = [type(r).__name__ for r in res]
+        assert kinds[2] == "LaunchFailed", kinds        # seq 3 = 3rd request
+        assert isinstance(res[2], ServeLaunchFailed)
+        assert res[2].attempts >= 2                     # retry budget spent
+        ok = [r for i, r in enumerate(res) if i != 2]
+        assert all(not isinstance(r, Exception) for r in ok)
+        assert snap["failed"]["launch_failed"] == 1
+        assert snap["retries"] >= 1
+        assert_conserved(final)
+
+    def test_transient_fault_is_retried_away(self):
+        async def main():
+            svc = await StencilService(service_config()).start(prewarm=False)
+            with FaultPlan([FaultSpec("exec_cache.get", nth=1)]).active():
+                res = await run_workload(svc, n=3, iters=(4,))
+            await svc.stop()
+            return res, svc.snapshot()
+        res, snap = run_async(main())
+        assert all(not isinstance(r, Exception) for r in res)
+        assert snap["retries"] >= 1 and snap["failed_total"] == 0
+        assert_conserved(snap)
+
+    def test_breaker_degrades_opens_and_recovers(self):
+        offset = [0.0]
+
+        def clock():
+            return time.monotonic() + offset[0]
+
+        async def main():
+            cfg = service_config(
+                retry={"max_attempts": 1},
+                breaker={"fail_threshold": 1, "open_threshold": 1,
+                         "recovery_successes": 1, "open_cooldown_s": 30.0})
+            svc = await StencilService(cfg, clock=clock).start(prewarm=False)
+            name = svc.config.buckets[0].name
+            always = FaultPlan([FaultSpec("serve.launch", p=1.0,
+                                          max_fires=None)])
+            with always.active():
+                r1 = await asyncio.gather(
+                    svc.submit_nowait(
+                        StencilRequest("diffusion2d", grid_for(0), 2)),
+                    return_exceptions=True)
+                assert svc.snapshot()["breaker"][name] == "degraded"
+                r2 = await asyncio.gather(
+                    svc.submit_nowait(
+                        StencilRequest("diffusion2d", grid_for(1), 2)),
+                    return_exceptions=True)
+                assert svc.snapshot()["breaker"][name] == "open"
+                # open: admission rejects with retry-after
+                with pytest.raises(ServiceOverloaded) as ei:
+                    svc.submit_nowait(
+                        StencilRequest("diffusion2d", grid_for(2), 2))
+                assert ei.value.retry_after_s > 0
+            # cooldown elapses (fault gone): probe succeeds, breaker closes
+            offset[0] += 31.0
+            ok = await svc.submit(
+                StencilRequest("diffusion2d", grid_for(3), 2))
+            snap = svc.snapshot()
+            await svc.stop()
+            return r1, r2, ok, snap, name, svc.snapshot()
+        r1, r2, ok, snap, name, final = run_async(main())
+        assert isinstance(r1[0], ServeLaunchFailed)
+        assert isinstance(r2[0], ServeLaunchFailed)
+        assert ok.iters == 2
+        assert snap["breaker"][name] == "closed"
+        assert snap["rejected"]["breaker"] == 1
+        assert_conserved(final)
+
+    def test_checkpointed_request_survives_service_kill_cycle(self, tmp_path):
+        """Serving-side checkpointing: a request whose service 'dies'
+        mid-run (simulated by a transient launch abort) is resubmitted with
+        the same key and resumes instead of recomputing — and the final
+        grid is bit-identical to an uncheckpointed run."""
+        ckroot = str(tmp_path / "serve-ck")
+
+        async def main():
+            cfg = service_config(checkpoint_dir=ckroot)
+            svc = await StencilService(cfg).start(prewarm=False)
+            g = grid_for(0)
+            want = await svc.submit(StencilRequest("diffusion2d", g, 8))
+            req = dict(problem="diffusion2d", grid=g, iters=8,
+                       checkpoint_key="job-1", checkpoint_every=2)
+            # first attempt dies after two chunks (raise at the 3rd save;
+            # no retry budget -> surfaces as LaunchFailed)
+            fplan = FaultPlan([FaultSpec("checkpoint.save", nth=3,
+                                         max_fires=None)])
+            svc2 = await StencilService(service_config(
+                checkpoint_dir=ckroot,
+                retry={"max_attempts": 1})).start(prewarm=False)
+            with fplan.active():
+                res1 = await asyncio.gather(
+                    svc2.submit_nowait(StencilRequest(**req)),
+                    return_exceptions=True)
+            # resubmission with the same key resumes from step 4
+            res2 = await svc2.submit(StencilRequest(**req))
+            snap2 = svc2.snapshot()
+            await svc.stop()
+            await svc2.stop()
+            return want, res1, res2, snap2, svc2.snapshot()
+        want, res1, res2, snap2, final = run_async(main())
+        assert isinstance(res1[0], ServeLaunchFailed)
+        assert (np.asarray(res2.grid) == np.asarray(want.grid)).all()
+        assert res2.rounds <= 2        # resumed: at most 2 chunks recomputed
+        assert_conserved(final)
+
+    def test_checkpointed_request_requires_configured_dir(self):
+        async def main():
+            svc = await StencilService(service_config()).start(prewarm=False)
+            from repro.serve import NoMatchingBucket
+            with pytest.raises(NoMatchingBucket, match="checkpoint_dir"):
+                svc.submit_nowait(StencilRequest(
+                    "diffusion2d", grid_for(0), 4,
+                    checkpoint_key="k", checkpoint_every=2))
+            await svc.stop()
+            return svc.snapshot()
+        assert_conserved(run_async(main()))
+
+
+# --- the chaos matrix --------------------------------------------------------
+
+CHAOS_POINTS = sorted(registered_points())
+
+
+@pytest.mark.parametrize("point", CHAOS_POINTS)
+def test_chaos_matrix_never_hangs_never_drops(point, tmp_path):
+    """One transient raise at every registered seam, under a live serving
+    workload (including a checkpointed request so the checkpoint seams see
+    traffic).  Whatever the seam, the service must answer every request
+    (result or typed error) and its books must balance."""
+    async def main():
+        cfg = service_config(checkpoint_dir=str(tmp_path / "ck"))
+        svc = await StencilService(cfg).start(prewarm=False)
+        with FaultPlan([FaultSpec(point, nth=1)]).active() as fplan:
+            res = await run_workload(svc, n=5, iters=(2, 4))
+            futs = svc.submit_nowait(StencilRequest(
+                "diffusion2d", grid_for(9), 4,
+                checkpoint_key="chaos", checkpoint_every=2))
+            res.extend(await asyncio.gather(futs, return_exceptions=True))
+            fired = list(fplan.fired)
+        await svc.stop()
+        return res, fired, svc.snapshot()
+    res, fired, snap = run_async(main())
+    # every request was answered: a result or a typed serve error
+    from repro.serve import ServeError
+    for r in res:
+        assert not isinstance(r, Exception) or isinstance(r, ServeError), r
+    assert_conserved(snap)
+    if fired:     # a transient fault at a retried seam must not lose work
+        assert snap["completed"] + snap["failed_total"] \
+            + snap["rejected_total"] == snap["submitted"]
+
+
+# --- schedule cache: injected flakiness + the two-process race ---------------
+
+class TestScheduleCacheResilience:
+    def test_injected_read_failure_degrades_to_miss(self, tmp_path):
+        cache = ScheduleCache(tmp_path / "s.json")
+        cache.put("k", {"par_time": 4})
+        assert cache.get("k")["par_time"] == 4
+        with FaultPlan([FaultSpec("schedule_cache.get",
+                                  exc=OSError)]).active():
+            assert cache.get("k") is None       # flaky read -> miss, no crash
+        assert cache.get("k")["par_time"] == 4  # next read recovers
+
+    def test_injected_write_failure_warns_not_crashes(self, tmp_path):
+        cache = ScheduleCache(tmp_path / "s.json")
+        with FaultPlan([FaultSpec("schedule_cache.put",
+                                  exc=OSError)]).active():
+            with pytest.warns(RuntimeWarning, match="not persisted"):
+                cache.put("k", {"par_time": 4})
+        assert cache.get("k") is None
+
+    def test_two_process_put_race_loses_nothing(self, tmp_path):
+        """Regression for the read-modify-write race: two real processes
+        hammering put() concurrently must not clobber each other's entries
+        (put merges with the on-disk state under an exclusive lock
+        immediately before its atomic replace)."""
+        path = str(tmp_path / "shared.json")
+        script = os.path.join(os.path.dirname(__file__),
+                              "schedule_cache_race_check.py")
+        count = 40
+        procs = [subprocess.Popen(
+            [sys.executable, script, path, prefix, str(count)],
+            env=subprocess_env(), stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True) for prefix in ("a", "b")]
+        for p in procs:
+            out, err = p.communicate(timeout=120)
+            assert p.returncode == 0, f"stdout:\n{out}\nstderr:\n{err}"
+        cache = ScheduleCache(path)
+        assert len(cache) == 2 * count
+        for prefix in ("a", "b"):
+            for i in range(count):
+                assert cache.get(f"{prefix}-{i}") is not None, \
+                    f"lost entry {prefix}-{i}"
+
+
+# --- checkpointed long runs --------------------------------------------------
+
+class TestCheckpointedRuns:
+    def make_plan(self):
+        return plan(StencilProblem("diffusion2d", SHAPE),
+                    RunConfig(**RUN))
+
+    def test_chunked_run_is_bit_identical_and_resumes(self, tmp_path):
+        p = self.make_plan()
+        g = grid_for(3)
+        want = np.asarray(p.run(g, 10))
+        ckdir = str(tmp_path / "ck")
+        res = run_checkpointed(p, g, 10, checkpoint_every=3,
+                               checkpoint_dir=ckdir)
+        assert (np.asarray(res.grid) == want).all()
+        # checkpoint_every=3 aligns up to par_time=2 multiples -> 4
+        assert res.checkpoint_every == 4
+        assert res.steps_saved == (4, 8, 10) and res.resumed_from == 0
+        # wipe the last step: the rerun resumes from 8 and recomputes only
+        # the tail — still bit-identical
+        import shutil
+        shutil.rmtree(os.path.join(ckdir, "step_00000010"))
+        res2 = run_checkpointed(p, g, 10, checkpoint_every=3,
+                                checkpoint_dir=ckdir)
+        assert res2.resumed_from == 8 and res2.chunks_run == 1
+        assert (np.asarray(res2.grid) == want).all()
+        # fully-final directory: nothing to run
+        res3 = run_checkpointed(p, g, 10, checkpoint_every=3,
+                                checkpoint_dir=ckdir)
+        assert res3.chunks_run == 0
+        assert (np.asarray(res3.grid) == want).all()
+
+    def test_plan_run_checkpoint_kwargs(self, tmp_path):
+        p = self.make_plan()
+        g = grid_for(4)
+        want = np.asarray(p.run(g, 6))
+        got = p.run(g, 6, checkpoint_every=2,
+                    checkpoint_dir=str(tmp_path / "ck"))
+        assert (np.asarray(got) == want).all()
+        with pytest.raises(ValueError, match="go together"):
+            p.run(g, 6, checkpoint_every=2)
+
+    def test_foreign_directory_refused(self, tmp_path):
+        p = self.make_plan()
+        g = grid_for(5)
+        ckdir = str(tmp_path / "ck")
+        p.run(g, 4, checkpoint_every=2, checkpoint_dir=ckdir)
+        # different iters = a different computation
+        with pytest.raises(CheckpointMismatch):
+            p.run(g, 6, checkpoint_every=2, checkpoint_dir=ckdir)
+        # different problem entirely
+        other = plan(StencilProblem("diffusion2d", (8, 32)),
+                     RunConfig(**RUN))
+        with pytest.raises(CheckpointMismatch):
+            other.run(grid_for(5, (8, 32)), 4, checkpoint_every=2,
+                      checkpoint_dir=ckdir)
+
+    def test_unhealthy_state_is_never_checkpointed(self, tmp_path):
+        p = self.make_plan()
+        ckdir = str(tmp_path / "ck")
+        # poison the backend's result mid-run: the chunk-boundary health
+        # check must raise AND leave no checkpoint of the NaN'd grid
+        with FaultPlan([FaultSpec("backend.execute.result",
+                                  action="nan")]).active():
+            with pytest.raises(NumericalFault):
+                run_checkpointed(p, grid_for(6), 4, checkpoint_every=2,
+                                 checkpoint_dir=ckdir, health=True)
+        from repro.checkpoint import complete_steps
+        assert complete_steps(ckdir) == []
+
+    def test_sigkill_mid_save_resumes_bit_identical(self, tmp_path):
+        """The acceptance crash test: a real subprocess is SIGKILL'd inside
+        its second checkpoint save (shards written, publish rename not yet
+        done); rerunning against the same directory resumes from the last
+        complete step and finishes bit-identical to a never-killed run."""
+        script = os.path.join(os.path.dirname(__file__),
+                              "resilience_kill_resume_check.py")
+        ckdir = str(tmp_path / "ck")
+
+        fresh = subprocess.run([sys.executable, script, "fresh", ckdir],
+                               env=subprocess_env(), capture_output=True,
+                               text=True, timeout=300)
+        assert fresh.returncode == 0, fresh.stderr
+        want = [l for l in fresh.stdout.splitlines()
+                if l.startswith("sha256:")][0]
+
+        crash = subprocess.run([sys.executable, script, "crash", ckdir],
+                               env=subprocess_env(), capture_output=True,
+                               text=True, timeout=300)
+        assert crash.returncode == -9, \
+            f"expected SIGKILL, got rc={crash.returncode}\n{crash.stderr}"
+        # the kill left step 2 published and step 4 as an unpublished .tmp
+        assert os.path.isdir(os.path.join(ckdir, "step_00000002"))
+        assert os.path.isdir(os.path.join(ckdir, "step_00000004.tmp"))
+        assert not os.path.isdir(os.path.join(ckdir, "step_00000004"))
+
+        resume = subprocess.run([sys.executable, script, "resume", ckdir],
+                                env=subprocess_env(), capture_output=True,
+                                text=True, timeout=300)
+        assert resume.returncode == 0, resume.stderr
+        lines = resume.stdout.splitlines()
+        assert "resumed_from:2" in lines
+        got = [l for l in lines if l.startswith("sha256:")][0]
+        assert got == want, "resumed final grid differs from uninterrupted run"

@@ -379,7 +379,58 @@ class TestService:
         assert snap["completed"] == 3
         # nothing silently dropped: every submit is accounted for
         assert snap["submitted"] == snap["completed"] \
-            + snap["rejected_total"]
+            + snap["rejected_total"] + snap["failed_total"]
+        assert snap["in_flight"] == 0
+
+    def test_metrics_conservation_under_mixed_outcomes(self):
+        """The admission ledger balances under every outcome class at once:
+        completions, typed rejections (overload + no-bucket), and launch
+        failures all sum back to the submitted count, with nothing left
+        in flight after drain."""
+        from repro.resilience import FaultPlan, FaultSpec
+
+        async def main():
+            svc = await serve(ServiceConfig(
+                buckets=(make_bucket(queue_cap=2, max_batch=2,
+                                     max_wait_ms=60_000.0),),
+                retry={"max_attempts": 2, "base_backoff_s": 1e-3},
+                breaker=False), prewarm=False)
+            gs = grids_for(3)
+            outcomes = []
+            # a launch that fails persistently (after retries) -> failed
+            with FaultPlan([FaultSpec("backend.execute_batch", p=1.0,
+                                      max_fires=None)]).active():
+                fut = svc.submit_nowait(
+                    StencilRequest("diffusion2d", gs[0], 2))
+                outcomes.extend(await asyncio.gather(
+                    fut, return_exceptions=True))
+            # two successes saturating the queue, then an overload rejection
+            futs = [svc.submit_nowait(StencilRequest("diffusion2d", g, 2))
+                    for g in gs[1:]]
+            with pytest.raises(ServiceOverloaded):
+                svc.submit_nowait(StencilRequest("diffusion2d", gs[0], 2))
+            # a shape no bucket declares -> no-bucket rejection
+            with pytest.raises(NoMatchingBucket):
+                svc.submit_nowait(StencilRequest(
+                    "diffusion2d", jnp.zeros((8, 8), jnp.float32), 2))
+            outcomes.extend(await asyncio.gather(
+                *futs, return_exceptions=True))
+            snap = svc.snapshot()
+            await svc.stop()
+            return outcomes, snap
+
+        outcomes, snap = run_async(main())
+        assert snap["submitted"] == 5
+        assert snap["completed"] == 2
+        assert snap["rejected"]["overload"] == 1
+        assert snap["rejected"]["no_bucket"] == 1
+        assert snap["failed"]["launch_failed"] == 1
+        assert snap["retries"] >= 1
+        # the ledger: submitted == completed + rejected + failed, none lost
+        assert snap["submitted"] == snap["completed"] \
+            + snap["rejected_total"] + snap["failed_total"]
+        assert snap["in_flight"] == 0
+        assert len(outcomes) == 3          # every awaited future resolved
 
     def test_deadline_expiry(self):
         async def main():
@@ -471,7 +522,9 @@ class TestService:
         path, snap = run_async(main())
         loaded = json.loads(path.read_text())
         for k in ("submitted", "completed", "rejected", "latency_ms",
-                  "batch_fill", "cells", "exec_cache", "queue_depth"):
+                  "batch_fill", "cells", "exec_cache", "queue_depth",
+                  "failed", "failed_total", "quarantined", "retries",
+                  "breaker", "in_flight"):
             assert k in loaded
         assert loaded["latency_ms"]["p50"] <= loaded["latency_ms"]["p99"]
         assert snap["cells"] == 4 * 2 * SHAPE[0] * SHAPE[1]
